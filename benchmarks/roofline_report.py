@@ -1,0 +1,81 @@
+"""§Roofline report generator: reads dry-run JSONs → markdown tables for
+EXPERIMENTS.md (+ CSV lines for benchmarks.run)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import RESULTS, emit, save_json
+
+IMPROVE_HINTS = {
+    "compute": "raise MXU occupancy: larger per-device tiles (less TP for "
+               "small dims), bf16 everywhere, fuse elementwise into matmuls",
+    "memory": "cut HBM traffic: tighter remat policy, KV-cache dtype/paging, "
+              "fold optimizer reads via offloaded update",
+    "collective": "re-shard: less TP for small d_model, overlap FSDP "
+                  "all-gathers with layer scan, compress gradients, "
+                  "hierarchical pod-local collectives",
+}
+
+
+def load(mesh: str = "16x16") -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "dryrun", f"*__{mesh}.json"))):
+        out.append(json.load(open(p)))
+    return out
+
+
+def table(mesh: str = "16x16") -> str:
+    rows = load(mesh)
+    lines = [
+        "| arch | shape | GB/dev | compute_s | memory_s | coll_s | dominant "
+        "| MODEL_FLOPS/HLO | roofline | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|"[:-4] + "|",
+    ]
+    for r in rows:
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['total_per_device']/1e9:.1f} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | **{rl['dominant']}** "
+            f"| {rl['useful_flops_ratio']:.2f} "
+            f"| {rl['roofline_fraction']:.1%} "
+            f"| {IMPROVE_HINTS[rl['dominant']][:58]}… |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = load()
+    if not rows:
+        emit("roofline/none", 0.0, "no dryrun results yet")
+        return {}
+    worst = min(rows, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = [r for r in rows if r["roofline"]["dominant"] == "collective"]
+    most_coll = max(coll, key=lambda r: r["roofline"]["collective_s"]) if coll else None
+    summary = {"cells": len(rows)}
+    for r in rows:
+        rl = r["roofline"]
+        bound = rl.get("bound_s") or max(rl["compute_s"], rl["memory_s"],
+                                         rl["collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}", bound * 1e6,
+             f"dom={rl['dominant']} frac={rl['roofline_fraction']:.1%}")
+    emit("roofline/worst", 0.0,
+         f"{worst['arch']}/{worst['shape']} "
+         f"{worst['roofline']['roofline_fraction']:.1%}")
+    if most_coll is not None:
+        emit("roofline/most_collective", 0.0,
+             f"{most_coll['arch']}/{most_coll['shape']}")
+    save_json("roofline_summary", {
+        "worst": f"{worst['arch']}/{worst['shape']}",
+        "most_collective": (f"{most_coll['arch']}/{most_coll['shape']}"
+                            if most_coll else None),
+        "n_cells": len(rows)})
+    return summary
+
+
+if __name__ == "__main__":
+    print(table())
+    run()

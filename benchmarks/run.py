@@ -1,0 +1,39 @@
+"""Benchmark entrypoint — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
+
+  Fig. 4  bench_tiling        tiled-vs-streaming speedup per kernel
+  Fig. 5  bench_parallel      8-thread parallelization + Amdahl DMA share
+  Fig. 6  bench_complexity    handwritten-tiling code-complexity cost
+  Fig. 7  bench_autodma       AutoDMA vs handwritten vs unmodified (headline)
+  Fig. 8  bench_interconnect  link-width sweep over dry-run collectives
+  Fig. 9  bench_isa           MXU-MAC / hardware-loop ISA analogue
+  §Roofline roofline_report   per-cell terms from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_autodma, bench_complexity,
+                            bench_interconnect, bench_isa, bench_parallel,
+                            bench_tiling, roofline_report)
+    failures = []
+    for mod in (bench_tiling, bench_parallel, bench_complexity,
+                bench_autodma, bench_interconnect, bench_isa,
+                roofline_report):
+        print(f"# === {mod.__name__} ===", flush=True)
+        try:
+            mod.run()
+        except Exception:
+            failures.append(mod.__name__)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Regenerate EXPERIMENTS.md §Roofline tables and §Perf log from results.
+
+  PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from benchmarks.common import RESULTS
+from benchmarks.roofline_report import table
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def perf_log_md() -> str:
+    path = os.path.join(RESULTS, "perf_log.json")
+    if not os.path.exists(path):
+        return "_(no hillclimb iterations recorded yet)_"
+    entries = json.load(open(path))
+    out = []
+    for e in entries:
+        b, a = e.get("before") or {}, e["after"]
+        b_bound = b.get("bound_s") or (max(b["compute_s"], b["memory_s"],
+                                           b["collective_s"]) if b else None)
+        out.append(f"### {e['cell']} — `{e['tag']}`\n")
+        out.append(f"**Hypothesis**: {e['hypothesis']}\n")
+        out.append(f"**Change**: `{json.dumps(e['change'])}`\n")
+        if b:
+            out.append(
+                f"**Before**: bound={b_bound:.4f}s "
+                f"({b.get('dominant')}), roofline {b.get('roofline_fraction', 0):.2%}, "
+                f"{b.get('gb_per_dev', '?')} GB/dev  ")
+        out.append(
+            f"**After**: bound={a['bound_s']:.4f}s ({a['dominant']}), "
+            f"roofline {a['roofline_fraction']:.2%}, {a['gb_per_dev']} GB/dev  ")
+        if b_bound:
+            d = (b_bound - a["bound_s"]) / b_bound
+            verdict = "CONFIRMED (bound ↓)" if d > 0.05 else (
+                "REFUTED (bound ↑)" if d < -0.05 else "NEUTRAL on bound")
+            out.append(f"**Δbound**: {d:+.1%} → **{verdict}**\n")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    txt = open(EXP).read()
+    t16 = table("16x16")
+    t512 = table("2x16x16")
+    txt = re.sub(r"<!-- ROOFLINE_TABLE_16x16 -->.*?(?=\n<!-- ROOFLINE_TABLE_2x16x16 -->)",
+                 f"<!-- ROOFLINE_TABLE_16x16 -->\n### Single-pod (16×16 = 256 chips)\n\n{t16}\n",
+                 txt, flags=re.S)
+    txt = re.sub(r"<!-- ROOFLINE_TABLE_2x16x16 -->.*?(?=\n## §Perf)",
+                 f"<!-- ROOFLINE_TABLE_2x16x16 -->\n### Multi-pod (2×16×16 = 512 chips)\n\n{t512}\n",
+                 txt, flags=re.S)
+    txt = re.sub(r"<!-- PERF_LOG -->.*?(?=\n## §Examples)",
+                 lambda _m: f"<!-- PERF_LOG -->\n{perf_log_md()}\n",
+                 txt, flags=re.S)
+    with open(EXP, "w") as f:
+        f.write(txt)
+    print(f"EXPERIMENTS.md updated ({len(t16.splitlines())-2} single-pod cells, "
+          f"{len(t512.splitlines())-2} multi-pod cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""AutoDMA (paper §3.2, Fig. 7) live: unmodified vs AutoDMA vs handwritten,
+on real Pallas executions (interpret) + the planner's DMA accounting.
+
+  PYTHONPATH=src python examples/autodma_demo.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import autodma
+from repro.kernels import gemm as gemm_mod
+from repro.kernels import ref
+
+rng = np.random.default_rng(0)
+M = N = K = 512
+A = rng.standard_normal((M, K)).astype(np.float32)
+B = rng.standard_normal((K, N)).astype(np.float32)
+budget = 256 * 1024  # small VMEM so tiling is non-trivial at this size
+
+print(f"gemm {M}x{N}x{K}, VMEM budget {budget//1024} KiB")
+print(f"{'mode':12s} {'tiles':>18s} {'VMEM':>9s} {'traffic':>9s} "
+      f"{'bursts':>7s} {'wall(ms)':>9s} {'max|err|':>9s}")
+exp = ref.gemm(A, B)
+for mode in ("unmodified", "paper", "autodma"):
+    t0 = time.perf_counter()
+    out, plan = gemm_mod.gemm(A, B, mode=mode, budget=budget)
+    np.asarray(out)
+    dt = (time.perf_counter() - t0) * 1e3
+    err = float(np.abs(np.asarray(out) - exp).max())
+    print(f"{mode:12s} {str(plan.tiles):>18s} {plan.vmem_bytes//1024:>8d}K "
+          f"{plan.traffic_bytes//1024:>8d}K {plan.dma_bursts:>7d} "
+          f"{dt:>9.1f} {err:>9.1e}")
+
+out, plan = gemm_mod.gemm(A, B, handwritten_tiles=(128, 128, 512), budget=budget)
+err = float(np.abs(np.asarray(out) - exp).max())
+print(f"{'handwritten':12s} {str(plan.tiles):>18s} {plan.vmem_bytes//1024:>8d}K "
+      f"{plan.traffic_bytes//1024:>8d}K {plan.dma_bursts:>7d} {'':>9s} {err:>9.1e}")
+print("\nAutoDMA requires ZERO kernel-code changes (the body is identical); "
+      "handwritten requires explicit tiles + index maps — the paper's 2.6x "
+      "LOC cost (bench_complexity measures ours).")

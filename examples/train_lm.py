@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic structured stream, with checkpointing + fault tolerance.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+
+On this CPU container a step takes O(seconds); the model is a qwen2-family
+config scaled to ~100M params (d=640, 10 layers, vocab 32k). Expect loss to
+drop from ~10.4 toward ~2-4 (the stream is 70% periodic n-grams).
+"""
+import argparse
+
+from repro.launch.train import train
+from repro.models import transformer
+
+
+def config_100m():
+    return transformer.ModelConfig(
+        name="demo-100m", family="dense",
+        d_model=640, n_heads=10, n_kv=2, d_ff=2560, vocab=32000,
+        groups=((("gqa:mlp",), 10),),
+        tie_embeddings=True, rope_theta=10000.0, remat="none",
+        q_chunk=256, kv_chunk=256,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    import repro.configs as configs
+    # register the demo config on the fly
+    import sys
+    import types
+    mod = types.ModuleType("repro.configs.demo_100m")
+    mod.config = config_100m
+    mod.smoke_config = config_100m
+    sys.modules["repro.configs.demo_100m"] = mod
+
+    from repro.launch import train as tr
+    losses = tr.train("demo-100m", smoke=False, steps_total=args.steps,
+                      ckpt_dir=args.ckpt_dir, batch=args.batch, seq=args.seq,
+                      lr=1e-3, ckpt_every=50)
+    print(f"final loss {losses[-1]:.3f} (start {losses[0]:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Assigned-architecture registry: 10 archs × their shape sets (40 cells).
+
+Each ``<arch>.py`` exposes ``config()`` (the exact assigned configuration) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests). The
+shape table below is the assignment's: train_4k lowers ``train_step``,
+prefill_32k lowers ``prefill_step``, decode_* lower ``serve_step`` (one token
+against a seq_len KV cache). ``long_500k`` requires sub-quadratic attention —
+per DESIGN §Arch-applicability it runs only for ssm/hybrid/local-window archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+ARCHS: Tuple[str, ...] = (
+    "deepseek-v3-671b",
+    "granite-moe-3b-a800m",
+    "xlstm-1.3b",
+    "llama-3.2-vision-11b",
+    "yi-34b",
+    "qwen2-0.5b",
+    "gemma3-27b",
+    "minitron-4b",
+    "zamba2-1.2b",
+    "whisper-medium",
+)
+
+# long_500k runs only where attention cost is sub-quadratic / state-based
+LONG_OK = {"xlstm-1.3b", "zamba2-1.2b", "gemma3-27b"}
+
+
+def _module(arch: str):
+    return importlib.import_module("repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str, **overrides):
+    cfg = _module(arch).config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str, **overrides):
+    cfg = _module(arch).smoke_config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def cells(arch: str) -> List[ShapeSpec]:
+    """The (arch × shape) cells that are RUN (skips per DESIGN recorded)."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and arch not in LONG_OK:
+            continue
+        out.append(s)
+    return out
+
+
+def skipped_cells(arch: str) -> List[Tuple[str, str]]:
+    if arch not in LONG_OK:
+        return [("long_500k", "full-attention arch: 500k decode cache is "
+                 "quadratic-prefill lineage; skipped per assignment, see "
+                 "DESIGN §Arch-applicability")]
+    return []
+
+
+def all_cells() -> List[Tuple[str, ShapeSpec]]:
+    return [(a, s) for a in ARCHS for s in cells(a)]

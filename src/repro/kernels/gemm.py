@@ -1,0 +1,117 @@
+"""Tiled GEMM Pallas kernel — the paper's central accelerated kernel
+(gemm/darknet in Table 2), with AutoDMA-planned VMEM tiling.
+
+Kernel-body variants map HEROv2's §3.4 ISA study onto TPU units:
+  * body="mxu"   — jnp.dot inside the block → MXU systolic MACs
+                   (≈ Xpulpv2 MAC fusion; the compiler 'emitting p.mac')
+  * body="vpu"   — explicit multiply + reduce on the VPU
+                   (≈ scalar mul+add on RV32IMAFC, no MAC instruction)
+  * body="loop"  — fori_loop over k inside the block
+                   (≈ software loop vs the MXU's 'hardware loop' over k)
+benchmarks/bench_isa.py measures all three (interpret wall-clock + lowered
+op census) against the XLA baseline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import autodma
+
+
+def _body_mxu(a_ref, b_ref, c_ref, *, axis_info, alpha):
+    kidx, _ = axis_info[2]
+    prev = jnp.where(kidx == 0, jnp.zeros_like(c_ref[...]), c_ref[...])
+    c_ref[...] = prev + alpha * jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=c_ref.dtype)
+
+
+def _body_vpu(a_ref, b_ref, c_ref, *, axis_info, alpha):
+    kidx, _ = axis_info[2]
+    prev = jnp.where(kidx == 0, jnp.zeros_like(c_ref[...]), c_ref[...])
+    a = a_ref[...]
+    b = b_ref[...]
+    # elementwise multiply + reduction: VPU path, no MXU contraction
+    c_ref[...] = prev + alpha * jnp.sum(a[:, :, None] * b[None, :, :], axis=1)
+
+
+def _body_loop(a_ref, b_ref, c_ref, *, axis_info, alpha, unroll_k: int = 8):
+    kidx, _ = axis_info[2]
+    prev = jnp.where(kidx == 0, jnp.zeros_like(c_ref[...]), c_ref[...])
+    a = a_ref[...]
+    b = b_ref[...]
+    Kb = a.shape[1]
+
+    def step(i, acc):
+        ab = jax.lax.dynamic_slice_in_dim(a, i * unroll_k, unroll_k, axis=1)
+        bb = jax.lax.dynamic_slice_in_dim(b, i * unroll_k, unroll_k, axis=0)
+        return acc + ab @ bb
+
+    acc = jax.lax.fori_loop(0, Kb // unroll_k, step,
+                            jnp.zeros_like(c_ref[...]))
+    c_ref[...] = prev + alpha * acc
+
+
+BODIES = {"mxu": _body_mxu, "vpu": _body_vpu, "loop": _body_loop}
+
+
+def gemm(A: jax.Array, B: jax.Array, alpha: float = 1.0, mode: str = "autodma",
+         body: str = "mxu", budget: Optional[int] = None,
+         interpret: bool = True, plan: Optional[autodma.Plan] = None,
+         handwritten_tiles: Optional[tuple] = None):
+    """C = alpha·A·B with AutoDMA-planned (or handwritten) BlockSpecs.
+
+    mode: "autodma" | "paper" | "unmodified" (whole-array blocks).
+    handwritten_tiles: (tm, tn, tk) expert override → mode="handwritten".
+    Returns (C, plan).
+    """
+    M, K = A.shape
+    K2, N = B.shape
+    assert K == K2
+    spec = autodma.matmul_spec(M, N, K, dtype=A.dtype)
+    if handwritten_tiles is not None:
+        p = _plan_with_tiles(spec, handwritten_tiles, budget)
+    elif plan is not None:
+        p = plan
+    else:
+        p = autodma.plan(spec, budget=budget, mode=mode)
+    kernel = functools.partial(_dispatch_body, body=body, alpha=alpha)
+    call, p = autodma.pallas_call(kernel, spec, plan_=p, interpret=interpret)
+    return call(A, B), p
+
+
+def _dispatch_body(a_ref, b_ref, c_ref, axis_info, *, body, alpha):
+    BODIES[body](a_ref, b_ref, c_ref, axis_info=axis_info, alpha=alpha)
+
+
+def _plan_with_tiles(spec, tiles, budget):
+    """Handwritten mode: expert-chosen tiles through the same Plan plumbing."""
+    import math as _m
+    base = autodma.plan(spec, budget=budget, mode="unmodified")
+    nt = [-(-b // t) for b, t in zip(spec.loop_bounds, tiles)]
+    par = [g for g in range(len(tiles)) if g not in spec.reduction_axes]
+    order = par + list(spec.reduction_axes)
+    pos = {ax: i for i, ax in enumerate(order)}
+    block_shapes, index_maps = {}, {}
+    for a in spec.arrays:
+        bs = tuple(a.shape[d] if ax == autodma.FULL else min(tiles[ax], a.shape[d])
+                   for d, ax in enumerate(a.dims))
+        block_shapes[a.name] = bs
+
+        def imap(*pids, _dims=a.dims, _pos=pos):
+            return tuple(0 if ax == autodma.FULL else pids[_pos[ax]]
+                         for ax in _dims)
+        index_maps[a.name] = imap
+    vmem = sum(_m.prod(block_shapes[a.name]) * a.itemsize for a in spec.arrays) * 2
+    bursts, reconf = autodma._bursts(spec, tiles, True)
+    return autodma.Plan(spec=spec, tiles=tuple(tiles),
+                        grid=tuple(nt[g] for g in order),
+                        grid_axes=tuple(order), block_shapes=block_shapes,
+                        index_maps=index_maps,
+                        traffic_bytes=autodma._traffic(spec, tiles),
+                        vmem_bytes=vmem, dma_bursts=bursts,
+                        dma_reconfigs=reconf, mode="handwritten")

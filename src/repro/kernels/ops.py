@@ -1,0 +1,67 @@
+"""Public jit'd wrappers for the kernel suite — the hero API surface.
+
+Every op takes ``mode`` ∈ {"unmodified", "paper", "autodma", "handwritten"}
+mirroring HEROv2 Fig. 7's comparison bars, and returns only the array (plans
+are accessible via the *_with_plan variants for the benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import gemm as gemm_mod
+from repro.kernels import polybench as pb
+from repro.kernels import ref
+
+
+def gemm(A, B, alpha=1.0, mode="autodma", interpret=True):
+    out, _ = gemm_mod.gemm(A, B, alpha=alpha, mode=mode, interpret=interpret)
+    return out
+
+
+def mm2(A, B, C, mode="autodma", interpret=True):
+    out, _ = pb.mm2(A, B, C, mode=mode, interpret=interpret)
+    return out
+
+
+def mm3(A, B, C, D, mode="autodma", interpret=True):
+    out, _ = pb.mm3(A, B, C, D, mode=mode, interpret=interpret)
+    return out
+
+
+def atax(A, x, mode="autodma", interpret=True):
+    out, _ = pb.atax(A, x, mode=mode, interpret=interpret)
+    return out
+
+
+def bicg(A, p, r, mode="autodma", interpret=True):
+    out, _ = pb.bicg(A, p, r, mode=mode, interpret=interpret)
+    return out
+
+
+def conv2d(A, c, mode="autodma", interpret=True):
+    out, _ = pb.conv2d(A, c, mode=mode, interpret=interpret)
+    return out
+
+
+def covar(D, mode="autodma", interpret=True):
+    out, _ = pb.covar(D, mode=mode, interpret=interpret)
+    return out
+
+
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    interpret=True, block_q=None, block_k=None):
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+
+
+REFS = {
+    "gemm": ref.gemm, "mm2": ref.mm2, "mm3": ref.mm3, "atax": ref.atax,
+    "bicg": ref.bicg, "conv2d": ref.conv2d, "covar": ref.covar,
+    "flash_attention": ref.attention,
+}

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (paper Table 2 suite + flash
+attention). Tests assert_allclose kernels against these across shape/dtype
+sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- paper Table 2 ----------------------------------------------------------
+def gemm(A, B, alpha=1.0, beta=0.0, C=None):
+    """C = beta·C + alpha·A·B (darknet conv-as-gemm is the same kernel)."""
+    out = alpha * (A @ B)
+    if C is not None and beta != 0.0:
+        out = out + beta * C
+    return out
+
+
+def mm2(A, B, C, alpha=1.0):
+    """2mm: tmp = alpha·A·B ; out = tmp·C."""
+    return (alpha * (A @ B)) @ C
+
+
+def mm3(A, B, C, D):
+    """3mm: E=A·B ; F=C·D ; G=E·F."""
+    return (A @ B) @ (C @ D)
+
+
+def atax(A, x):
+    """y = Aᵀ(A x)."""
+    return A.T @ (A @ x)
+
+
+def bicg(A, p, r):
+    """q = A p ; s = Aᵀ r."""
+    return A @ p, A.T @ r
+
+
+def conv2d(A, c):
+    """3×3 stencil, zero-padded borders. c: [3,3]."""
+    Ap = jnp.pad(A, 1)
+    out = jnp.zeros_like(A)
+    for di in range(3):
+        for dj in range(3):
+            out = out + c[di, dj] * Ap[di:di + A.shape[0], dj:dj + A.shape[1]]
+    return out
+
+
+def covar(D, alpha=None):
+    """Column-mean-center, then S = Dᵀ D / (M−1)."""
+    M = D.shape[0]
+    mean = D.mean(axis=0, keepdims=True)
+    Dc = D - mean
+    return (Dc.T @ Dc) / (M - 1)
+
+
+# --- flash attention ---------------------------------------------------------
+def attention(q, k, v, causal=True, window=None):
+    """q,k,v: [B,H,L,hd] (MHA; GQA broadcast upstream)."""
+    import math
+    B, H, Lq, hd = q.shape
+    Lk = k.shape[2]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qi = jnp.arange(Lq)[:, None]
+    kj = jnp.arange(Lk)[None, :]
+    m = jnp.ones((Lq, Lk), bool)
+    if causal:
+        m &= kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    logits = jnp.where(m[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

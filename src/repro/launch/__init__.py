@@ -1,0 +1,3 @@
+# repro.launch — production mesh, dry-run, drivers.
+# NOTE: dryrun.py must be imported/executed FIRST in a fresh process (it sets
+# XLA_FLAGS before any jax import); keep this __init__ empty of jax imports.

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile EVERY (arch × shape) on the production
+meshes — (16,16) single-pod and (2,16,16) multi-pod — and record
+memory_analysis, cost_analysis, and the collective schedule.
+
+The two lines above run before ANY other import (jax locks the device count
+on first init). Do not import this module from a process that already
+initialized jax with 1 device.
+
+Methodology (EXPERIMENTS §Methodology): XLA's cost_analysis visits while-loop
+bodies once, so scanned-layer programs under-report flops/bytes/collectives.
+We therefore:
+  * prove compilability + capacity with the FULL-depth lowering
+    (memory_analysis is authoritative — buffers exist whatever the trip count),
+  * extract the per-unit collective schedule with PROBE lowerings (per-group
+    unit counts 1 and 2; unit_g = coll(g=2) − coll(all=1); total = base +
+    Σ count_g·unit_g),
+  * take FLOPs/HBM-bytes from launch/accounting.py (analytic, exact for
+    matmuls), cross-checked against the probe deltas.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Results: benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json (cached).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro import configs
+from repro.core import perf
+from repro.launch import accounting, specs
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _coll_of(lowered, compiled) -> Dict[str, int]:
+    txt = compiled.as_text()
+    return perf.collective_bytes(txt)
+
+
+def run_cell(arch: str, shape: configs.ShapeSpec, multi_pod: bool,
+             probes: bool = True, verbose: bool = True) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+    rec: Dict = {"arch": arch, "shape": shape.name,
+                 "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips}
+
+    t0 = time.perf_counter()
+    cell = specs.build_cell(arch, shape, mesh)
+    lowered, compiled = specs.lower_cell(cell, mesh)
+    rec["compile_s"] = round(time.perf_counter() - t0, 2)
+    rec["memory"] = perf.memory_stats(compiled)
+    rec["hlo_cost_raw"] = perf.cost_stats(compiled)   # body-once; see docstring
+    coll_full = _coll_of(lowered, compiled)
+    rec["collective_raw"] = {k: v for k, v in coll_full.items() if k != "counts"}
+    rec["collective_counts"] = coll_full["counts"]
+
+    # ---- probe lowerings: per-unit collective schedule --------------------
+    counts = specs.group_counts(arch)
+    coll_total = None
+    if probes:
+        try:
+            base_cell = specs.build_cell(arch, shape, mesh,
+                                         probe={i: 1 for i in range(len(counts))})
+            _, c1 = specs.lower_cell(base_cell, mesh)
+            coll1 = _coll_of(None, c1)
+            units = []
+            units_kind = []
+            for g in range(len(counts)):
+                if counts[g] == 1:
+                    units.append(0.0)
+                    units_kind.append({k: 0.0 for k in perf.COLLECTIVE_OPS})
+                    continue
+                pc = {i: 1 for i in range(len(counts))}
+                pc[g] = 2
+                cell_g = specs.build_cell(arch, shape, mesh, probe=pc)
+                _, c2 = specs.lower_cell(cell_g, mesh)
+                coll2 = _coll_of(None, c2)
+                units.append(max(0.0, coll2["total"] - coll1["total"]))
+                units_kind.append({k: max(0.0, coll2[k] - coll1[k])
+                                   for k in perf.COLLECTIVE_OPS})
+            base = coll1["total"] - sum(units)
+            coll_total = base + sum(c * u for c, u in zip(counts, units))
+            per_kind = {k: (coll1[k] - sum(u[k] for u in units_kind))
+                        + sum(c * u[k] for c, u in zip(counts, units_kind))
+                        for k in perf.COLLECTIVE_OPS}
+            rec["collective_probe"] = {"base": base, "units": units,
+                                       "counts": list(counts),
+                                       "total": coll_total,
+                                       "per_kind": per_kind}
+        except Exception as e:  # probes are best-effort; full lowering stands
+            rec["collective_probe_error"] = f"{type(e).__name__}: {e}"
+    if coll_total is None:
+        coll_total = coll_full["total"] * max(counts) if counts else coll_full["total"]
+        rec.setdefault("collective_probe", {})["fallback"] = True
+        rec["collective_probe"]["total"] = coll_total
+
+    # ---- roofline ---------------------------------------------------------
+    # collective_bytes returns PER-DEVICE link bytes; Roofline divides by
+    # (chips × ICI_BW), so scale to whole-system here
+    cfg = specs.cell_config(arch, shape)
+    cost = accounting.step_cost(cfg, shape)
+    rl = perf.Roofline(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                       coll_bytes=coll_total * chips, chips=chips,
+                       model_flops=cost.model_flops)
+    rec["analytic"] = {"flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
+                       "params_total": cost.params_total,
+                       "params_active": cost.params_active}
+    rec["roofline"] = rl.as_dict()
+    if verbose:
+        m = rec["memory"]
+        print(f"[{arch} × {shape.name} × {rec['mesh']}] compile {rec['compile_s']}s "
+              f"| {m['total_per_device']/1e9:.2f} GB/dev "
+              f"| terms c/m/x = {rl.compute_s:.4f}/{rl.memory_s:.4f}/"
+              f"{rl.collective_s:.4f} s → {rl.dominant} "
+              f"| roofline {rl.roofline_fraction:.2%}", flush=True)
+    return rec
+
+
+def cell_path(arch: str, shape_name: str, mesh_name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        cells = configs.all_cells()
+    else:
+        archs = [args.arch] if args.arch else list(configs.ARCHS)
+        for a in archs:
+            for s in configs.cells(a):
+                if args.shape and s.name != args.shape:
+                    continue
+                cells.append((a, s))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            path = cell_path(arch, shape.name, mesh_name)
+            if os.path.exists(path) and not args.force:
+                print(f"[skip cached] {arch} × {shape.name} × {mesh_name}")
+                continue
+            try:
+                rec = run_cell(arch, shape, mp, probes=not args.no_probes)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            except Exception as e:
+                failures.append((arch, shape.name, mesh_name, repr(e)))
+                print(f"[FAIL] {arch} × {shape.name} × {mesh_name}: {e}")
+                traceback.print_exc()
+    # record the skipped long_500k cells with reasons (part of §Dry-run)
+    skips = {a: configs.skipped_cells(a) for a in configs.ARCHS
+             if configs.skipped_cells(a)}
+    with open(os.path.join(RESULTS_DIR, "skips.json"), "w") as f:
+        json.dump(skips, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print(" ", f_)
+        raise SystemExit(1)
+    print("\ndry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Hillclimb driver — one §Perf iteration per invocation.
+
+Re-lowers a single (arch × shape) cell with config/rule/microbatch overrides,
+recomputes the roofline, and appends {hypothesis, change, before, after,
+verdict} to benchmarks/results/perf_log.json — the EXPERIMENTS §Perf record.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch qwen2-0.5b \
+      --shape train_4k --tag less-tp \
+      --hypothesis "d=896 over TP16 is AG-bound; TP→1 kills layer AGs" \
+      --rule heads_tp= --rule mlp_tp= --rule kv_heads_tp= --rule vocab_tp=model
+  (--rule name=            unbinds a logical axis;
+   --rule name=model,data  binds to mesh axes;
+   --set q_chunk=2048      config field override;
+   --grad-accum 8          microbatching)
+"""
+import argparse
+import json
+import time
+from typing import Any, Dict
+
+import jax
+
+from repro import configs
+from repro.core import perf
+from repro.launch import accounting, specs
+from repro.launch.mesh import make_production_mesh
+
+PERF_LOG = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "benchmarks", "results", "perf_log.json")
+
+
+def evaluate(arch: str, shape, mesh, cfg_over=None, rules_over=None,
+             grad_accum=None, probes=True) -> Dict[str, Any]:
+    chips = int(mesh.devices.size)
+    counts = specs.group_counts(arch)
+    t0 = time.perf_counter()
+    cell = specs.build_cell(arch, shape, mesh, cfg_over=cfg_over,
+                            rules_over=rules_over, grad_accum=grad_accum)
+    lowered, compiled = specs.lower_cell(cell, mesh)
+    compile_s = time.perf_counter() - t0
+    mem = perf.memory_stats(compiled)
+
+    if probes:
+        def probe(pc):
+            c = specs.build_cell(arch, shape, mesh, probe=pc,
+                                 cfg_over=cfg_over, rules_over=rules_over,
+                                 grad_accum=grad_accum)
+            _, comp = specs.lower_cell(c, mesh)
+            return perf.collective_bytes(comp.as_text())
+        coll1 = probe({i: 1 for i in range(len(counts))})
+        units = []
+        for g in range(len(counts)):
+            if counts[g] == 1:
+                units.append(0.0)
+                continue
+            pc = {i: 1 for i in range(len(counts))}
+            pc[g] = 2
+            units.append(max(0.0, probe(pc)["total"] - coll1["total"]))
+        coll_total = (coll1["total"] - sum(units)) + \
+            sum(c * u for c, u in zip(counts, units))
+    else:
+        coll_total = perf.collective_bytes(compiled.as_text())["total"]
+
+    cfg = cell.cfg
+    cost = accounting.step_cost(cfg, shape)
+    rl = perf.Roofline(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                       coll_bytes=coll_total * chips, chips=chips,
+                       model_flops=cost.model_flops)
+    return {"compile_s": round(compile_s, 1),
+            "gb_per_dev": round(mem["total_per_device"] / 1e9, 2),
+            "coll_per_dev_bytes": coll_total,
+            **{k: round(v, 6) if isinstance(v, float) else v
+               for k, v in rl.as_dict().items()}}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--rule", action="append", default=[],
+                    help="name=axis1,axis2 (empty = unbind)")
+    ap.add_argument("--set", action="append", default=[], dest="sets",
+                    help="cfg field override, e.g. q_chunk=2048")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    rules_over = {}
+    for r in args.rule:
+        name, _, val = r.partition("=")
+        rules_over[name] = tuple(v for v in val.split(",") if v) or None
+    cfg_over = {}
+    nested = {}
+    for s in args.sets:
+        k, _, v = s.partition("=")
+        try:
+            val = json.loads(v)
+        except json.JSONDecodeError:
+            val = v
+        if "." in k:  # e.g. moe.capacity_factor=1.0 → replace nested dataclass
+            parent, _, field = k.partition(".")
+            nested.setdefault(parent, {})[field] = val
+        else:
+            cfg_over[k] = val
+    if nested:
+        import dataclasses as _dc
+        base_cfg = configs.get_config(args.arch)
+        for parent, kv in nested.items():
+            cfg_over[parent] = _dc.replace(getattr(base_cfg, parent), **kv)
+
+    shape = configs.SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    after = evaluate(args.arch, shape, mesh,
+                     cfg_over=cfg_over or None,
+                     rules_over=rules_over or None,
+                     grad_accum=args.grad_accum,
+                     probes=not args.no_probes)
+
+    # baseline from the dry-run table
+    mesh_name = "2x16x16" if args.mesh == "multi" else "16x16"
+    base_path = os.path.join(os.path.dirname(PERF_LOG), "dryrun",
+                             f"{args.arch}__{args.shape}__{mesh_name}.json")
+    before = None
+    if os.path.exists(base_path):
+        b = json.load(open(base_path))
+        before = {"gb_per_dev": round(b["memory"]["total_per_device"] / 1e9, 2),
+                  **{k: round(v, 6) if isinstance(v, float) else v
+                     for k, v in b["roofline"].items()}}
+
+    import dataclasses as _dc
+    cfg_over_json = {k: (_dc.asdict(v) if _dc.is_dataclass(v) else v)
+                     for k, v in cfg_over.items()}
+    entry = {"cell": f"{args.arch}/{args.shape}/{mesh_name}",
+             "tag": args.tag, "hypothesis": args.hypothesis,
+             "change": {"rules": {k: list(v) if v else None
+                                  for k, v in rules_over.items()},
+                        "cfg": cfg_over_json, "grad_accum": args.grad_accum},
+             "before": before, "after": after, "time": time.time()}
+    log = []
+    if os.path.exists(PERF_LOG):
+        log = json.load(open(PERF_LOG))
+    log.append(entry)
+    with open(PERF_LOG, "w") as f:
+        json.dump(log, f, indent=1)
+
+    print(json.dumps(entry, indent=1))
+    if before:
+        db = before["bound_s"] if "bound_s" in before else None
+        print(f"\nbound: {before.get('roofline_fraction', 0):.2%} → "
+              f"{after['roofline_fraction']:.2%} roofline | "
+              f"dominant {before.get('dominant')} → {after['dominant']} | "
+              f"mem {before['gb_per_dev']} → {after['gb_per_dev']} GB/dev")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Abstract input specs + shardings for every (arch × shape × mesh) cell.
+
+Everything here is ShapeDtypeStruct-based (the shannon/kernels pattern):
+weak-type-correct, shardable, zero allocation. ``build_cell`` returns the
+step function, its abstract arguments, and the matching NamedSharding trees
+— exactly what ``jax.jit(...).lower(...)`` needs for the dry-run, and what
+launch/train.py uses to device_put real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import ShapeSpec
+from repro.launch import accounting
+from repro.models import blocks, transformer
+from repro.optim import adamw
+from repro.parallel import sharding as shlib
+from repro.train import step as steps
+
+
+def cell_config(arch: str, shape: ShapeSpec, probe: Optional[Dict[int, int]] = None
+                ) -> transformer.ModelConfig:
+    """The model config for one cell (+ optional per-group count probe).
+
+    Probe keys index decoder groups first, then encoder groups.
+    """
+    cfg = configs.get_config(arch)
+    over: Dict[str, Any] = {}
+    MODEL_AXIS = 16
+    if shape.step in ("decode", "prefill"):
+        # serving holds bf16 weights (no optimizer master copy to protect);
+        # without this, deepseek-v3 decode was 19.3 GB/dev — over v5e HBM
+        over["param_dtype"] = jnp.bfloat16
+    if shape.step == "decode":
+        # SP (seq-sharded cache + flash-decode partial-softmax combine) when
+        # KV heads cannot cover the model axis — otherwise the cache
+        # replicates over 'model' (measured: yi-34b decode_32k at 166 GB/dev).
+        # MLA's latent cache has no head axis → always SP. long_500k shards
+        # seq regardless (single-sequence batch can't use the data axis).
+        if (cfg.n_kv % MODEL_AXIS != 0 or cfg.mla is not None
+                or shape.name == "long_500k"):
+            over["shard_kv_seq"] = True
+    if shape.name == "long_500k":
+        over["q_chunk"] = 2048
+        over["kv_chunk"] = 2048
+    if probe is not None:
+        ng = len(cfg.groups)
+        groups = tuple((pat, probe.get(i, 1)) for i, (pat, cnt) in enumerate(cfg.groups))
+        enc = tuple((pat, probe.get(ng + i, 1))
+                    for i, (pat, cnt) in enumerate(cfg.encoder_groups))
+        over["groups"] = groups
+        if enc:
+            over["encoder_groups"] = enc
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def group_counts(arch: str) -> Tuple[int, ...]:
+    cfg = configs.get_config(arch)
+    return tuple(c for _, c in cfg.groups) + tuple(c for _, c in cfg.encoder_groups)
+
+
+def rule_overrides(cfg: transformer.ModelConfig) -> Dict[str, Any]:
+    return {"kv_seq": ("model",)} if cfg.shard_kv_seq else {}
+
+
+# --------------------------------------------------------------------------
+# abstract trees
+# --------------------------------------------------------------------------
+def abstract_params(cfg: transformer.ModelConfig):
+    """(value SDS tree, axes tree) without allocating."""
+    pt = jax.eval_shape(functools.partial(transformer.init_model, cfg=cfg),
+                        jax.random.PRNGKey(0))
+    return blocks.split_params(pt)
+
+
+def abstract_state(cfg: transformer.ModelConfig):
+    vals, axes = abstract_params(cfg)
+    opt = jax.eval_shape(adamw.init, vals)
+    state = steps.TrainState(params=vals, opt=opt,
+                             step=jax.ShapeDtypeStruct((), jnp.int32))
+    axes_state = steps.TrainState(params=axes,
+                                  opt=adamw.OptState(m=axes, v=axes),
+                                  step=(None,))
+    return state, axes_state
+
+
+def abstract_caches(cfg: transformer.ModelConfig, B: int, S: int):
+    vals = jax.eval_shape(functools.partial(transformer.init_caches, cfg,
+                                            B, S))
+    axes = transformer.cache_logical_axes(cfg)
+    return vals, axes
+
+
+def _shard_tree(axes_tree, sds_tree, mesh):
+    return shlib.tree_shardings(axes_tree, jax.tree_util.tree_map(
+        lambda x: tuple(x.shape), sds_tree), mesh)
+
+
+def _batch_specs(cfg: transformer.ModelConfig, shape: ShapeSpec, mesh,
+                 with_labels: bool):
+    B = shape.global_batch
+    L = shape.seq_len if shape.step != "decode" else 1
+    sds = {"tokens": jax.ShapeDtypeStruct((B, L), jnp.int32)}
+    axes = {"tokens": ("batch", None)}
+    if with_labels:
+        sds["labels"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        axes["labels"] = ("batch", None)
+        if cfg.mtp:
+            sds["next_tokens"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+            sds["mtp_labels"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+            axes["next_tokens"] = ("batch", None)
+            axes["mtp_labels"] = ("batch", None)
+    if cfg.family in ("vlm", "audio") and shape.step != "decode":
+        S_enc = cfg.encoder_seq
+        dim = cfg.cross_kv_dim if cfg.family == "vlm" else cfg.d_model
+        sds["extra"] = jax.ShapeDtypeStruct((B, S_enc, dim), jnp.bfloat16)
+        axes["extra"] = ("batch", None, None)
+    shard = _shard_tree(axes, sds, mesh)
+    return sds, shard
+
+
+# --------------------------------------------------------------------------
+# cells
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: transformer.ModelConfig
+    fn: Any                     # the step callable
+    args: Tuple                 # abstract args
+    in_shardings: Tuple
+    donate: Tuple[int, ...] = ()
+    rules: Optional[Dict[str, Any]] = None
+
+
+# train-cell microbatching: scan-saved per-unit activations scale with
+# B_local·L·d·n_units; grad accumulation divides the B_local factor. Chosen
+# so saved carries ≈ few GB/device (napkin: units·(B/ga/32)·L·d·2B).
+GRAD_ACCUM = {"deepseek-v3-671b": 16, "yi-34b": 8, "gemma3-27b": 8,
+              "llama-3.2-vision-11b": 4, "minitron-4b": 2,
+              "granite-moe-3b-a800m": 2, "zamba2-1.2b": 2, "xlstm-1.3b": 2,
+              "whisper-medium": 2}
+
+
+def build_cell(arch: str, shape: ShapeSpec, mesh,
+               probe: Optional[Dict[int, int]] = None,
+               cfg_over: Optional[Dict[str, Any]] = None,
+               rules_over: Optional[Dict[str, Any]] = None,
+               grad_accum: Optional[int] = None) -> Cell:
+    """cfg_over/rules_over/grad_accum: hillclimb levers (launch/hillclimb.py)."""
+    cfg = cell_config(arch, shape, probe)
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    rules = dict(rule_overrides(cfg))
+    if rules_over:
+        rules.update(rules_over)
+    _GA = grad_accum if grad_accum is not None else GRAD_ACCUM.get(arch, 1)
+    with shlib.use_mesh(mesh, rules):
+        p_sds, p_axes = abstract_params(cfg)
+        p_sh = _shard_tree(p_axes, p_sds, mesh)
+        if shape.step == "train":
+            state, state_axes = abstract_state(cfg)
+            opt_sh = adamw.OptState(m=p_sh, v=p_sh)
+            state_sh = steps.TrainState(
+                params=p_sh, opt=opt_sh,
+                step=NamedSharding(mesh, P()))
+            batch_sds, batch_sh = _batch_specs(cfg, shape, mesh, True)
+            fn = steps.make_train_step(cfg, adamw.Config(), grad_accum=_GA)
+            return Cell(arch, shape, cfg, fn, (state, batch_sds),
+                        (state_sh, batch_sh), donate=(0,), rules=rules)
+        B = shape.global_batch
+        S = shape.seq_len
+        c_sds, c_axes = abstract_caches(cfg, B, S)
+        c_sh = _shard_tree(c_axes, c_sds, mesh)
+        if shape.step == "prefill":
+            batch_sds, batch_sh = _batch_specs(cfg, shape, mesh, False)
+            fn = steps.make_prefill_step(cfg)
+            args = (p_sds, batch_sds["tokens"], c_sds, batch_sds.get("extra"))
+            shd = (p_sh, batch_sh["tokens"], c_sh, batch_sh.get("extra"))
+            return Cell(arch, shape, cfg, fn, args, shd, donate=(2,),
+                        rules=rules)
+        # decode
+        batch_sds, batch_sh = _batch_specs(cfg, shape, mesh, False)
+        fn = steps.make_decode_step(cfg)
+        args = (p_sds, batch_sds["tokens"], c_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        shd = (p_sh, batch_sh["tokens"], c_sh, NamedSharding(mesh, P()))
+        return Cell(arch, shape, cfg, fn, args, shd, donate=(2,), rules=rules)
+
+
+def lower_cell(cell: Cell, mesh):
+    """lower + compile under the cell's mesh/rules; returns (lowered, compiled)."""
+    with shlib.use_mesh(mesh, cell.rules if cell.rules is not None
+                        else rule_overrides(cell.cfg)):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        args = tuple(a for a in cell.args)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled

@@ -1,0 +1,351 @@
+"""Attention variants: GQA (full/causal/sliding-window), MLA, cross-attention.
+
+All functions are pure: ``forward(params, x, positions, cfg, cache) ->
+(y, new_cache)``. Long-sequence paths use KV-chunked streaming attention
+(lax.scan over KV blocks with running max/sum — the flash-attention recurrence
+in XLA ops) so that 32k-prefill lowers with O(q_chunk·kv_chunk) live memory;
+the Pallas flash kernel (kernels/flash_attention.py, AutoDMA-planned) is the
+TPU-target equivalent, selected via ``use_pallas``.
+
+Sharding: activations carry logical axes — batch="batch", heads="heads_tp",
+cache seq axis="kv_seq" (mapped to the model axis for SP decode when
+kv_heads < model-axis size, e.g. qwen2 kv=2 or gemma3 global layers at 500k).
+GSPMD legalizes the softmax over a sharded KV axis with the max/sum
+all-reduces — our SP flash-decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.blocks import Param, dense_init, zeros_init
+from repro.parallel.sharding import constrain
+
+KVCache = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: Optional[float] = 10000.0   # None = no RoPE (whisper)
+    causal: bool = True
+    window: Optional[int] = None            # sliding-window size (gemma3 local)
+    qkv_bias: bool = False                  # qwen2
+    logit_softcap: Optional[float] = None
+    q_chunk: int = 1024                     # streaming-attention chunk
+    kv_chunk: int = 1024
+    shard_kv_seq: bool = False              # SP: shard cache seq over model axis
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_gqa(key, cfg: AttnConfig, dtype=jnp.float32) -> Dict[str, Param]:
+    ks = jax.random.split(key, 4)
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), ("embed_fsdp", "heads_tp"), dtype),
+        "wk": dense_init(ks[1], (d, K * hd), ("embed_fsdp", "heads_tp"), dtype),
+        "wv": dense_init(ks[2], (d, K * hd), ("embed_fsdp", "heads_tp"), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), ("heads_tp", "embed_fsdp"), dtype,
+                         scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((H * hd,), ("heads_tp",), dtype)
+        p["bk"] = zeros_init((K * hd,), ("heads_tp",), dtype)
+        p["bv"] = zeros_init((K * hd,), ("heads_tp",), dtype)
+    return p
+
+
+def init_cross(key, cfg: AttnConfig, kv_dim: Optional[int] = None,
+               dtype=jnp.float32) -> Dict[str, Param]:
+    """Cross-attention (llama-vision / whisper decoder): kv from encoder."""
+    ks = jax.random.split(key, 4)
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    kvd = kv_dim or d
+    return {
+        "wq": dense_init(ks[0], (d, H * hd), ("embed_fsdp", "heads_tp"), dtype),
+        "wk": dense_init(ks[1], (kvd, K * hd), ("embed_fsdp", "heads_tp"), dtype),
+        "wv": dense_init(ks[2], (kvd, K * hd), ("embed_fsdp", "heads_tp"), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), ("heads_tp", "embed_fsdp"), dtype,
+                         scale=1.0 / math.sqrt(H * hd)),
+    }
+
+
+# --------------------------------------------------------------------------
+# core attention math (XLA path) — streaming over KV chunks
+# --------------------------------------------------------------------------
+def _attend_dense(q, k, v, mask, softcap) -> jax.Array:
+    """q:[B,H,Lq,hd] k,v:[B,K,Lk,hd] mask:[Lq,Lk] or [B,1,Lq,Lk]."""
+    B, H, Lq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, Lq, hd)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if mask is not None:
+        m = mask if mask.ndim == 4 else mask[None, None]
+        logits = jnp.where(m[:, :, None] if m.ndim == 4 else mask[None, None, None],
+                           logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Lq, hd).astype(q.dtype)
+
+
+def _attend_streaming(q, k, v, cfg: AttnConfig, q_offset,
+                      kv_len_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Flash attention over KV chunks with a custom VJP (models/flash_xla):
+    O(N) residuals — the lax.scan autodiff path would save every chunk carry
+    (measured ~448 GB/device on qwen2 train_4k; see flash_xla docstring)."""
+    from repro.models.flash_xla import flash_attention_xla
+    return flash_attention_xla(q, k, v, cfg.causal, cfg.window,
+                               cfg.logit_softcap, cfg.q_chunk, cfg.kv_chunk,
+                               q_offset, kv_len_mask)
+
+
+# --------------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# --------------------------------------------------------------------------
+def gqa_forward(p: Dict[str, jax.Array], x: jax.Array, positions: jax.Array,
+                cfg: AttnConfig, cache: Optional[KVCache] = None,
+                cache_pos: Optional[jax.Array] = None,
+                use_streaming: Optional[bool] = None) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x: [B, L, d]; positions: [B, L] absolute. If ``cache`` is given, new
+    K/V are written at ``cache_pos`` and attention runs over the cache
+    (decode / chunked prefill). Returns (y, updated cache)."""
+    B, L, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, L, H, hd)
+    k = k.reshape(B, L, K, hd)
+    v = v.reshape(B, L, K, hd)
+    if cfg.rope_theta is not None:
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads_tp", None)
+    k = constrain(k, "batch", None, "kv_heads_tp", None)
+    q = jnp.swapaxes(q, 1, 2)  # [B,H,L,hd]
+    k = jnp.swapaxes(k, 1, 2)  # [B,K,L,hd]
+    v = jnp.swapaxes(v, 1, 2)
+
+    new_cache = None
+    if cache is not None:
+        k_cache, v_cache = cache["k"], cache["v"]
+        S = k_cache.shape[2]
+        if cfg.window is not None and S <= cfg.window:
+            # ring buffer for sliding-window layers
+            slot = cache_pos % S
+            k_cache = _ring_update(k_cache, k, slot)
+            v_cache = _ring_update(v_cache, v, slot)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype),
+                                                          cache_pos, axis=2)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype),
+                                                          cache_pos, axis=2)
+        kv_seq_ax = "kv_seq" if cfg.shard_kv_seq else None
+        k_cache = constrain(k_cache, "batch", "kv_heads_tp", kv_seq_ax, None)
+        v_cache = constrain(v_cache, "batch", "kv_heads_tp", kv_seq_ax, None)
+        new_cache = {"k": k_cache, "v": v_cache}
+        kf, vf = k_cache, v_cache
+        # validity mask over cache positions
+        total = cache_pos + L
+        if cfg.window is not None and kf.shape[2] <= cfg.window:
+            valid = jnp.arange(kf.shape[2])[None, :] < jnp.minimum(total, kf.shape[2])
+        else:
+            valid = jnp.arange(kf.shape[2])[None, :] < total
+        valid = jnp.broadcast_to(valid, (B, kf.shape[2]))
+        if L == 1:
+            out = _decode_attend(q, kf.astype(q.dtype), vf.astype(q.dtype), valid, cfg)
+        else:
+            out = _attend_streaming(q, kf.astype(q.dtype), vf.astype(q.dtype), cfg,
+                                    q_offset=cache_pos, kv_len_mask=valid)
+    else:
+        out = _attend_streaming(q, k, v, cfg, q_offset=0)
+
+    out = jnp.swapaxes(out, 1, 2).reshape(B, L, H * hd)
+    y = out @ p["wo"]
+    return constrain(y, "batch", None, None), new_cache
+
+
+def _ring_update(cache, new, slot):
+    """Sliding-window ring buffer write. cache:[B,K,W,hd], new:[B,K,L,hd].
+    For decode L=1; for prefill writes modulo W via scatter."""
+    W = cache.shape[2]
+    L = new.shape[2]
+    if L == 1:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                                   slot, axis=2)
+    idx = (slot + jnp.arange(L)) % W
+    return cache.at[:, :, idx].set(new.astype(cache.dtype))
+
+
+def _decode_attend(q, k_cache, v_cache, valid, cfg: AttnConfig) -> jax.Array:
+    """Single-token attention over the cache — flash-decode. With an SP-
+    sharded cache seq axis, GSPMD turns the max/sum into all-reduces (the
+    partial-softmax combine)."""
+    B, H, _, hd = q.shape
+    K = k_cache.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, 1, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_cache.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, 1, hd).astype(q.dtype)
+
+
+def cross_forward(p, x, kv_embeds, cfg: AttnConfig,
+                  cross_cache: Optional[KVCache] = None) -> Tuple[jax.Array, KVCache]:
+    """Cross-attention; K/V from encoder states (computed once, cached)."""
+    B, L, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, L, H, hd)
+    q = jnp.swapaxes(q, 1, 2)
+    if cross_cache is None:
+        S = kv_embeds.shape[1]
+        k = (kv_embeds @ p["wk"]).reshape(B, S, K, hd)
+        v = (kv_embeds @ p["wv"]).reshape(B, S, K, hd)
+        cross_cache = {"k": jnp.swapaxes(k, 1, 2), "v": jnp.swapaxes(v, 1, 2)}
+    kf, vf = cross_cache["k"], cross_cache["v"]
+    valid = jnp.ones((B, kf.shape[2]), bool)
+    ccfg = dataclasses.replace(cfg, causal=False, window=None)
+    if L == 1:
+        out = _decode_attend(q, kf, vf, valid, ccfg)
+    else:
+        out = _attend_streaming(q, kf, vf, ccfg, q_offset=0, kv_len_mask=valid)
+    out = jnp.swapaxes(out, 1, 2).reshape(B, L, H * hd)
+    return (out @ p["wo"]), cross_cache
+
+
+# --------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (deepseek-v3)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MlaConfig:
+    d_model: int = 7168
+    n_heads: int = 128
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10000.0
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+
+def init_mla(key, cfg: MlaConfig, dtype=jnp.float32) -> Dict[str, Param]:
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "w_dq": dense_init(ks[0], (d, cfg.q_lora), ("embed_fsdp", None), dtype),
+        "q_norm": blocks.ones_init((cfg.q_lora,), (None,), dtype),
+        "w_uq": dense_init(ks[1], (cfg.q_lora, H * (cfg.qk_nope + cfg.qk_rope)),
+                           (None, "heads_tp"), dtype),
+        "w_dkv": dense_init(ks[2], (d, cfg.kv_lora), ("embed_fsdp", None), dtype),
+        "kv_norm": blocks.ones_init((cfg.kv_lora,), (None,), dtype),
+        "w_kr": dense_init(ks[3], (d, cfg.qk_rope), ("embed_fsdp", None), dtype),
+        "w_uk": dense_init(ks[4], (cfg.kv_lora, H * cfg.qk_nope),
+                           (None, "heads_tp"), dtype),
+        "w_uv": dense_init(ks[5], (cfg.kv_lora, H * cfg.v_dim),
+                           (None, "heads_tp"), dtype),
+        "wo": dense_init(ks[6], (H * cfg.v_dim, d), ("heads_tp", "embed_fsdp"),
+                         dtype, scale=1.0 / math.sqrt(H * cfg.v_dim)),
+    }
+
+
+def mla_forward(p, x, positions, cfg: MlaConfig,
+                cache: Optional[KVCache] = None, cache_pos: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """MLA with the *compressed* KV cache (c_kv ⊕ k_rope = 576/token — the
+    paper-technique representative: staging a latent representation through
+    fast memory instead of full K/V, HEROv2's SPM philosophy at model level).
+    Decode uses the absorbed-matmul form (W_uk folded into the query)."""
+    B, L, d = x.shape
+    H = cfg.n_heads
+    cq = blocks.rms_norm(p["q_norm"], x @ p["w_dq"])
+    q = (cq @ p["w_uq"]).reshape(B, L, H, cfg.qk_nope + cfg.qk_rope)
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    q_rope = blocks.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = blocks.rms_norm(p["kv_norm"], x @ p["w_dkv"])          # [B,L,kv_lora]
+    k_rope = (x @ p["w_kr"]).reshape(B, L, 1, cfg.qk_rope)
+    k_rope = blocks.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_pos, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), cache_pos, axis=1)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+        S = ckv_c.shape[1]
+        valid = jnp.arange(S)[None, :] < (cache_pos + L)
+        valid = jnp.broadcast_to(valid, (B, S))
+        out = _mla_absorbed_attend(p, q_nope, q_rope, ckv_c.astype(x.dtype),
+                                   kr_c.astype(x.dtype), valid, cfg,
+                                   q_offset=cache_pos)
+        y = out.reshape(B, L, H * cfg.kv_lora) if False else out
+        return _mla_out(p, out, cfg, B, L), new_cache
+
+    # train/prefill without cache: expand K/V (flash-style streaming)
+    k_nope = (ckv @ p["w_uk"]).reshape(B, L, H, cfg.qk_nope)
+    v = (ckv @ p["w_uv"]).reshape(B, L, H, cfg.v_dim)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                        (B, L, H, cfg.qk_rope))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    acfg = AttnConfig(d_model=d, n_heads=H, n_kv=H, head_dim=cfg.qk_nope + cfg.qk_rope,
+                      causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    qq = jnp.swapaxes(qq, 1, 2)
+    k = jnp.swapaxes(k, 1, 2)
+    # pad v to qk dim for the shared streaming kernel, then slice back
+    v_p = jnp.swapaxes(v, 1, 2)
+    if cfg.v_dim != cfg.qk_nope + cfg.qk_rope:
+        pad = cfg.qk_nope + cfg.qk_rope - cfg.v_dim
+        v_p = jnp.pad(v_p, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = _attend_streaming(qq, k, v_p, acfg, q_offset=0)[..., :cfg.v_dim]
+    out = jnp.swapaxes(out, 1, 2)  # [B,L,H,v]
+    return _mla_out(p, out, cfg, B, L), None
+
+
+def _mla_absorbed_attend(p, q_nope, q_rope, ckv, kr, valid, cfg: MlaConfig,
+                         q_offset) -> jax.Array:
+    """Absorbed decode: score = (q_nope·W_uk)·c_kv + q_rope·k_rope; value =
+    (softmax·c_kv)·W_uv — attention runs entirely in the 512-d latent space."""
+    B, L, H = q_nope.shape[0], q_nope.shape[1], cfg.n_heads
+    w_uk = p["w_uk"].reshape(cfg.kv_lora, H, cfg.qk_nope)
+    q_lat = jnp.einsum("blhn,chn->blhc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))       # [B,L,H,kv_lora]
+    logits = jnp.einsum("blhc,bsc->bhls", q_lat, ckv.astype(jnp.float32))
+    logits += jnp.einsum("blhr,bsr->bhls", q_rope.astype(jnp.float32),
+                         kr.astype(jnp.float32))
+    logits /= math.sqrt(cfg.qk_nope + cfg.qk_rope)
+    qpos = q_offset + jnp.arange(L)
+    causal = jnp.arange(ckv.shape[1])[None, :] <= qpos[:, None]
+    mask = valid[:, None, None, :] & causal[None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    lat = jnp.einsum("bhls,bsc->blhc", pr, ckv.astype(jnp.float32))  # [B,L,H,c]
+    w_uv = p["w_uv"].reshape(cfg.kv_lora, H, cfg.v_dim)
+    out = jnp.einsum("blhc,chv->blhv", lat, w_uv.astype(jnp.float32))
+    return out.astype(q_nope.dtype)
+
+
+def _mla_out(p, out_blhv, cfg: MlaConfig, B, L) -> jax.Array:
+    return out_blhv.reshape(B, L, cfg.n_heads * cfg.v_dim) @ p["wo"]

@@ -1,0 +1,154 @@
+"""Shared model blocks: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-function style: every block is ``f(params, x, cfg) -> y`` over a params
+pytree whose leaves are :class:`Param` (array + logical sharding axes). The
+logical axes are resolved to mesh PartitionSpecs by parallel/sharding.py —
+the same MaxText-style indirection, so one model definition serves every
+mesh/parallelism configuration (the HEROv2 'unified API, per-accelerator
+implementation' philosophy at the sharding level).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addrspace
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("value",), meta_fields=("axes",))
+@dataclasses.dataclass
+class Param:
+    """An initialized parameter + its logical sharding axes.
+
+    Registered as a pytree with ``axes`` static, so ``jax.eval_shape`` over
+    ``init_model`` yields abstract (ShapeDtypeStruct, axes) trees — the
+    dry-run derives parameter shardings without allocating a byte."""
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+
+def split_params(tree):
+    """(Param pytree) -> (value pytree, axes pytree)."""
+    is_p = lambda x: isinstance(x, Param)
+    vals = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_p)
+    return vals, axes
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def dense_init(key, shape: Sequence[int], axes: Tuple[Optional[str], ...],
+               dtype=jnp.float32, scale: Optional[float] = None) -> Param:
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    v = jax.random.normal(key, tuple(shape), dtype) * jnp.asarray(std, dtype)
+    return Param(v, tuple(axes))
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(tuple(shape), dtype), tuple(axes))
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(tuple(shape), dtype), tuple(axes))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = False) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if zero_centered:  # gemma convention: scale stored as (1 + s)
+        s = 1.0 + s
+    return (y * s).astype(dt)
+
+
+def layer_norm(scale: jax.Array, bias: jax.Array, x: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int32 — positions
+    are provably < 2³¹ for every assigned shape: addrspace NATIVE)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [hd/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def swiglu(w_gate, w_up, w_down, x, act=jax.nn.silu):
+    h = act(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(w_in, b_in, w_out, b_out, x):
+    h = jax.nn.gelu(x @ w_in + b_in, approximate=True)
+    return h @ w_out + b_out
+
+
+def relu2_mlp(w_in, w_out, x):
+    """Squared-ReLU MLP (nemotron/minitron)."""
+    h = jnp.square(jax.nn.relu(x @ w_in))
+    return h @ w_out
+
+
+# --------------------------------------------------------------------------
+# embeddings — legalized per core.addrspace (HEROv2 §2.2.1)
+# --------------------------------------------------------------------------
+def embed_lookup(table: jax.Array, token_ids: jax.Array) -> jax.Array:
+    """Row-gather with promotion analysis (never flattens — stays NATIVE32
+    even for gemma3's 1.4e9-element table)."""
+    return addrspace.legalized_take(table, token_ids, axis=0)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> Param:
+    # vocab over TP only: sharding d over data would force GSPMD to fully
+    # rematerialize the token gather (observed in the qwen2 dry-run); the
+    # vocab axis also serves the tied head's column-parallel matmul
+    v = jax.random.normal(key, (vocab, d_model), dtype) * 0.02
+    return Param(v, ("vocab_tp", None))
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset: int = 0) -> jax.Array:
+    """[q_len, kv_len] bool; True = attend. q global position = q_offset + i."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return kj <= qi
+
+
+def window_mask(q_len: int, kv_len: int, window: int, q_offset: int = 0) -> jax.Array:
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return (kj <= qi) & (kj > qi - window)

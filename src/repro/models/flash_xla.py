@@ -1,0 +1,200 @@
+"""Flash attention in pure XLA ops with a custom VJP — O(N) residuals.
+
+Why this exists (napkin math, EXPERIMENTS §Perf): a straight lax.scan over KV
+chunks is algebraically flash attention, but autodiff saves every chunk's
+(m, l, acc) carry for the backward pass — per layer that is
+``nk × [B,K,G,qc,hd]`` f32 ≈ seq_len/kv_chunk × activation size, which blew
+qwen2 train_4k to ~448 GB/device on the first dry-run. The fix is the flash
+backward itself: save only (out, lse), recompute P = exp(QKᵀ−lse) blockwise.
+Residuals drop to O(B·H·L·hd) — the memory plan of the Pallas kernel
+(kernels/flash_attention.py), expressed in XLA so every backend (and GSPMD)
+can partition it.
+
+Semantics: GQA (K kv-heads, G = H/K groups), causal and/or sliding-window
+masks in absolute positions (q_offset for prefill continuation), optional
+logit softcap (gemma-style tanh), optional kv validity mask (ragged decode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _mask_for(qpos, kpos, causal, window):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _logits(qblk, kblk, softcap, scale):
+    l = jnp.einsum("bkgqd,bksd->bkgqs", qblk, kblk) * scale
+    if softcap:
+        l = jnp.tanh(l / softcap) * softcap
+    return l
+
+
+def _dlogits(qblk, kblk, softcap, scale, ds):
+    """cotangent through the (scaled, softcapped) logits."""
+    if softcap:
+        raw = jnp.einsum("bkgqd,bksd->bkgqs", qblk, kblk) * scale
+        t = jnp.tanh(raw / softcap)
+        ds = ds * (1.0 - jnp.square(t))
+    return ds * scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(q, k, v, causal: bool, window: Optional[int],
+                        softcap: Optional[float], q_chunk: int, kv_chunk: int,
+                        q_offset=0, kv_len_mask=None):
+    """q:[B,H,Lq,hd] k,v:[B,K,Lkv,hd] -> [B,H,Lq,hd].
+
+    q_offset: scalar (may be traced) added to query positions.
+    kv_len_mask: [B, Lkv] bool validity (may be None).
+    """
+    out, _ = _fwd_impl(q, k, v, causal, window, softcap, q_chunk, kv_chunk,
+                       q_offset, kv_len_mask)
+    return out
+
+
+def _chunks(L, c):
+    """Largest chunk ≤ c that divides L exactly (slices must tile the axis —
+    a clamped ragged tail would silently overlap under dynamic_slice)."""
+    c = max(1, min(c, L))
+    while L % c:
+        c -= 1
+    return L // c, c
+
+
+def _fwd_impl(q, k, v, causal, window, softcap, q_chunk, kv_chunk,
+              q_offset, kv_len_mask):
+    B, H, Lq, hd = q.shape
+    K, Lkv = k.shape[1], k.shape[2]
+    G = H // K
+    nq, qc = _chunks(Lq, q_chunk)
+    nk, kc = _chunks(Lkv, kv_chunk)
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, Lq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def q_block(qi):
+        qs = qi * qc
+        qblk = jax.lax.dynamic_slice_in_dim(qg, qs, qc, axis=3)
+        qpos = q_offset + qs + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            ks_ = ki * kc
+            kblk = jax.lax.dynamic_slice_in_dim(kf, ks_, kc, axis=2)
+            vblk = jax.lax.dynamic_slice_in_dim(vf, ks_, kc, axis=2)
+            logits = _logits(qblk, kblk, softcap, scale)
+            kpos = ks_ + jnp.arange(kc)
+            m = _mask_for(qpos, kpos, causal, window)
+            m = jnp.broadcast_to(m[None, None, None], logits.shape)
+            if kv_len_mask is not None:
+                valid = jax.lax.dynamic_slice_in_dim(kv_len_mask, ks_, kc, axis=1)
+                m &= valid[:, None, None, None, :]
+            logits = jnp.where(m, logits, NEG)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkgqs,bksd->bkgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qc, hd), jnp.float32)
+        (mf, lf, af), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        o = af / jnp.maximum(lf, 1e-30)[..., None]
+        lse = mf + jnp.log(jnp.maximum(lf, 1e-30))
+        return o, lse
+
+    os_, lses = jax.lax.map(q_block, jnp.arange(nq))       # [nq,B,K,G,qc,*]
+    out = jnp.moveaxis(os_, 0, 3).reshape(B, K, G, nq * qc, hd)[:, :, :, :Lq]
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, K, G, nq * qc)[:, :, :, :Lq]
+    return out.reshape(B, H, Lq, hd).astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, q_chunk, kv_chunk,
+               q_offset, kv_len_mask):
+    out, lse = _fwd_impl(q, k, v, causal, window, softcap, q_chunk, kv_chunk,
+                         q_offset, kv_len_mask)
+    return out, (q, k, v, out, lse, q_offset, kv_len_mask)
+
+
+def _flash_bwd(causal, window, softcap, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse, q_offset, kv_len_mask = res
+    B, H, Lq, hd = q.shape
+    K, Lkv = k.shape[1], k.shape[2]
+    G = H // K
+    nq, qc = _chunks(Lq, q_chunk)
+    nk, kc = _chunks(Lkv, kv_chunk)
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, Lq, hd).astype(jnp.float32)
+    og = out.reshape(B, K, G, Lq, hd).astype(jnp.float32)
+    dog = dout.reshape(B, K, G, Lq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    D = jnp.sum(og * dog, axis=-1)                          # [B,K,G,Lq]
+
+    def q_block(carry, qi):
+        dk_acc, dv_acc = carry
+        qs = qi * qc
+        qblk = jax.lax.dynamic_slice_in_dim(qg, qs, qc, axis=3)
+        doblk = jax.lax.dynamic_slice_in_dim(dog, qs, qc, axis=3)
+        lseblk = jax.lax.dynamic_slice_in_dim(lse, qs, qc, axis=3)
+        Dblk = jax.lax.dynamic_slice_in_dim(D, qs, qc, axis=3)
+        qpos = q_offset + qs + jnp.arange(qc)
+
+        def kv_step(dq_blk, ki):
+            ks_ = ki * kc
+            kblk = jax.lax.dynamic_slice_in_dim(kf, ks_, kc, axis=2)
+            vblk = jax.lax.dynamic_slice_in_dim(vf, ks_, kc, axis=2)
+            logits = _logits(qblk, kblk, softcap, scale)
+            kpos = ks_ + jnp.arange(kc)
+            m = _mask_for(qpos, kpos, causal, window)
+            m = jnp.broadcast_to(m[None, None, None], logits.shape)
+            if kv_len_mask is not None:
+                valid = jax.lax.dynamic_slice_in_dim(kv_len_mask, ks_, kc, axis=1)
+                m &= valid[:, None, None, None, :]
+            logits = jnp.where(m, logits, NEG)
+            p = jnp.exp(logits - lseblk[..., None])         # [B,K,G,qc,kc]
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doblk, vblk)
+            ds = p * (dp - Dblk[..., None])
+            ds = _dlogits(qblk, kblk, softcap, scale, ds)
+            dq_blk += jnp.einsum("bkgqs,bksd->bkgqd", ds, kblk)
+            dk_c = jnp.einsum("bkgqs,bkgqd->bksd", ds, qblk)
+            dv_c = jnp.einsum("bkgqs,bkgqd->bksd", p, doblk)
+            return dq_blk, (ks_, dk_c, dv_c)
+
+        dq0 = jnp.zeros((B, K, G, qc, hd), jnp.float32)
+        dq_blk, (kss, dks, dvs) = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+        # fold the per-kv-chunk dk/dv into the running accumulators
+        def fold(acc, x):
+            ks_, d = x
+            cur = jax.lax.dynamic_slice_in_dim(acc, ks_, kc, axis=2)
+            return jax.lax.dynamic_update_slice_in_dim(acc, cur + d, ks_, axis=2), None
+        dk_acc, _ = jax.lax.scan(fold, dk_acc, (kss, dks))
+        dv_acc, _ = jax.lax.scan(fold, dv_acc, (kss, dvs))
+        return (dk_acc, dv_acc), (qi * qc, dq_blk)
+
+    dk0 = jnp.zeros((B, K, Lkv, hd), jnp.float32)
+    dv0 = jnp.zeros((B, K, Lkv, hd), jnp.float32)
+    (dk, dv), (qss, dqs) = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 3).reshape(B, K, G, nq * qc, hd)[:, :, :, :Lq]
+    dq = dq.reshape(B, H, Lq, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+flash_attention_xla.defvjp(_flash_fwd, _flash_bwd)

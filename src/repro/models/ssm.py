@@ -1,0 +1,355 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), xLSTM (mLSTM + sLSTM).
+
+One chunked **gated linear attention** core serves both Mamba2's SSD and the
+mLSTM matrix memory — the recurrence
+    S_t = exp(ld_t)·S_{t-1} + exp(lg_t)·k_t v_tᵀ ,   y_t = q_t·S_t
+computed chunk-parallel (intra-chunk attention-like scores with cumulative
+log-decays + inter-chunk lax.scan over states). This is the HEROv2 'tile the
+loop, stage the working set' insight applied to time: the chunk is the tile,
+the carried state is the SPM-resident accumulator, and the AutoDMA planner
+picks the chunk length for the Pallas path.
+
+Numerical care: log-decays come from log_sigmoid/softplus (≤ 0) and input
+gates are clipped to [-12, 12], so every exponent in the chunked form is
+bounded; the mLSTM normalizer is folded in as an extra value column. This is
+a simplification of xLSTM's running-max stabilizer (documented deviation —
+equivalent stability class, simpler chunk algebra).
+
+Decode paths are single-step state updates (constant memory — why these
+archs run the long_500k cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.blocks import Param, dense_init, ones_init, zeros_init
+from repro.parallel.sharding import constrain
+
+
+# --------------------------------------------------------------------------
+# chunked gated linear attention core
+# --------------------------------------------------------------------------
+def gla_chunked(q, k, v, log_decay, log_gate=None, chunk: int = 128,
+                state0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """q,k: [B,L,H,N]; v: [B,L,H,P]; log_decay/log_gate: [B,L,H] (ld ≤ 0).
+
+    Returns (y [B,L,H,P], final_state [B,H,N,P]).
+    """
+    B, L, H, N = q.shape
+    P = v.shape[-1]
+    Q = min(chunk, L)
+    nc = -(-L // Q)
+    pad = nc * Q - L
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, log_decay = zf(q), zf(k), zf(v), zf(log_decay)
+        if log_gate is not None:
+            log_gate = zf(log_gate)
+    if log_gate is None:
+        log_gate = jnp.zeros_like(log_decay)
+
+    f32 = jnp.float32
+    qc = q.reshape(B, nc, Q, H, N).astype(f32)
+    kc = k.reshape(B, nc, Q, H, N).astype(f32)
+    vc = v.reshape(B, nc, Q, H, P).astype(f32)
+    ldc = log_decay.reshape(B, nc, Q, H).astype(f32)
+    lgc = log_gate.reshape(B, nc, Q, H).astype(f32)
+    cum = jnp.cumsum(ldc, axis=2)                    # Σ_{r≤t} ld_r  within chunk
+    tot = cum[:, :, -1]                              # [B,nc,H]
+
+    # intra-chunk: scores[t,s] = (q_t·k_s)·exp(cum_t − cum_s + lg_s), s ≤ t
+    def chunk_step(S, inp):
+        qb, kb, vb, cumb, lgb, totb = inp             # [B,Q,H,N] etc (per chunk)
+        expo = cumb[:, :, None] - cumb[:, None] + lgb[:, None]   # [B,t,s,H]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask the EXPONENT (not the exp): s>t positions have expo>0 and
+        # exp would overflow → 0·inf = NaN in the backward pass
+        expo = jnp.where(mask[None, :, :, None], expo, -1e30)
+        w = jnp.exp(expo)
+        qk = jnp.einsum("bthn,bshn->btsh", qb, kb)
+        intra = jnp.einsum("btsh,btsh,bshp->bthp", qk, w, vb)
+        cross = jnp.einsum("bthn,bth,bhnp->bthp", qb, jnp.exp(cumb), S)
+        # state update: S' = exp(tot)·S + Σ_s exp(tot − cum_s + lg_s)·k_s v_sᵀ
+        kw = kb * jnp.exp(totb[:, None] - cumb + lgb)[..., None]
+        S_new = jnp.exp(totb)[..., None, None] * S + jnp.einsum("bshn,bshp->bhnp", kw, vb)
+        return S_new, intra + cross
+
+    S0 = state0.astype(f32) if state0 is not None else jnp.zeros((B, H, N, P), f32)
+    inps = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+            jnp.moveaxis(cum, 1, 0), jnp.moveaxis(lgc, 1, 0), jnp.moveaxis(tot, 1, 0))
+    S_fin, ys = jax.lax.scan(chunk_step, S0, inps)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc * Q, H, P)[:, :L]
+    return y.astype(v.dtype), S_fin
+
+
+def gla_step(S, q, k, v, log_decay, log_gate=None) -> Tuple[jax.Array, jax.Array]:
+    """Single-token decode: q,k:[B,H,N], v:[B,H,P], gates:[B,H].
+    Returns (y [B,H,P], S' [B,H,N,P])."""
+    f32 = jnp.float32
+    lg = jnp.zeros_like(log_decay) if log_gate is None else log_gate
+    S = jnp.exp(log_decay.astype(f32))[..., None, None] * S + \
+        jnp.exp(lg.astype(f32))[..., None, None] * \
+        jnp.einsum("bhn,bhp->bhnp", k.astype(f32), v.astype(f32))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(f32), S)
+    return y.astype(v.dtype), S
+
+
+def causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv1d. x:[B,L,D], w:[K,D]. state:[B,K-1,D] for decode.
+    Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is not None:
+        xx = jnp.concatenate([state, x], axis=1)           # [B, K-1+L, D]
+        new_state = xx[:, -(K - 1):]
+    else:
+        xx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = None
+    y = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y, new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64            # N
+    head_dim: int = 64           # P
+    expand: int = 2
+    conv_k: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.float32) -> Dict[str, Param]:
+    ks = jax.random.split(key, 5)
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    proj_out = 2 * di + 2 * N + H   # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), ("embed_fsdp", "heads_tp"), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_k, di + 2 * N), (None, "heads_tp"), dtype,
+                             scale=1.0 / math.sqrt(cfg.conv_k)),
+        "A_log": Param(jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)), ("heads_tp",)),
+        "D": ones_init((H,), ("heads_tp",), dtype),
+        "dt_bias": zeros_init((H,), ("heads_tp",), dtype),
+        "norm": ones_init((di,), ("heads_tp",), dtype),
+        "out_proj": dense_init(ks[4], (di, d), ("heads_tp", "embed_fsdp"), dtype),
+    }
+
+
+def _mamba2_qkv(p, x, cfg: Mamba2Config, conv_state=None):
+    B, L, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bm, Cm, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], -1)
+    conv_out, new_conv = causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], -1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                    # [B,L,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [H]
+    ld = dt.astype(jnp.float32) * A                            # log decay ≤ 0
+    xh = xin.reshape(B, L, H, P)
+    v = xh * dt[..., None]
+    q = jnp.broadcast_to(Cm[:, :, None], (B, L, H, N))
+    k = jnp.broadcast_to(Bm[:, :, None], (B, L, H, N))
+    return z, xh, q, k, v, ld, new_conv
+
+
+def mamba2_forward(p, x, cfg: Mamba2Config, state=None
+                   ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: [B,L,d]. state={'ssm':[B,H,N,P],'conv':[B,K-1,D]} for stepwise use."""
+    B, L, _ = x.shape
+    decode = state is not None and L == 1
+    conv_state = state["conv"] if state is not None else None
+    z, xh, q, k, v, ld, new_conv = _mamba2_qkv(p, x, cfg, conv_state)
+    if decode:
+        y1, S = gla_step(state["ssm"], q[:, 0], k[:, 0], v[:, 0], ld[:, 0])
+        y = y1[:, None]
+    else:
+        S0 = state["ssm"] if state is not None else None
+        y, S = gla_chunked(q, k, v, ld, chunk=cfg.chunk, state0=S0)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, L, cfg.d_inner)
+    y = blocks.rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    new_state = {"ssm": S, "conv": new_conv} if state is not None else None
+    return constrain(out, "batch", None, None), new_state
+
+
+def mamba2_init_state(cfg: Mamba2Config, batch: int, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_k - 1, cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MlstmConfig:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2
+    conv_k: int = 4
+    chunk: int = 128
+    gate_clip: float = 12.0
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def init_mlstm(key, cfg: MlstmConfig, dtype=jnp.float32) -> Dict[str, Param]:
+    ks = jax.random.split(key, 7)
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * di), ("embed_fsdp", "heads_tp"), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_k, di), (None, "heads_tp"), dtype,
+                             scale=1.0 / math.sqrt(cfg.conv_k)),
+        "wq": dense_init(ks[2], (di, di), ("heads_tp", None), dtype),
+        "wk": dense_init(ks[3], (di, di), ("heads_tp", None), dtype),
+        "wv": dense_init(ks[4], (di, di), ("heads_tp", None), dtype),
+        "w_if": dense_init(ks[5], (di, 2 * H), ("heads_tp", None), jnp.float32),
+        "norm": ones_init((di,), ("heads_tp",), dtype),
+        "down_proj": dense_init(ks[6], (di, d), ("heads_tp", "embed_fsdp"), dtype),
+    }
+
+
+def _mlstm_qkv(p, x, cfg: MlstmConfig, conv_state=None):
+    B, L, _ = x.shape
+    di, H, P = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    up = x @ p["up_proj"]
+    xi, z = jnp.split(up, 2, -1)
+    conv_out, new_conv = causal_conv(xi, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    q = (conv_out @ p["wq"]).reshape(B, L, H, P) / math.sqrt(P)
+    k = (conv_out @ p["wk"]).reshape(B, L, H, P)
+    v = (xi @ p["wv"]).reshape(B, L, H, P)
+    gif = (xi @ p["w_if"]).astype(jnp.float32)
+    i_g, f_g = jnp.split(gif, 2, -1)                     # [B,L,H]
+    ld = jax.nn.log_sigmoid(f_g)                         # log forget ≤ 0
+    lg = jnp.clip(i_g, -cfg.gate_clip, cfg.gate_clip)    # log input (clipped)
+    return z, q, k, v, ld, lg, new_conv
+
+
+def mlstm_forward(p, x, cfg: MlstmConfig, state=None):
+    B, L, _ = x.shape
+    H, P = cfg.n_heads, cfg.head_dim
+    decode = state is not None and L == 1
+    conv_state = state["conv"] if state is not None else None
+    z, q, k, v, ld, lg, new_conv = _mlstm_qkv(p, x, cfg, conv_state)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], -1)  # normalizer col
+    if decode:
+        y1, S = gla_step(state["ssm"], q[:, 0], k[:, 0], v_aug[:, 0],
+                         ld[:, 0], lg[:, 0])
+        y = y1[:, None]
+    else:
+        S0 = state["ssm"] if state is not None else None
+        y, S = gla_chunked(q, k, v_aug, ld, lg, chunk=cfg.chunk, state0=S0)
+    num, den = y[..., :P], y[..., P:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(B, L, cfg.d_inner)
+    y = blocks.rms_norm(p["norm"], y) * jax.nn.silu(z)
+    out = y @ p["down_proj"]
+    new_state = {"ssm": S, "conv": new_conv} if state is not None else None
+    return constrain(out, "batch", None, None), new_state
+
+
+def mlstm_init_state(cfg: MlstmConfig, batch: int, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim + 1),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_k - 1, cfg.d_inner), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM (scalar memory, true recurrence — lax.scan over time)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SlstmConfig:
+    d_model: int
+    n_heads: int = 4
+    ff_factor: float = 4.0 / 3.0
+    gate_clip: float = 12.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_slstm(key, cfg: SlstmConfig, dtype=jnp.float32) -> Dict[str, Param]:
+    ks = jax.random.split(key, 4)
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    f = int(cfg.ff_factor * d)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), ("embed_fsdp", "heads_tp"), dtype),
+        # block-diagonal recurrent weights, per head: [H, hd, 4*hd]
+        "r_gates": dense_init(ks[1], (H, hd, 4 * hd), ("heads_tp", None, None), dtype,
+                              scale=1.0 / math.sqrt(hd)),
+        "norm": ones_init((d,), (None,), dtype),
+        "ff_up": dense_init(ks[2], (d, 2 * f), ("embed_fsdp", "mlp_tp"), dtype),
+        "ff_down": dense_init(ks[3], (f, d), ("mlp_tp", "embed_fsdp"), dtype),
+    }
+
+
+def slstm_forward(p, x, cfg: SlstmConfig, state=None):
+    """x: [B,L,d]; true recurrence — scan over time (the paper's 'simple
+    control flow, compute-heavy' accelerator workload shape)."""
+    B, L, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    wx = (x @ p["w_gates"]).reshape(B, L, H, 4 * hd)
+
+    def step(carry, wx_t):
+        c, n, h = carry                               # [B,H,hd] each
+        rh = jnp.einsum("bhd,hde->bhe", h, p["r_gates"])
+        g = (wx_t + rh).astype(jnp.float32)
+        zt, it, ft, ot = jnp.split(g, 4, -1)
+        zt = jnp.tanh(zt)
+        it = jnp.exp(jnp.clip(it, -cfg.gate_clip, cfg.gate_clip))
+        ft = jax.nn.sigmoid(ft)
+        ot = jax.nn.sigmoid(ot)
+        c2 = ft * c + it * zt
+        n2 = ft * n + it
+        h2 = ot * (c2 / jnp.maximum(jnp.abs(n2), 1.0))
+        return (c2, n2, h2), h2.astype(x.dtype)
+
+    if state is None:
+        z0 = jnp.zeros((B, H, hd), jnp.float32)
+        carry0 = (z0, z0, z0)
+    else:
+        carry0 = (state["c"], state["n"], state["h"])
+    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, L, d)
+    y = blocks.rms_norm(p["norm"], y)
+    u, g = jnp.split(y @ p["ff_up"], 2, -1)
+    out = (jax.nn.gelu(u, approximate=True) * g) @ p["ff_down"]
+    new_state = None if state is None else {"c": carry[0], "n": carry[1], "h": carry[2]}
+    return constrain(out, "batch", None, None), new_state
+
+
+def slstm_init_state(cfg: SlstmConfig, batch: int):
+    z = jnp.zeros((batch, cfg.n_heads, cfg.head_dim), jnp.float32)
+    return {"c": z, "n": z, "h": z}

@@ -1,0 +1,503 @@
+"""Model assembly: layer-group patterns → scan-over-units → full LM families.
+
+A model is a sequence of **layer groups**; each group is ``pattern × count``
+where the pattern is a tuple of layer kinds (``"mixer:ffn"`` strings). The
+group is executed as ``lax.scan`` over ``count`` units (compact HLO — one
+unit's program regardless of depth; essential for 61-layer compiles on a
+CPU container) with the pattern unrolled inside the body. Examples:
+
+  yi-34b        groups = ((("gqa:mlp",), 60),)
+  deepseek-v3   groups = ((("mla:mlp",), 3), (("mla:moe",), 58))
+  gemma3-27b    groups = ((("local:mlp",)*5 + ("global:mlp",), 10),
+                          (("local:mlp",), 2))
+  zamba2-1.2b   groups = ((("mamba:none",)*5 + ("shared:mlp",), 6),
+                          (("mamba:none",), 2))   # 'shared' = weight-shared attn
+  xlstm-1.3b    groups = ((("mlstm:none",)*7 + ("slstm:none",), 6),)
+  whisper       encoder groups + decoder groups (enc/cross kinds)
+
+Kinds: gqa | local | global | enc | shared | mla | cross | mamba | mlstm |
+slstm (mixer) × mlp | moe | none (ffn). ``shared`` uses one weight copy for
+every invocation (zamba2) but per-site caches.
+
+The dry-run cost probe (launch/dryrun.py) rebuilds configs with per-group
+counts ∈ {1,2} to extract per-unit HLO cost — see EXPERIMENTS §Methodology
+(XLA's cost analysis counts while-bodies once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks, moe as moe_lib, ssm
+from repro.models.blocks import Param
+from repro.parallel.sharding import constrain
+
+Pattern = Tuple[str, ...]
+Group = Tuple[Pattern, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    groups: Tuple[Group, ...]
+    head_dim: Optional[int] = None
+    mlp: str = "swiglu"              # swiglu | gelu | relu2
+    qkv_bias: bool = False
+    rope_theta: Optional[float] = 10000.0
+    window: Optional[int] = None
+    logit_softcap: Optional[float] = None
+    norm: str = "rms"                # rms | layer
+    zero_centered_norm: bool = False
+    sandwich_norm: bool = False      # gemma3: post-norms on residual branches
+    embed_scale: bool = False        # gemma: × sqrt(d_model)
+    tie_embeddings: bool = False
+    learned_pos: Optional[int] = None  # whisper: learned positional embed size
+    moe: Optional[moe_lib.MoeConfig] = None
+    mla: Optional[attention.MlaConfig] = None
+    mamba: Optional[ssm.Mamba2Config] = None
+    mlstm: Optional[ssm.MlstmConfig] = None
+    slstm: Optional[ssm.SlstmConfig] = None
+    # encoder (whisper) / cross-kv (vlm) stubs
+    encoder_groups: Tuple[Group, ...] = ()
+    encoder_seq: int = 0             # stub frontend sequence length
+    cross_kv_dim: Optional[int] = None
+    mtp: bool = False                # deepseek multi-token prediction head
+    # compute policy
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "none"              # none | full | dots
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    shard_kv_seq: bool = False       # SP cache layout (decode)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_cfg(self, kind: str) -> attention.AttnConfig:
+        return attention.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.hd, rope_theta=self.rope_theta,
+            causal=kind != "enc",
+            window=self.window if kind == "local" else None,
+            qkv_bias=self.qkv_bias, logit_softcap=self.logit_softcap,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+            shard_kv_seq=self.shard_kv_seq)
+
+    def n_layers(self) -> int:
+        return sum(len(p) * c for p, c in self.groups) + \
+            sum(len(p) * c for p, c in self.encoder_groups)
+
+
+def parse_kind(kind: str) -> Tuple[str, str]:
+    mixer, _, ffn = kind.partition(":")
+    return mixer, ffn or "mlp"
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _norm_init(cfg: ModelConfig, dtype) -> Any:
+    if cfg.norm == "layer":
+        return {"scale": blocks.ones_init((cfg.d_model,), (None,), dtype),
+                "bias": blocks.zeros_init((cfg.d_model,), (None,), dtype)}
+    init = blocks.zeros_init if cfg.zero_centered_norm else blocks.ones_init
+    return {"scale": init((cfg.d_model,), (None,), dtype)}
+
+
+def _init_mixer(key, kind: str, cfg: ModelConfig, dtype):
+    if kind in ("gqa", "local", "global", "enc", "shared"):
+        return attention.init_gqa(key, cfg.attn_cfg(kind), dtype)
+    if kind == "mla":
+        return attention.init_mla(key, cfg.mla, dtype)
+    if kind == "cross":
+        return attention.init_cross(key, cfg.attn_cfg(kind), cfg.cross_kv_dim, dtype)
+    if kind == "mamba":
+        return ssm.init_mamba2(key, cfg.mamba, dtype)
+    if kind == "mlstm":
+        return ssm.init_mlstm(key, cfg.mlstm, dtype)
+    if kind == "slstm":
+        return ssm.init_slstm(key, cfg.slstm, dtype)
+    raise ValueError(kind)
+
+
+def _init_ffn(key, ffn: str, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if ffn == "none":
+        return None
+    if ffn == "moe":
+        return moe_lib.init_moe(key, cfg.moe, dtype)
+    if cfg.mlp == "swiglu":
+        return {"w_gate": blocks.dense_init(ks[0], (d, f), ("embed_fsdp", "mlp_tp"), dtype),
+                "w_up": blocks.dense_init(ks[1], (d, f), ("embed_fsdp", "mlp_tp"), dtype),
+                "w_down": blocks.dense_init(ks[2], (f, d), ("mlp_tp", "embed_fsdp"), dtype)}
+    if cfg.mlp == "relu2":
+        return {"w_in": blocks.dense_init(ks[0], (d, f), ("embed_fsdp", "mlp_tp"), dtype),
+                "w_out": blocks.dense_init(ks[1], (f, d), ("mlp_tp", "embed_fsdp"), dtype)}
+    # gelu (whisper)
+    return {"w_in": blocks.dense_init(ks[0], (d, f), ("embed_fsdp", "mlp_tp"), dtype),
+            "b_in": blocks.zeros_init((f,), ("mlp_tp",), dtype),
+            "w_out": blocks.dense_init(ks[1], (f, d), ("mlp_tp", "embed_fsdp"), dtype),
+            "b_out": blocks.zeros_init((d,), (None,), dtype)}
+
+
+def _init_layer(key, kind: str, cfg: ModelConfig, dtype, shared: bool = False):
+    mixer, ffn = parse_kind(kind)
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": _norm_init(cfg, dtype)}
+    if not shared:  # 'shared' mixer+ffn weights live at top level
+        p["mixer"] = _init_mixer(k1, mixer, cfg, dtype)
+    if ffn != "none" and not shared:
+        p["ln2"] = _norm_init(cfg, dtype)
+        p["ffn"] = _init_ffn(k2, ffn, cfg, dtype)
+    elif ffn != "none":
+        p["ln2"] = _norm_init(cfg, dtype)
+    if cfg.sandwich_norm:
+        p["ln1_post"] = _norm_init(cfg, dtype)
+        if ffn != "none":
+            p["ln2_post"] = _norm_init(cfg, dtype)
+    return p
+
+
+def _stack(trees: List[Any]) -> Any:
+    """Stack unit param trees along a new leading 'layers' axis."""
+    def comb(*leaves):
+        if isinstance(leaves[0], Param):
+            return Param(jnp.stack([l.value for l in leaves]),
+                         ("layers",) + leaves[0].axes)
+        return jnp.stack(leaves)
+    return jax.tree_util.tree_map(comb, *trees,
+                                  is_leaf=lambda x: isinstance(x, Param))
+
+
+def _init_group(key, pattern: Pattern, count: int, cfg: ModelConfig, dtype):
+    units = []
+    for u in range(count):
+        uk = jax.random.fold_in(key, u)
+        layer_ps = []
+        for i, kind in enumerate(pattern):
+            mixer, _ = parse_kind(kind)
+            layer_ps.append(_init_layer(jax.random.fold_in(uk, i), kind, cfg,
+                                        dtype, shared=mixer == "shared"))
+        units.append(tuple(layer_ps))
+    return _stack(units)
+
+
+def init_model(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": blocks.embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    params["groups"] = [_init_group(jax.random.fold_in(ks[1], gi), pat, cnt, cfg, dtype)
+                        for gi, (pat, cnt) in enumerate(cfg.groups)]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = blocks.dense_init(ks[2], (cfg.d_model, cfg.vocab),
+                                              ("embed_fsdp", "vocab_tp"), dtype,
+                                              scale=1.0 / math.sqrt(cfg.d_model))
+    if cfg.learned_pos:
+        params["pos_embed"] = blocks.dense_init(ks[3], (cfg.learned_pos, cfg.d_model),
+                                                (None, "embed_fsdp"), dtype, scale=0.02)
+    if any(parse_kind(k)[0] == "shared" for pat, _ in cfg.groups for k in pat):
+        params["shared_block"] = {
+            "mixer": attention.init_gqa(ks[4], cfg.attn_cfg("shared"), dtype),
+            "ffn": _init_ffn(ks[5], "mlp", cfg, dtype),
+        }
+    if cfg.encoder_groups:
+        params["encoder"] = {
+            "groups": [_init_group(jax.random.fold_in(ks[6], gi), pat, cnt, cfg, dtype)
+                       for gi, (pat, cnt) in enumerate(cfg.encoder_groups)],
+            "final_norm": _norm_init(cfg, dtype),
+            "pos_embed": blocks.dense_init(jax.random.fold_in(ks[6], 99),
+                                           (cfg.encoder_seq, cfg.d_model),
+                                           (None, "embed_fsdp"), dtype, scale=0.02),
+        }
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": blocks.dense_init(ks[7], (2 * cfg.d_model, cfg.d_model),
+                                      (None, "embed_fsdp"), dtype),
+            "block": _init_layer(jax.random.fold_in(ks[7], 1),
+                                 cfg.groups[-1][0][-1], cfg, dtype),
+            "norm": _norm_init(cfg, dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _norm_apply(p, x, cfg: ModelConfig):
+    if cfg.norm == "layer":
+        return blocks.layer_norm(p["scale"], p["bias"], x)
+    return blocks.rms_norm(p["scale"], x, zero_centered=cfg.zero_centered_norm)
+
+
+def _ffn_apply(p, ffn: str, x, cfg: ModelConfig):
+    if ffn == "moe":
+        return moe_lib.moe_forward(p, x, cfg.moe)
+    if cfg.mlp == "swiglu":
+        y = blocks.swiglu(p["w_gate"], p["w_up"], p["w_down"], x)
+    elif cfg.mlp == "relu2":
+        y = blocks.relu2_mlp(p["w_in"], p["w_out"], x)
+    else:
+        y = blocks.gelu_mlp(p["w_in"], p["b_in"], p["w_out"], p["b_out"], x)
+    return constrain(y, "batch", None, None), jnp.zeros((), jnp.float32)
+
+
+def _apply_layer(kind: str, p, x, cfg: ModelConfig, cache, cache_pos, positions,
+                 extra, shared_p, mode: str = "train"):
+    mixer, ffn = parse_kind(kind)
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm_apply(p["ln1"], x, cfg)
+    mixer_p = shared_p["mixer"] if mixer == "shared" else p["mixer"]
+    new_cache = cache
+    if mixer in ("gqa", "local", "global", "enc", "shared"):
+        acfg = cfg.attn_cfg(mixer)
+        y, new_cache = attention.gqa_forward(mixer_p, h, positions, acfg,
+                                             cache=cache, cache_pos=cache_pos)
+    elif mixer == "mla":
+        y, new_cache = attention.mla_forward(mixer_p, h, positions, cfg.mla,
+                                             cache=cache, cache_pos=cache_pos)
+    elif mixer == "cross":
+        # prefill computes cross-K/V from the stub embeddings; decode reuses
+        cc = cache if mode == "decode" else None
+        y, new_cache = attention.cross_forward(mixer_p, h, extra, cfg.attn_cfg("cross"),
+                                               cross_cache=cc)
+        if cache is not None and mode != "decode":
+            new_cache = jax.tree_util.tree_map(
+                lambda old, new: new.astype(old.dtype), cache, new_cache)
+    elif mixer == "mamba":
+        y, new_cache = ssm.mamba2_forward(mixer_p, h, cfg.mamba, state=cache)
+    elif mixer == "mlstm":
+        y, new_cache = ssm.mlstm_forward(mixer_p, h, cfg.mlstm, state=cache)
+    elif mixer == "slstm":
+        y, new_cache = ssm.slstm_forward(mixer_p, h, cfg.slstm, state=cache)
+    else:
+        raise ValueError(mixer)
+    if cfg.sandwich_norm:
+        y = _norm_apply(p["ln1_post"], y, cfg)
+    x = x + y
+    if ffn != "none":
+        h2 = _norm_apply(p["ln2"], x, cfg)
+        ffn_p = shared_p["ffn"] if mixer == "shared" else p["ffn"]
+        y2, aux = _ffn_apply(ffn_p, ffn, h2, cfg)
+        if cfg.sandwich_norm:
+            y2 = _norm_apply(p["ln2_post"], y2, cfg)
+        x = x + y2
+    return x, new_cache, aux
+
+
+def _cast(tree, dtype):
+    def c(x):
+        if isinstance(x, jax.Array) and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(c, tree)
+
+
+def _apply_group(group_params, pattern: Pattern, x, cfg: ModelConfig, caches,
+                 cache_pos, positions, extra, shared_p, mode: str = "train"):
+    """Scan over the group's units. caches: tuple per pattern position of
+    stacked cache trees (or None in train mode)."""
+    n_pos = len(pattern)
+
+    def unit_body(carry, xs):
+        xx, aux = carry
+        if caches is None:
+            unit_p, unit_c = xs, (None,) * n_pos
+        else:
+            unit_p, unit_c = xs
+        # pin FSDP all-gathers INSIDE the loop: without this barrier XLA's
+        # loop-invariant code motion hoists gather(dynamic-slice(W,i)) to
+        # dynamic-slice(gather(W),i) — materializing ALL layers' weights at
+        # once (measured: +163 GB/dev on deepseek-v3 train_4k)
+        unit_p = jax.lax.optimization_barrier(unit_p)
+        unit_p = _cast(unit_p, cfg.compute_dtype)
+        new_cs = []
+        for i, kind in enumerate(pattern):
+            xx, nc, a = _apply_layer(kind, unit_p[i], xx, cfg, unit_c[i],
+                                     cache_pos, positions, extra, shared_p, mode)
+            new_cs.append(nc)
+            aux = aux + a
+        out = tuple(new_cs) if caches is not None else None
+        return (xx, aux), out
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        unit_body = jax.checkpoint(unit_body, policy=policy)
+
+    xs = group_params if caches is None else (group_params, caches)
+    (x, aux), new_caches = jax.lax.scan(unit_body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_caches, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, *, positions=None, caches=None,
+            cache_pos=None, extra=None, mode: str = "train",
+            next_tokens=None):
+    """tokens: [B, L] int32. Returns (logits, new_caches, aux_dict).
+
+    mode="train": no caches. "prefill": builds caches (pass initialized cache
+    pytree). "decode": L==1 single step. ``extra``: image/audio stub embeds.
+    ``next_tokens``: [B, L] shifted tokens for the MTP head (train only).
+    """
+    B, L = tokens.shape
+    cd = cfg.compute_dtype
+    if cache_pos is None:
+        cache_pos = jnp.zeros((), jnp.int32)
+    if positions is None:
+        positions = cache_pos + jnp.arange(L, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (B, L))
+
+    embed = params["embed"].astype(cd)
+    x = blocks.embed_lookup(embed, tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    if cfg.learned_pos:
+        pe = params["pos_embed"].astype(cd)
+        x = x + jnp.take(pe, jnp.clip(positions, 0, cfg.learned_pos - 1), axis=0)
+    x = constrain(x, "batch", None, None)
+
+    # encoder (whisper): runs once at prefill over stub frame embeddings;
+    # decode reuses the cross-KV cache and never re-encodes
+    if cfg.encoder_groups and mode != "decode":
+        if extra is None:
+            raise ValueError("audio/vlm model needs `extra` stub embeddings")
+        extra = _encode(params["encoder"], extra.astype(cd), cfg)
+    elif extra is not None:
+        extra = extra.astype(cd)
+
+    shared_p = _cast(params.get("shared_block"), cd)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for gi, (pattern, count) in enumerate(cfg.groups):
+        gp = params["groups"][gi]
+        gc = caches[gi] if caches is not None else None
+        x, ncs, aux = _apply_group(gp, pattern, x, cfg, gc, cache_pos,
+                                   positions, extra, shared_p, mode)
+        new_caches.append(ncs)
+        aux_total = aux_total + aux
+
+    h_final = _norm_apply(_cast(params["final_norm"], cd), x, cfg)
+    head = (embed.T if cfg.tie_embeddings else params["lm_head"].astype(cd))
+    logits = h_final @ head
+    logits = constrain(logits, "batch", None, "vocab_tp")
+
+    aux = {"moe_aux": aux_total}
+    if cfg.mtp and mode == "train" and next_tokens is not None:
+        mtp_p = _cast(params["mtp"], cd)
+        e_next = blocks.embed_lookup(embed, next_tokens)
+        h_mtp = jnp.concatenate([h_final, e_next], axis=-1) @ mtp_p["proj"]
+        h_mtp, _, _ = _apply_layer(cfg.groups[-1][0][-1], mtp_p["block"], h_mtp,
+                                   cfg, None, cache_pos, positions, extra, shared_p)
+        h_mtp = _norm_apply(mtp_p["norm"], h_mtp, cfg)
+        aux["mtp_logits"] = h_mtp @ head
+    return logits, (new_caches if caches is not None else None), aux
+
+
+def _encode(enc_params, frames, cfg: ModelConfig):
+    """Whisper encoder over stub frame embeddings [B, S_enc, d]."""
+    cd = cfg.compute_dtype
+    x = frames + enc_params["pos_embed"].astype(cd)[None, :frames.shape[1]]
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1], dtype=jnp.int32)[None],
+                           frames.shape[:2])
+    for gi, (pattern, count) in enumerate(cfg.encoder_groups):
+        x, _, _ = _apply_group(enc_params["groups"][gi], pattern, x, cfg, None,
+                               jnp.zeros((), jnp.int32), pos, None, None)
+    return _norm_apply(_cast(enc_params["final_norm"], cd), x, cfg)
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Cache pytree aligned with cfg.groups: per group, tuple per pattern
+    position of stacked [count, ...] caches."""
+    dtype = dtype or cfg.compute_dtype
+    out = []
+    for pattern, count in cfg.groups:
+        per_pos = []
+        for kind in pattern:
+            mixer, _ = parse_kind(kind)
+            c = _init_cache_one(mixer, cfg, batch, max_seq, dtype)
+            per_pos.append(_stack_caches(c, count))
+        out.append(tuple(per_pos))
+    return out
+
+
+def _init_cache_one(mixer: str, cfg: ModelConfig, B: int, S: int, dtype):
+    K, hd = cfg.n_kv, cfg.hd
+    if mixer in ("gqa", "global", "shared", "enc"):
+        return {"k": jnp.zeros((B, K, S, hd), dtype),
+                "v": jnp.zeros((B, K, S, hd), dtype)}
+    if mixer == "local":
+        W = min(S, cfg.window or S)
+        return {"k": jnp.zeros((B, K, W, hd), dtype),
+                "v": jnp.zeros((B, K, W, hd), dtype)}
+    if mixer == "mla":
+        return {"ckv": jnp.zeros((B, S, cfg.mla.kv_lora), dtype),
+                "kr": jnp.zeros((B, S, cfg.mla.qk_rope), dtype)}
+    if mixer == "cross":
+        S_enc = cfg.encoder_seq
+        return {"k": jnp.zeros((B, K, S_enc, hd), dtype),
+                "v": jnp.zeros((B, K, S_enc, hd), dtype)}
+    if mixer == "mamba":
+        return ssm.mamba2_init_state(cfg.mamba, B, dtype)
+    if mixer == "mlstm":
+        return ssm.mlstm_init_state(cfg.mlstm, B, dtype)
+    if mixer == "slstm":
+        return ssm.slstm_init_state(cfg.slstm, B)
+    raise ValueError(mixer)
+
+
+def _stack_caches(c, count: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (count,) + a.shape).copy()
+        if count > 1 else a[None], c)
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical sharding axes for each cache leaf (for jit shardings)."""
+    kv_seq = "kv_seq" if cfg.shard_kv_seq else None
+
+    def axes_for(path_leaf_shape):
+        return None  # resolved dynamically below
+
+    out = []
+    for pattern, count in cfg.groups:
+        per_pos = []
+        for kind in pattern:
+            mixer, _ = parse_kind(kind)
+            if mixer in ("gqa", "global", "shared", "enc", "local", "cross"):
+                a = {"k": ("layers", "batch", "kv_heads_tp", kv_seq, None),
+                     "v": ("layers", "batch", "kv_heads_tp", kv_seq, None)}
+            elif mixer == "mla":
+                a = {"ckv": ("layers", "batch", kv_seq, None),
+                     "kr": ("layers", "batch", kv_seq, None)}
+            elif mixer == "mamba":
+                a = {"ssm": ("layers", "batch", "heads_tp", None, None),
+                     "conv": ("layers", "batch", None, "heads_tp")}
+            elif mixer == "mlstm":
+                a = {"ssm": ("layers", "batch", "heads_tp", None, None),
+                     "conv": ("layers", "batch", None, "heads_tp")}
+            elif mixer == "slstm":
+                a = {"c": ("layers", "batch", "heads_tp", None),
+                     "n": ("layers", "batch", "heads_tp", None),
+                     "h": ("layers", "batch", "heads_tp", None)}
+            else:
+                raise ValueError(mixer)
+            per_pos.append(a)
+        out.append(tuple(per_pos))
+    return out

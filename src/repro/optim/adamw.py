@@ -1,0 +1,90 @@
+"""AdamW with global-norm clipping — ZeRO-sharded by construction.
+
+Optimizer state inherits each parameter's NamedSharding (m/v are tree_maps
+of the params), so FSDP ('embed_fsdp' → data axis) automatically shards the
+optimizer too — the ZeRO-3 memory layout without a dedicated wrapper. The
+update runs in fp32 regardless of param dtype (mixed-data-model: the 'host
+address space' of training state is wide; the compute path is narrow —
+HEROv2 §2.2.1 applied to numerics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def init(params) -> OptState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(m=jax.tree_util.tree_map(z, params),
+                    v=jax.tree_util.tree_map(z, params))
+
+
+def schedule(step, cfg: Config):
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / jnp.maximum(1.0, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def update(grads, opt: OptState, params, step, cfg: Config
+           ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    lr = schedule(step, cfg)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g32
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    # flatten-unzip (param trees contain structural tuples, so a tuple-leaf
+    # tree_map transpose would mis-fire)
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    m_leaves = jax.tree_util.tree_leaves(opt.m)
+    v_leaves = jax.tree_util.tree_leaves(opt.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,2 @@
+# repro.parallel — distribution: sharding rules, pipeline parallelism,
+# gradient compression. (HEROv2 scale-out: FMC/QSFP+ multi-FPGA → multi-pod.)

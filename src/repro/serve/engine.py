@@ -1,0 +1,132 @@
+"""Serving engine: mailbox-batched requests → prefill → batched decode.
+
+HEROv2 §2.3's offload machinery shapes this directly: requests land in a
+**Mailbox** (the hardware mailbox), the engine's step loop (the *offload
+manager*) drains it, batches compatible requests, and dispatches compiled
+TargetRegions (prefill_step / decode_step). Offloading is coarse-grained by
+design — one decode step over all active slots per dispatch, never per-token
+per-request host round-trips.
+
+Continuous batching: fixed decode slots; finished sequences free their slot
+which the next mailbox drain refills (prefill into that slot's cache rows).
+Stats mirror hero_perf counters: queue latency, batch occupancy, steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import Mailbox, TargetRegion
+from repro.models import blocks, transformer
+from repro.serve.kvcache import CachePool
+from repro.train import step as steps
+
+
+@dataclasses.dataclass
+class Request:
+    seq_id: int
+    prompt: np.ndarray          # [L] int32
+    max_new: int = 16
+    t_submit: float = 0.0
+    tokens_out: Optional[List[int]] = None
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: transformer.ModelConfig, params, n_slots: int = 4,
+                 max_seq: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.pool = CachePool(cfg, n_slots, max_seq)
+        self.mailbox = Mailbox(depth=256)
+        self.active: Dict[int, Request] = {}       # slot -> request
+        self.greedy = greedy
+        self._decode = TargetRegion(steps.make_decode_step(cfg), name="decode")
+        self._prefill_single = TargetRegion(self._prefill_one, name="prefill")
+        self.stats = {"decode_steps": 0, "prefills": 0, "batch_occupancy": []}
+
+    # -- host API -------------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        req.t_submit = time.perf_counter()
+        req.tokens_out = []
+        return self.mailbox.put(req)
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            self._admit()
+            if not self.active:
+                if len(self.mailbox) == 0:
+                    break
+                continue
+            finished.extend(self._decode_step())
+        self.pool  # noqa: B018
+        return finished
+
+    # -- internals --------------------------------------------------------
+    def _prefill_one(self, params, tokens, caches, slot, length):
+        """Prefill one request's rows into the pool caches at `slot`."""
+        logits, new_caches, _ = transformer.forward(
+            params, tokens, self.cfg, caches=caches,
+            cache_pos=jnp.zeros((), jnp.int32), mode="prefill")
+        # write back only this slot's rows (axis 1 = batch in stacked caches)
+        def merge(old, new):
+            return jax.lax.dynamic_update_slice_in_dim(
+                old, jax.lax.dynamic_slice_in_dim(new, slot, 1, axis=1)
+                .astype(old.dtype), slot, axis=1)
+        merged = jax.tree_util.tree_map(merge, caches, new_caches)
+        return logits[:, length - 1], merged
+
+    def _admit(self):
+        while True:
+            free = int(np.sum(self.pool.seq_ids < 0))
+            if free == 0:
+                break
+            reqs = self.mailbox.drain(1)
+            if not reqs:
+                break
+            req = reqs[0]
+            slot = self.pool.alloc_slot(req.seq_id)
+            L = len(req.prompt)
+            toks = np.zeros((self.pool.n_slots, L), np.int32)
+            toks[slot] = req.prompt
+            logits_last, self.pool.caches = self._prefill_single(
+                self.params, jnp.asarray(toks), self.pool.caches,
+                slot, L)
+            nxt = int(jnp.argmax(logits_last[slot]))
+            req.tokens_out.append(nxt)
+            self.pool.lengths[slot] = L + 1
+            self.active[slot] = req
+            self.stats["prefills"] += 1
+
+    def _decode_step(self) -> List[Request]:
+        B = self.pool.n_slots
+        toks = np.zeros((B, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.tokens_out[-1]
+        # single shared cache_pos: slots decode at their own lengths; we use
+        # per-slot validity masks inside attention, so pass max length
+        pos = int(self.pool.lengths.max()) - 1
+        logits, self.pool.caches = self._decode(
+            self.params, jnp.asarray(toks), self.pool.caches,
+            jnp.asarray(pos, jnp.int32))
+        self.stats["decode_steps"] += 1
+        self.stats["batch_occupancy"].append(len(self.active) / B)
+        finished = []
+        for slot in list(self.active):
+            req = self.active[slot]
+            nxt = int(jnp.argmax(logits[slot, -1]))
+            req.tokens_out.append(nxt)
+            self.pool.lengths[slot] += 1
+            if len(req.tokens_out) >= req.max_new or \
+               self.pool.lengths[slot] >= self.pool.max_seq - 1:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                self.pool.free_slot(slot)
+        return finished

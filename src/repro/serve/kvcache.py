@@ -1,0 +1,82 @@
+"""KV-cache management for serving: dense per-slot caches + vmm-paged pool.
+
+Layouts (built by models.transformer.init_caches, sharded per
+cache_logical_axes):
+  * GQA      — k/v [units, B, K, S, hd]
+  * window   — ring buffers of W slots (gemma3 local: 60/62 layers at W=1024
+               regardless of context — the long_500k enabler)
+  * MLA      — compressed [units, B, S, kv_lora] + [units, B, S, rope] —
+               576 B/token vs 64 KiB/token full K/V (the paper-technique cell)
+  * SSM      — constant-size states (no S dimension at all)
+
+The **paged pool** (vmm.PagedAllocator) adds HEROv2's IOMMU insight to
+serving: sequences own page lists; the device-side page table translates
+logical token position → physical page. Page-table rows are int32; *byte*
+offsets of pages can exceed 2³¹ (500k-ctx × many slots) — offset dtype goes
+through the addrspace promotion analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import addrspace, vmm
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class CachePool:
+    """Slot-based serving pool: fixed B decode slots over the model caches."""
+    cfg: transformer.ModelConfig
+    n_slots: int
+    max_seq: int
+    caches: object = None
+    lengths: Optional[np.ndarray] = None        # host-side per-slot lengths
+    seq_ids: Optional[np.ndarray] = None        # -1 = free
+
+    def __post_init__(self):
+        if self.caches is None:
+            self.caches = transformer.init_caches(self.cfg, self.n_slots,
+                                                  self.max_seq)
+        self.lengths = np.zeros(self.n_slots, np.int64)
+        self.seq_ids = np.full(self.n_slots, -1, np.int64)
+
+    def alloc_slot(self, seq_id: int) -> int:
+        free = np.where(self.seq_ids < 0)[0]
+        if len(free) == 0:
+            raise MemoryError("no free decode slots")
+        s = int(free[0])
+        self.seq_ids[s] = seq_id
+        self.lengths[s] = 0
+        return s
+
+    def free_slot(self, slot: int) -> None:
+        self.seq_ids[slot] = -1
+        self.lengths[slot] = 0
+
+    def token_bytes(self) -> int:
+        """Per-token cache footprint (all layers) — capacity planning."""
+        total = 0
+        for gi, (pattern, count) in enumerate(self.cfg.groups):
+            for kind in pattern:
+                mixer, _ = transformer.parse_kind(kind)
+                if mixer in ("gqa", "global", "shared"):
+                    total += count * 2 * self.cfg.n_kv * self.cfg.hd * 2
+                elif mixer == "mla":
+                    total += count * (self.cfg.mla.kv_lora + self.cfg.mla.qk_rope) * 2
+                # window/ssm: constant, not per-token beyond W
+        return total
+
+
+def paged_pool(cfg: transformer.ModelConfig, hbm_budget_bytes: int,
+               page_tokens: int = 64) -> vmm.PagedAllocator:
+    """Budget a vmm paged allocator from the per-token cache footprint."""
+    pool = CachePool(cfg, n_slots=1, max_seq=page_tokens)  # probe footprint
+    tb = max(1, pool.token_bytes())
+    n_pages = max(1, hbm_budget_bytes // (tb * page_tokens))
+    alloc = vmm.PagedAllocator(n_pages, page_tokens, tb)
+    return alloc

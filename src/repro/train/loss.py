@@ -1,0 +1,48 @@
+"""Losses. CE uses the legalized label gather (core.addrspace): labels index
+rows of [N, vocab] logits via take_along_axis on the vocab axis — per-row
+int32 arithmetic only, never a flat N·vocab offset (which exceeds int32 at
+gemma3/minitron scale: 2·4096·262144 ≈ 2.1e9 > 2³¹)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addrspace
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """logits: [B, L, V]; labels: [B, L] int32. Mean CE over all tokens."""
+    B, L, V = logits.shape
+    # promotion analysis: the flat index space B·L·V may exceed int32 — the
+    # per-row gather below never materializes it (NATIVE32 device arithmetic)
+    assert addrspace.index_dtype((V,)) == jnp.int32
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)                       # [B, L]
+    gold = jnp.take_along_axis(lg, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]               # [B, L]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    metrics = {"nll": loss, "ppl_log": loss}
+    if z_loss:
+        zl = z_loss * jnp.mean(jnp.square(lse))
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics
+
+
+def lm_loss(logits, labels, aux: Dict, mtp_weight: float = 0.3,
+            moe_aux_weight: float = 1.0, z_loss: float = 0.0):
+    """Main CE + MoE load-balance aux + MTP (deepseek) CE on t+2 targets."""
+    loss, metrics = cross_entropy(logits, labels, z_loss)
+    if aux.get("moe_aux") is not None:
+        loss = loss + moe_aux_weight * aux["moe_aux"]
+        metrics["moe_aux"] = aux["moe_aux"]
+    if aux.get("mtp_logits") is not None and aux.get("mtp_labels") is not None:
+        mtp_l, _ = cross_entropy(aux["mtp_logits"], aux["mtp_labels"])
+        loss = loss + mtp_weight * mtp_l
+        metrics["mtp_loss"] = mtp_l
+    metrics["loss"] = loss
+    return loss, metrics

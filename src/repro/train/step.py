@@ -1,0 +1,109 @@
+"""train_step: forward CE → backward → AdamW, with optional microbatch
+gradient accumulation and gradient compression (parallel/compression.py).
+
+This is the function the dry-run lowers for the train_4k shape. Offloading
+(HEROv2 §2.3) wraps it as a TargetRegion; remat policy comes from the model
+config; FSDP all-gathers overlap with the layer scan under XLA's
+latency-hiding scheduler (enabled via flags in launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.optim import adamw
+from repro.parallel.sharding import constrain
+from repro.train import loss as loss_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.OptState
+    step: jax.Array
+
+
+def make_loss_fn(cfg: transformer.ModelConfig, mtp_weight: float = 0.3):
+    def loss_fn(params, batch):
+        tokens = constrain(batch["tokens"], "batch", None)
+        labels = constrain(batch["labels"], "batch", None)
+        nxt = batch.get("next_tokens")
+        logits, _, aux = transformer.forward(
+            params, tokens, cfg, extra=batch.get("extra"),
+            mode="train", next_tokens=nxt)
+        if cfg.mtp and nxt is not None:
+            aux["mtp_labels"] = batch.get("mtp_labels")
+        return loss_lib.lm_loss(logits, labels, aux, mtp_weight=mtp_weight)
+    return loss_fn
+
+
+def make_train_step(cfg: transformer.ModelConfig, opt_cfg: adamw.Config,
+                    grad_accum: int = 1, compressor=None
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Returns train_step(state, batch) -> (state', metrics).
+
+    grad_accum > 1 splits the batch into microbatches scanned sequentially
+    (activation memory ÷ grad_accum; the distributed-optimization lever for
+    memory-bound cells). ``compressor`` (parallel.compression.Compressor)
+    intercepts gradients before the optimizer — bf16/int8 all-reduce with
+    error feedback.
+    """
+    loss_fn = make_loss_fn(cfg)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if grad_accum <= 1:
+            (loss, metrics), grads = vg(state.params, batch)
+        else:
+            def micro(acc, mb):
+                (l, m), g = vg(state.params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc, (l, m)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            gsum, (losses, ms) = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gsum)
+            loss = jnp.mean(losses)
+            metrics = {k: jnp.mean(v) for k, v in ms.items()}
+            metrics["loss"] = loss
+        if compressor is not None:
+            grads = compressor(grads)
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state.opt, state.params, state.step, opt_cfg)
+        metrics = dict(metrics, **opt_metrics,
+                       tokens=jnp.asarray(batch["tokens"].size, jnp.float32))
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------------------
+# serving steps (lowered by the dry-run for prefill/decode shapes)
+# ----------------------------------------------------------------------
+def make_prefill_step(cfg: transformer.ModelConfig):
+    def prefill_step(params, tokens, caches, extra=None):
+        logits, caches, _ = transformer.forward(
+            params, tokens, cfg, caches=caches,
+            cache_pos=jnp.zeros((), jnp.int32), extra=extra, mode="prefill")
+        return logits[:, -1:], caches
+    return prefill_step
+
+
+def make_decode_step(cfg: transformer.ModelConfig):
+    def decode_step(params, tokens, caches, cache_pos):
+        """tokens: [B,1]; cache_pos: scalar current length."""
+        logits, caches, _ = transformer.forward(
+            params, tokens, cfg, caches=caches, cache_pos=cache_pos,
+            mode="decode")
+        return logits, caches
+    return decode_step

@@ -1,0 +1,204 @@
+"""Hypothesis property tests for the core (paper-contribution) modules."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import addrspace, autodma, heromem, perf, vmm
+
+SET = settings(max_examples=50, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# heromem — allocator invariants (paper §2.4: o1heap model, canary)
+# --------------------------------------------------------------------------
+@SET
+@given(st.lists(st.integers(min_value=1, max_value=1 << 20), min_size=1,
+                max_size=60))
+def test_heromem_alloc_free_restores_capacity(sizes):
+    lvl = heromem.SpmLevel("t", 16 << 20)
+    cap0 = lvl.capacity()
+    hs = [h for h in (lvl.malloc(s) for s in sizes) if h is not None]
+    for h in hs:
+        lvl.free(h)
+    # o1heap model: freed bins remain carved, but capacity never exceeds cap0
+    assert lvl.capacity() <= cap0
+    assert lvl.in_use() == 0
+
+
+@SET
+@given(st.lists(st.integers(min_value=1, max_value=1 << 16), min_size=2,
+                max_size=40))
+def test_heromem_no_overlap(sizes):
+    lvl = heromem.SpmLevel("t", 32 << 20)
+    spans = []
+    for s in sizes:
+        h = lvl.malloc(s)
+        if h is None:
+            continue
+        b = lvl._blocks[h]
+        spans.append((b.offset, b.offset + b.size))
+    spans.sort()
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0, "allocations overlap"
+
+
+def test_heromem_canary_detects_overflow():
+    lvl = heromem.SpmLevel("t", 1 << 20)
+    h = lvl.malloc(100)
+    lvl.smash_canary(h)
+    with pytest.raises(heromem.HeapOverflow):
+        lvl.free(h)
+
+
+def test_paper_tile_rule_matches_paper_numbers():
+    """Paper §3.1: L = 28 Ki words, N=3 arrays, D=2 → S = 97 (darknet)."""
+    side = heromem.paper_tile_side(3, 2, capacity_words=28 * 1024)
+    assert side == 97
+
+
+# --------------------------------------------------------------------------
+# addrspace — (hi,lo) int32 arithmetic vs int64 oracle (paper §2.2.1)
+# --------------------------------------------------------------------------
+@SET
+@given(st.integers(min_value=0, max_value=2**62 - 1))
+def test_split_combine_roundtrip(x):
+    hi, lo = addrspace.split64(np.int64(x))
+    assert int(addrspace.combine32(hi, lo)) == x
+
+
+@SET
+@given(st.integers(min_value=0, max_value=2**40),
+       st.integers(min_value=1, max_value=2**15 - 1))
+def test_legalized_long_division(flat, C):
+    """The 16-bit-limb long division used by legalized_flat_gather."""
+    rows = 64
+    table = jnp.arange(rows * C, dtype=jnp.float32).reshape(rows, C)
+    flat = flat % (rows * C)
+    hi, lo = addrspace.split64(np.int64(flat))
+    got = addrspace.legalized_flat_gather(
+        table, jnp.asarray([hi], jnp.int32), jnp.asarray([lo % (1 << 32)], jnp.int32))
+    assert float(got[0]) == float(flat)
+
+
+@SET
+@given(st.tuples(st.integers(1, 1 << 17), st.integers(1, 1 << 15)))
+def test_promotion_analysis(shape):
+    flat = shape[0] * shape[1]
+    assert addrspace.needs_promotion(shape) == (flat > addrspace.INT32_MAX)
+    dt = addrspace.index_dtype(shape)
+    assert dt == (jnp.int64 if flat > addrspace.INT32_MAX else jnp.int32)
+
+
+def test_gemma3_embedding_is_the_motivating_case():
+    emb = (262144, 5376)
+    assert not addrspace.needs_promotion(emb)            # elements: just fits
+    assert addrspace.needs_promotion(emb, itemsize=4)    # f32 byte offsets: no
+    assert addrspace.index_dtype(emb[:1]) == jnp.int32   # row gather: NATIVE
+
+
+# --------------------------------------------------------------------------
+# autodma — planner invariants (paper §2.2.2)
+# --------------------------------------------------------------------------
+@SET
+@given(st.integers(1, 16), st.integers(1, 16), st.integers(1, 16))
+def test_autodma_budget_and_coverage(m, n, k):
+    M, N, K = m * 128, n * 128, k * 128
+    spec = autodma.matmul_spec(M, N, K)
+    budget = 2 << 20
+    p = autodma.plan(spec, budget=budget)
+    assert p.vmem_bytes <= budget
+    # grid × tiles covers the iteration space
+    for g, ax in enumerate(p.grid_axes):
+        assert p.grid[g] * p.tiles[ax] >= spec.loop_bounds[ax]
+    # traffic never below the compulsory minimum (each array moved once)
+    compulsory = sum(math.prod(a.shape) * a.itemsize for a in spec.arrays)
+    assert p.traffic_bytes >= compulsory
+
+
+@SET
+@given(st.integers(2, 12), st.integers(2, 12), st.integers(2, 12))
+def test_autodma_beats_or_matches_paper_heuristic(m, n, k):
+    """At EQUAL buffering the planner's traffic must be ≤ the paper's
+    equal-side rule (paper mode is single-buffered per §3.1, so the fair
+    comparison disables the planner's double-buffer reserve too; the
+    overlap-vs-capacity trade itself is measured in bench_autodma)."""
+    spec = autodma.matmul_spec(m * 128, n * 128, k * 128)
+    budget = 4 << 20
+    auto = autodma.plan(spec, budget=budget, double_buffer=False)
+    paper = autodma.plan(spec, budget=budget, mode="paper")
+    assert auto.traffic_bytes <= paper.traffic_bytes * 1.001
+
+
+def test_autodma_unmodified_traffic_is_streaming():
+    spec = autodma.matmul_spec(512, 512, 512)
+    p = autodma.plan(spec, mode="unmodified")
+    assert p.traffic_bytes == autodma.streaming_traffic(spec)
+    tiled = autodma.plan(spec, budget=2 << 20)
+    assert tiled.traffic_bytes < p.traffic_bytes  # tiling must help
+
+
+# --------------------------------------------------------------------------
+# vmm — translation correctness (paper §2.1/2.3 IOMMU)
+# --------------------------------------------------------------------------
+def test_vmm_page_table_walk_and_tlb():
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = NamedSharding(mesh, P("data"))
+    table = vmm.ShardingPageTable((64, 8), sh)
+    tr = table.walk((5, 3))
+    assert tr.local_offset == (5, 3)
+    tlb = vmm.Tlb(table, page_shape=(8, 8), capacity=4)
+    for i in range(16):
+        tlb.translate((i % 64, i % 8))
+    assert tlb.hits + tlb.misses == 16
+    assert 0 <= tlb.hit_rate <= 1
+
+
+@SET
+@given(st.integers(1, 64), st.integers(1, 1024))
+def test_paged_allocator_invariants(n_seqs, tokens):
+    alloc = vmm.PagedAllocator(n_pages=4096, page_tokens=16, token_bytes=64)
+    allocated = []
+    try:
+        for s in range(n_seqs):
+            pages = alloc.alloc_seq(s, tokens)
+            allocated.append((s, pages))
+    except MemoryError:
+        pass
+    all_pages = [p for _, ps in allocated for p in ps]
+    assert len(all_pages) == len(set(all_pages)), "page double-allocated"
+    for s, _ in allocated:
+        alloc.free_seq(s)
+    assert alloc.free_pages == 4096
+
+
+# --------------------------------------------------------------------------
+# perf — HLO collective parser on synthetic lines
+# --------------------------------------------------------------------------
+def test_collective_parser():
+    hlo = """
+  %all-gather.1 = f32[896,8]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %all-reduce.2 = bf16[16,1024]{1,0} all-reduce(%y), replica_groups=[32,8]<=[256], to_apply=%add
+  %all-gather-done.3 = f32[8,8]{1,0} all-gather-done(%ags)
+  %collective-permute.4 = f32[4,4]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    out = perf.collective_bytes(hlo)
+    ag = 896 * 8 * 4 * (15 / 16)
+    ar = 16 * 1024 * 2 * 2 * (7 / 8)
+    cp = 4 * 4 * 4
+    assert abs(out["all-gather"] - ag) < 1
+    assert abs(out["all-reduce"] - ar) < 1
+    assert abs(out["collective-permute"] - cp) < 1
+    assert out["counts"]["all-gather"] == 1  # -done not double counted
+
+
+def test_roofline_terms():
+    rl = perf.Roofline(flops=197e12 * 256, hbm_bytes=0, coll_bytes=0,
+                       chips=256, model_flops=197e12 * 256 * 0.5)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert rl.dominant == "compute"
+    assert abs(rl.roofline_fraction - 0.5) < 1e-9

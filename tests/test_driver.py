@@ -1,0 +1,73 @@
+"""Driver-level tests: failure injection + checkpoint-rollback recovery, and
+the serving driver end-to-end."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+def test_train_driver_recovers_from_injected_failure(tmp_path):
+    from repro.launch.train import train
+    losses = train("qwen2-0.5b", smoke=True, steps_total=12,
+                   ckpt_dir=str(tmp_path), batch=4, seq=16, lr=1e-3,
+                   ckpt_every=5, inject_failure=8)
+    # 12 requested steps + replayed ones after rollback to step 5
+    assert len(losses) >= 12
+    assert np.isfinite(losses).all()
+    # a checkpoint exists at the final step
+    from repro.checkpoint.manager import CheckpointManager
+    assert CheckpointManager(str(tmp_path)).latest_step() == 12
+
+
+def test_train_driver_restart_resumes(tmp_path):
+    from repro.launch.train import train
+    train("qwen2-0.5b", smoke=True, steps_total=6, ckpt_dir=str(tmp_path),
+          batch=4, seq=16, lr=1e-3, ckpt_every=3)
+    # second invocation restores (elastic restart path) and continues
+    losses = train("qwen2-0.5b", smoke=True, steps_total=9,
+                   ckpt_dir=str(tmp_path), batch=4, seq=16, lr=1e-3,
+                   ckpt_every=3)
+    assert len(losses) == 3  # only steps 6..9 run
+
+
+def test_grad_accum_matches_plain():
+    """grad_accum=2 over 2×batch must track plain within tolerance."""
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.data import pipeline as dp
+    from repro.models import blocks, transformer
+    from repro.optim import adamw
+    from repro.train import step as steps
+
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+
+    def mk_state():
+        return steps.TrainState(params=params, opt=adamw.init(params),
+                                step=jnp.zeros((), jnp.int32))
+
+    dcfg = dp.DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8, seed=1)
+    b = {k: jnp.asarray(v) for k, v in dp.make_batch(dcfg, 0).items()}
+    ocfg = adamw.Config(lr=1e-3, warmup_steps=1)
+    s1, m1 = jax.jit(steps.make_train_step(cfg, ocfg))(mk_state(), b)
+    s2, m2 = jax.jit(steps.make_train_step(cfg, ocfg, grad_accum=2))(mk_state(), b)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-3)
+    l1 = jax.tree_util.tree_leaves(s1.params)[0]
+    l2 = jax.tree_util.tree_leaves(s2.params)[0]
+    # Adam normalizes near-zero grads to ±lr-scale updates, so bf16 reduction
+    # -order noise flips signs elementwise; the bound is ABSOLUTE: ≤ 2·lr·warm
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2.5e-3)
+
+
+def test_serve_driver_cli():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--requests", "3",
+         "--slots", "2", "--max-new", "3", "--max-seq", "32"],
+        env=env, capture_output=True, text=True, timeout=400)
+    assert "3 requests" in r.stdout, r.stdout + r.stderr

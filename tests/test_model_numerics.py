@@ -1,0 +1,186 @@
+"""Numerical invariants of the model substrates:
+  * chunked GLA == step-by-step recurrence (mamba2/mLSTM math),
+  * chunk-size invariance,
+  * prefill+decode == full forward (GQA and MLA absorbed-decode paths),
+  * sliding-window ring buffer correctness.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention, ssm
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*s):
+    return jnp.asarray(RNG.standard_normal(s).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# gla core
+# --------------------------------------------------------------------------
+def gla_naive(q, k, v, ld, lg):
+    """Step recurrence oracle: S = e^ld S + e^lg k vᵀ; y = q·S."""
+    B, L, H, N = q.shape
+    P = v.shape[-1]
+    S = np.zeros((B, H, N, P), np.float64)
+    ys = []
+    for t in range(L):
+        S = np.exp(np.asarray(ld[:, t], np.float64))[..., None, None] * S + \
+            np.exp(np.asarray(lg[:, t], np.float64))[..., None, None] * \
+            np.einsum("bhn,bhp->bhnp", np.asarray(q[:, t] * 0 + k[:, t], np.float64),
+                      np.asarray(v[:, t], np.float64))
+        ys.append(np.einsum("bhn,bhnp->bhp", np.asarray(q[:, t], np.float64), S))
+    return np.stack(ys, 1), S
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+def test_gla_chunked_matches_recurrence(chunk):
+    B, L, H, N, P = 2, 32, 3, 8, 5
+    q, k, v = rand(B, L, H, N), rand(B, L, H, N), rand(B, L, H, P)
+    ld = -jnp.abs(rand(B, L, H)) * 0.3
+    lg = rand(B, L, H) * 0.3
+    y, S = ssm.gla_chunked(q, k, v, ld, lg, chunk=chunk)
+    y_ref, S_ref = gla_naive(q, k, v, ld, lg)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S), S_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_gla_chunk_size_invariance():
+    B, L, H, N, P = 1, 48, 2, 6, 6
+    q, k, v = rand(B, L, H, N), rand(B, L, H, N), rand(B, L, H, P)
+    ld = -jnp.abs(rand(B, L, H)) * 0.2
+    y1, S1 = ssm.gla_chunked(q, k, v, ld, chunk=6)
+    y2, S2 = ssm.gla_chunked(q, k, v, ld, chunk=48)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S1), np.asarray(S2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_gla_step_continues_chunked():
+    """decode step after a chunked prefill == full chunked run."""
+    B, L, H, N, P = 1, 17, 2, 4, 4
+    q, k, v = rand(B, L, H, N), rand(B, L, H, N), rand(B, L, H, P)
+    ld = -jnp.abs(rand(B, L, H)) * 0.2
+    y_full, S_full = ssm.gla_chunked(q, k, v, ld, chunk=8)
+    y_pre, S_pre = ssm.gla_chunked(q[:, :-1], k[:, :-1], v[:, :-1],
+                                   ld[:, :-1], chunk=8)
+    y_last, S_last = ssm.gla_step(S_pre, q[:, -1], k[:, -1], v[:, -1],
+                                  ld[:, -1])
+    np.testing.assert_allclose(np.asarray(y_last), np.asarray(y_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S_last), np.asarray(S_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# mamba2 / mlstm block-level decode consistency
+# --------------------------------------------------------------------------
+def test_mamba2_decode_matches_parallel():
+    cfg = ssm.Mamba2Config(d_model=32, d_state=8, head_dim=8, chunk=8)
+    p_t = ssm.init_mamba2(jax.random.PRNGKey(0), cfg)
+    from repro.models.blocks import split_params
+    p, _ = split_params(p_t)
+    B, L = 1, 12
+    x = rand(B, L, 32) * 0.5
+    y_par, _ = ssm.mamba2_forward(p, x, cfg, state=None)
+    st = ssm.mamba2_init_state(cfg, B)
+    ys = []
+    for t in range(L):
+        y_t, st = ssm.mamba2_forward(p, x[:, t:t + 1], cfg, state=st)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_par),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_mlstm_decode_matches_parallel():
+    cfg = ssm.MlstmConfig(d_model=32, n_heads=2, chunk=8)
+    from repro.models.blocks import split_params
+    p, _ = split_params(ssm.init_mlstm(jax.random.PRNGKey(1), cfg))
+    B, L = 1, 10
+    x = rand(B, L, 32) * 0.5
+    y_par, _ = ssm.mlstm_forward(p, x, cfg, state=None)
+    st = ssm.mlstm_init_state(cfg, B)
+    ys = []
+    for t in range(L):
+        y_t, st = ssm.mlstm_forward(p, x[:, t:t + 1], cfg, state=st)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_par), rtol=5e-3, atol=5e-3)
+
+
+# --------------------------------------------------------------------------
+# attention: prefill+decode == full forward
+# --------------------------------------------------------------------------
+def _gqa_cfg(**kw):
+    base = dict(d_model=32, n_heads=4, n_kv=2, head_dim=8, q_chunk=8,
+                kv_chunk=8)
+    base.update(kw)
+    return attention.AttnConfig(**base)
+
+
+def test_gqa_prefill_decode_matches_full():
+    cfg = _gqa_cfg()
+    from repro.models.blocks import split_params
+    p, _ = split_params(attention.init_gqa(jax.random.PRNGKey(2), cfg))
+    B, L, S = 2, 9, 16
+    x = rand(B, L, 32) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    y_full, _ = attention.gqa_forward(p, x, pos, cfg)           # no cache
+    cache = {"k": jnp.zeros((B, 2, S, 8)), "v": jnp.zeros((B, 2, S, 8))}
+    y_pre, cache = attention.gqa_forward(p, x[:, :-1], pos[:, :-1], cfg,
+                                         cache=cache,
+                                         cache_pos=jnp.asarray(0))
+    y_dec, _ = attention.gqa_forward(p, x[:, -1:], pos[:, -1:], cfg,
+                                     cache=cache,
+                                     cache_pos=jnp.asarray(L - 1))
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_full[:, :-1]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full[:, -1:]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    cfg = attention.MlaConfig(d_model=32, n_heads=4, q_lora=16, kv_lora=8,
+                              qk_nope=8, qk_rope=4, v_dim=8, q_chunk=8,
+                              kv_chunk=8)
+    from repro.models.blocks import split_params
+    p, _ = split_params(attention.init_mla(jax.random.PRNGKey(3), cfg))
+    B, L, S = 1, 8, 12
+    x = rand(B, L, 32) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    y_full, _ = attention.mla_forward(p, x, pos, cfg)           # expanded path
+    cache = {"ckv": jnp.zeros((B, S, 8)), "kr": jnp.zeros((B, S, 4))}
+    y_abs, _ = attention.mla_forward(p, x, pos, cfg, cache=cache,
+                                     cache_pos=jnp.asarray(0))  # absorbed path
+    np.testing.assert_allclose(np.asarray(y_abs), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Window-limited cache (ring) must equal full-cache window attention."""
+    W = 4
+    cfg = _gqa_cfg(window=W)
+    from repro.models.blocks import split_params
+    p, _ = split_params(attention.init_gqa(jax.random.PRNGKey(4), cfg))
+    B, L = 1, 10
+    x = rand(B, L, 32) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    y_full, _ = attention.gqa_forward(p, x, pos, cfg)
+    # decode step-by-step with a ring cache of only W slots
+    cache = {"k": jnp.zeros((B, 2, W, 8)), "v": jnp.zeros((B, 2, W, 8))}
+    ys = []
+    for t in range(L):
+        y_t, cache = attention.gqa_forward(
+            p, x[:, t:t + 1], pos[:, t:t + 1], cfg, cache=cache,
+            cache_pos=jnp.asarray(t))
+        ys.append(y_t)
+    y_ring = jnp.concatenate(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_ring), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,68 @@
+"""parallel.sharding resolution rules — the dry-run's correctness bedrock."""
+import subprocess
+import sys
+import os
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.parallel import sharding as sh
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh(multi_pod=True)   # (2,16,16) pod/data/model
+
+with sh.use_mesh(mesh):
+    # batch binds to (pod, data) when divisible
+    assert sh.resolve(("batch", None), (256, 4096)) == P(("pod", "data"), None)
+    # non-divisible batch (B=1) drops the binding entirely
+    assert sh.resolve(("batch", None), (1, 4096)) == P(None, None)
+    # heads_tp drops when 14 % 16 != 0 ...
+    assert sh.resolve((None, None, "heads_tp", None), (8, 128, 14, 64)) == \
+        P(None, None, None, None)
+    # ... but binds when the flat dim divides
+    assert sh.resolve((None, None, "heads_tp"), (8, 128, 896)) == \
+        P(None, None, "model")
+    # a mesh axis is never reused across dims of one array
+    spec = sh.resolve(("embed_fsdp", "embed_fsdp"), (64, 64))
+    assert spec == P("data", None)
+    # expert binding: 256 % 16 == 0
+    assert sh.resolve(("expert", "embed_fsdp", None), (256, 7168, 2048)) == \
+        P("model", "data", None)
+    # 40 experts do not divide 16 → dropped (granite case)
+    assert sh.resolve(("expert", "embed_fsdp", None), (40, 1536, 512)) == \
+        P(None, "data", None)
+    # kv_seq unbound by default...
+    assert sh.resolve(("batch", "kv_heads_tp", "kv_seq", None),
+                      (128, 16, 32768, 128)) == \
+        P(("pod", "data"), "model", None, None)
+
+# ...and bound under the SP override
+with sh.use_mesh(mesh, {"kv_seq": ("model",), "kv_heads_tp": None}):
+    assert sh.resolve(("batch", "kv_heads_tp", "kv_seq", None),
+                      (128, 2, 32768, 64)) == \
+        P(("pod", "data"), None, "model", None)
+
+# single-pod mesh: 'pod' silently absent
+mesh1 = make_production_mesh(multi_pod=False)
+with sh.use_mesh(mesh1):
+    assert sh.resolve(("batch", None), (256, 4096)) == P("data", None)
+print("SHARDING_OK")
+"""
+
+
+def test_sharding_resolution_rules():
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert "SHARDING_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_stack_axes():
+    from repro.parallel.sharding import stack_axes
+    assert stack_axes(("embed_fsdp", "mlp_tp")) == \
+        ("layers", "embed_fsdp", "mlp_tp")

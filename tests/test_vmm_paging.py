@@ -1,0 +1,73 @@
+"""vmm paged-KV integration — the IOMMU analogue under serving pressure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import addrspace, vmm
+from repro.serve import kvcache
+
+
+def test_paged_offset_promotion_at_500k_scale():
+    """gemma3-27b at 500k context: page byte-offsets exceed int32 → HOST64."""
+    cfg = configs.get_config("gemma3-27b")
+    pool = kvcache.CachePool(configs.get_smoke_config("gemma3-27b"),
+                             n_slots=1, max_seq=64)
+    # full-config per-token bytes: 10 global layers × 16 kv × 128 hd × 2(k,v) × 2B
+    tb_full = 10 * 2 * 16 * 128 * 2
+    alloc = vmm.PagedAllocator(n_pages=524288 // 64 * 8, page_tokens=64,
+                               token_bytes=tb_full)
+    assert alloc.page_bytes * alloc.n_pages > addrspace.INT32_MAX
+    assert alloc.offset_dtype() == jnp.int64          # promoted
+    small = vmm.PagedAllocator(n_pages=1024, page_tokens=16, token_bytes=64)
+    assert small.offset_dtype() == jnp.int32          # provably native
+
+
+def test_paged_pool_lifecycle():
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    alloc = kvcache.paged_pool(cfg, hbm_budget_bytes=1 << 20, page_tokens=16)
+    p0 = alloc.free_pages
+    pages = alloc.alloc_seq(0, 100)              # 100 tokens → 7 pages
+    assert len(pages) == 7
+    extra = alloc.extend_seq(0, 30, cur_len=100)  # grow past page boundary
+    assert len(extra) >= 1
+    table = alloc.page_table(0, max_pages=16)
+    assert (table >= 0).sum() == len(pages) + len(extra)
+    alloc.free_seq(0)
+    assert alloc.free_pages == p0
+
+
+def test_cache_pool_token_bytes_mla_vs_gqa():
+    """MLA latent cache must be ~2 orders smaller per token than full GQA
+    (the paper-technique headline: 576 B vs 64 KiB per token)."""
+    ds = kvcache.CachePool(configs.get_smoke_config("deepseek-v3-671b"),
+                           n_slots=1, max_seq=16)
+    yi = kvcache.CachePool(configs.get_smoke_config("yi-34b"),
+                           n_slots=1, max_seq=16)
+    # compare at FULL config analytically: MLA latent (576 B/token/layer)
+    # vs what deepseek's EXPANDED K/V would be (128 heads × (192+128) dims)
+    m = configs.get_config("deepseek-v3-671b").mla
+    mla_per_layer = (m.kv_lora + m.qk_rope) * 2                       # bf16
+    expanded_per_layer = m.n_heads * (m.qk_nope + m.qk_rope + m.v_dim) * 2
+    assert expanded_per_layer / mla_per_layer > 70    # ~71× compression
+    # and MLA (per token, all layers) beats even yi-34b's 8-head GQA
+    full_yi = configs.get_config("yi-34b")
+    assert mla_per_layer * 61 < full_yi.n_kv * full_yi.hd * 2 * 2 * 60
+    assert ds.token_bytes() > 0 and yi.token_bytes() > 0
+
+
+def test_tlb_eviction_and_prefetch():
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    table = vmm.ShardingPageTable((1024,), NamedSharding(mesh, P("data")))
+    tlb = vmm.Tlb(table, page_shape=(64,), capacity=2)
+    tlb.translate((0,))
+    tlb.translate((128,))
+    tlb.translate((512,))   # evicts page 0 (LRU, capacity 2)
+    h0 = tlb.hits
+    tlb.translate((1,))     # page 0 again → miss (was evicted)
+    assert tlb.misses == 4
+    tlb.prefetch((700,))
+    tlb.translate((701,))   # prefetched → hit
+    assert tlb.hits == h0 + 1
