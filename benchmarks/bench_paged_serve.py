@@ -1,0 +1,106 @@
+"""Dense-slot vs paged-KV serving: throughput and HBM footprint across
+ragged request mixes.
+
+The dense pool must size every slot for the *longest* admissible sequence
+(n_slots × max_seq × token_bytes, resident for the whole run). The paged pool
+holds physical pages sized to what the mix actually touches — for ragged
+mixes (many short requests, a few long ones) the peak page usage is a
+fraction of the dense footprint, which is exactly the concurrency headroom
+HEROv2's shared-address-space insight buys the serving path.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_paged_serve.py [--arch ...]
+Writes benchmarks/results/paged_serve.json (save_json contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_json
+from repro import configs
+from repro.models import blocks, transformer
+from repro.serve.engine import Engine, Request
+from repro.serve.kvcache import token_bytes
+
+
+MIXES = {
+    # (prompt_len, max_new) distributions — ragged on purpose
+    "uniform_short": [(8, 8)] * 12,
+    "ragged": [(4, 4)] * 8 + [(16, 16)] * 3 + [(40, 56)] * 1,
+    "heavy_tail": [(4, 4)] * 14 + [(8, 88)] * 2,
+}
+
+
+def run_mix(cfg, params, mix, paged: bool, n_slots: int, max_seq: int,
+            page_tokens: int):
+    eng = Engine(cfg, params, n_slots=n_slots, max_seq=max_seq, paged=paged,
+                 page_tokens=page_tokens)
+    rng = np.random.default_rng(0)
+    for i, (L, new) in enumerate(mix):
+        eng.submit(Request(seq_id=i,
+                           prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                           max_new=new))
+    t0 = time.perf_counter()
+    done = eng.run(max_steps=100000)
+    wall = time.perf_counter() - t0
+    assert len(done) == len(mix), f"served {len(done)}/{len(mix)}"
+    toks = sum(len(r.tokens_out) for r in done)
+    if paged:
+        footprint = eng.pool.footprint_bytes()
+        peak = eng.stats.get("peak_used_bytes", 0)
+    else:
+        footprint = peak = eng.pool.footprint_bytes()
+    return {"tok_per_s": toks / wall, "wall_s": wall, "tokens": toks,
+            "decode_steps": eng.stats["decode_steps"],
+            "admission_refusals": eng.stats.get("admission_refusals", 0),
+            "footprint_bytes": footprint, "peak_used_bytes": peak}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config(args.arch)
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+    tb = token_bytes(cfg)
+    print(f"[paged_serve] {args.arch}: token_bytes={tb}, dense pool = "
+          f"{args.slots}×{args.max_seq} tokens")
+
+    results = {}
+    for mix_name, mix in MIXES.items():
+        row = {}
+        for paged in (False, True):
+            mode = "paged" if paged else "dense"
+            row[mode] = run_mix(cfg, params, mix, paged, args.slots,
+                                args.max_seq, args.page_tokens)
+        d, p = row["dense"], row["paged"]
+        row["hbm_ratio_peak"] = p["peak_used_bytes"] / d["footprint_bytes"]
+        row["hbm_ratio_pool"] = p["footprint_bytes"] / d["footprint_bytes"]
+        results[mix_name] = row
+        print(f"  {mix_name:14s} dense {d['tok_per_s']:8.1f} tok/s "
+              f"{d['footprint_bytes']:>9d} B | paged {p['tok_per_s']:8.1f} "
+              f"tok/s peak {p['peak_used_bytes']:>9d} B "
+              f"(peak/dense {row['hbm_ratio_peak']:.2f}, "
+              f"pool/dense {row['hbm_ratio_pool']:.2f}, "
+              f"refusals {p['admission_refusals']})")
+        assert p["footprint_bytes"] <= d["footprint_bytes"], \
+            "paged pool exceeds dense footprint"
+    save_json("paged_serve", {"arch": args.arch, "token_bytes": tb,
+                              "mixes": results})
+    print("[paged_serve] wrote results/paged_serve.json")
+
+
+if __name__ == "__main__":
+    main()

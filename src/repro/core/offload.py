@@ -143,6 +143,13 @@ class Mailbox:
                 out.append(self._q.popleft())
             return out
 
+    def requeue(self, msg) -> None:
+        """Push back at the *front* (admission-control refusal keeps FIFO
+        order; allowed to exceed depth — the message was already accepted)."""
+        with self._cv:
+            self._q.appendleft(msg)
+            self._cv.notify()
+
     def __len__(self):
         with self._lock:
             return len(self._q)

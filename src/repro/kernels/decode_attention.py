@@ -100,15 +100,6 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 def decode_attention_ref(q, k_cache, v_cache, lengths):
-    """Oracle: masked softmax over the whole cache."""
-    B, H, hd = q.shape
-    K, S = k_cache.shape[1], k_cache.shape[2]
-    G = H // K
-    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
-    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
-    logits = logits / math.sqrt(hd)
-    valid = jnp.arange(S)[None, :] < lengths[:, None]
-    logits = jnp.where(valid[:, None, None, :], logits, NEG)
-    p = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
-    return out.reshape(B, H, hd).astype(q.dtype)
+    """Oracle: masked softmax over the whole cache (now lives in ref.py)."""
+    from repro.kernels import ref
+    return ref.decode_attention(q, k_cache, v_cache, lengths)

@@ -1,0 +1,137 @@
+"""Paged flash-decode Pallas kernel: page-table KV gather + online softmax.
+
+HEROv2's SVM insight (§2.2) applied to the serving hot loop: the KV cache is
+a pool of fixed-size *physical pages* ([n_pages, K, page_tokens, hd]) and each
+sequence owns an ordered *page list*. The device-side page table (int32 rows,
+per the addrspace promotion analysis — page *ids* stay native 32-bit even when
+page *byte offsets* exceed 2³¹) translates logical token position → physical
+page, exactly like the paper's IOMMU translates accelerator-virtual → host-
+physical addresses.
+
+Kernel structure mirrors kernels/decode_attention.flash_decode: grid
+(B·K, max_pages) with kv pages innermost and (m, l, acc) online-softmax
+scratch carried across them. The page indirection happens in the BlockSpec
+index_map via **scalar prefetch** (pltpu.PrefetchScalarGridSpec): the page
+table is prefetched to SMEM before the body runs, so the DMA engine fetches
+k_pages[page_table[b, j]] directly — the gather costs nothing on top of the
+streaming the dense kernel already does. Padding rows (-1) clamp to page 0
+and are masked by the per-sequence length, so they never contribute.
+
+Validated in interpret mode against ref.decode_attention over ragged lengths,
+GQA group counts, and page sizes (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+NEG = -1e30
+
+
+def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       page_table: jax.Array, lengths: jax.Array,
+                       interpret: bool = True) -> jax.Array:
+    """One-token attention over a paged KV cache.
+
+    q:          [B, H, hd]
+    k_pages:    [P, K, pt, hd] physical page pool (P pages of pt tokens)
+    v_pages:    [P, K, pt, hd]
+    page_table: [B, max_pages] int32 page ids, -1 = unmapped
+    lengths:    [B] int32 valid token counts
+    Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    P, K, pt, _ = k_pages.shape
+    G = H // K
+    max_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    # clamp padding rows: masked out by `lengths` below, but the index_map
+    # must still name a resident page for the DMA
+    table = jnp.maximum(page_table.astype(jnp.int32), 0)
+    lengths_bk = jnp.repeat(lengths.astype(jnp.int32), K)    # [B*K]
+
+    def kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref):
+        bk = pl.program_id(0)
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        seq_len = len_ref[bk]
+
+        @pl.when(j * pt < seq_len)
+        def _page():
+            qb = q_ref[0].astype(jnp.float32)            # [G, hd]
+            kb = k_ref[0, 0].astype(jnp.float32)         # [pt, hd]
+            vb = v_ref[0, 0].astype(jnp.float32)
+            s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
+            kpos = j * pt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos < seq_len, s, NEG)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+            acc_ref[...] = acc_ref[...] * corr[:, None] + \
+                jnp.dot(p, vb, preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        @pl.when(j == pl.num_programs(1) - 1)
+        def _fin():
+            o_ref[0] = (acc_ref[...] /
+                        jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # page_table, lengths_bk
+        grid=(B * K, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda bk, j, tbl, lens: (bk, 0, 0)),
+            # the page-table walk: physical page id from the prefetched table
+            pl.BlockSpec((1, 1, pt, hd),
+                         lambda bk, j, tbl, lens: (tbl[bk // K, j], bk % K, 0, 0)),
+            pl.BlockSpec((1, 1, pt, hd),
+                         lambda bk, j, tbl, lens: (tbl[bk // K, j], bk % K, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bk, j, tbl, lens: (bk, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G,), jnp.float32),
+                        pltpu.VMEM((G,), jnp.float32),
+                        pltpu.VMEM((G, hd), jnp.float32)],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        interpret=interpret,
+    )(table, lengths_bk, qr, k_pages, v_pages)
+    return out.reshape(B, H, hd)
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize a dense [B, K, max_pages·pt, hd] cache from the page pool
+    (test oracle + debugging; the kernel never does this)."""
+    B, max_pages = page_table.shape
+    _, K, pt, hd = pages.shape
+    dense = jnp.take(pages, jnp.maximum(page_table, 0).reshape(-1), axis=0)
+    dense = dense.reshape(B, max_pages, K, pt, hd)
+    return jnp.transpose(dense, (0, 2, 1, 3, 4)).reshape(B, K, max_pages * pt, hd)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Oracle: gather pages dense, then the masked-softmax decode oracle."""
+    k_dense = gather_pages(k_pages, page_table)
+    v_dense = gather_pages(v_pages, page_table)
+    return ref.decode_attention(q, k_dense, v_dense, lengths)

@@ -54,6 +54,27 @@ def covar(D, alpha=None):
     return (Dc.T @ Dc) / (M - 1)
 
 
+# --- flash decode (serving) --------------------------------------------------
+def decode_attention(q, k_cache, v_cache, lengths):
+    """One query token vs a ragged KV cache: masked softmax oracle.
+
+    q: [B, H, hd]; k/v_cache: [B, K, S, hd]; lengths: [B] int32 valid counts.
+    GQA handled by grouping G = H/K query heads per KV head.
+    """
+    import math
+    B, H, hd = q.shape
+    K, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 # --- flash attention ---------------------------------------------------------
 def attention(q, k, v, causal=True, window=None):
     """q,k,v: [B,H,L,hd] (MHA; GQA broadcast upstream)."""

@@ -2,6 +2,12 @@
 
 Usage (CPU container, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --paged \
+      --page-tokens 16 --pages 32
+
+``--paged`` switches the engine to the page-table KV cache (vmm-backed pool +
+paged flash-decode kernel); ``--pages`` caps the physical page pool — when
+omitted it defaults to parity with the dense pool's HBM footprint.
 """
 from __future__ import annotations
 
@@ -24,12 +30,20 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (page-table flash-decode kernel)")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="tokens per physical KV page")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="physical page-pool size (default: dense parity)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
     params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
     params, _ = blocks.split_params(params_t)
-    eng = Engine(cfg, params, n_slots=args.slots, max_seq=args.max_seq)
+    eng = Engine(cfg, params, n_slots=args.slots, max_seq=args.max_seq,
+                 paged=args.paged, page_tokens=args.page_tokens,
+                 n_pages=args.pages)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -42,10 +56,16 @@ def main():
     wall = time.time() - t0
     total_new = sum(len(r.tokens_out) for r in done)
     occ = np.mean(eng.stats["batch_occupancy"]) if eng.stats["batch_occupancy"] else 0
-    print(f"[serve] {len(done)} requests, {total_new} tokens in {wall:.2f}s "
-          f"({total_new / wall:.1f} tok/s), "
+    mode = "paged" if args.paged else "dense"
+    print(f"[serve:{mode}] {len(done)} requests, {total_new} tokens in "
+          f"{wall:.2f}s ({total_new / wall:.1f} tok/s), "
           f"decode steps {eng.stats['decode_steps']}, "
           f"mean batch occupancy {occ:.2f}")
+    if args.paged:
+        a = eng.pool.alloc
+        print(f"[serve:paged] pool {a.n_pages} pages × {a.page_tokens} tok "
+              f"({eng.pool.footprint_bytes()} B), free {a.free_pages}, "
+              f"admission refusals {eng.stats['admission_refusals']}")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,29 @@ from repro.models.blocks import Param, dense_init
 from repro.parallel.sharding import constrain
 
 
+def _pmean_grad_safe(x, axes):
+    """pmean whose VJP materializes symbolic-Zero cotangents.
+
+    Differentiating only the token output (ignoring aux) hands pmean a
+    Zero cotangent, which this jax version's psum transpose rejects
+    ("Zero ... is not a valid JAX type"). custom_vjp instantiates the zero
+    before our bwd runs; for the replicated scalars this is used on, the
+    cotangent is itself replicated, so pmean is its own adjoint here.
+    """
+    @jax.custom_vjp
+    def f(x):
+        return jax.lax.pmean(x, axes)
+
+    def fwd(x):
+        return f(x), None
+
+    def bwd(_, g):
+        return (jax.lax.pmean(g, axes),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
 @dataclasses.dataclass(frozen=True)
 class MoeConfig:
     d_model: int
@@ -189,7 +212,7 @@ def moe_forward(p: Dict[str, jax.Array], x: jax.Array, cfg: MoeConfig
             # aux comes from routing on model-replicated tokens → already
             # invariant over 'model'; mean over the batch axes makes the
             # scalar fully replicated (P() out_spec)
-            aux = jax.lax.pmean(aux, batch_axes)
+            aux = _pmean_grad_safe(aux, batch_axes)
             return y.reshape(xb.shape), aux
 
         def local_a2a(xb, rw, wg, wu, wd):
@@ -227,7 +250,7 @@ def moe_forward(p: Dict[str, jax.Array], x: jax.Array, cfg: MoeConfig
             yrecv = yrecv.reshape(E, C, d) * sel_g[..., None].astype(yrecv.dtype)
             y = jnp.zeros((N_l, d), yrecv.dtype).at[sel_t.reshape(-1)].add(
                 yrecv.reshape(E * C, d), mode="drop")
-            aux = jax.lax.pmean(aux, ("model",) + batch_axes)
+            aux = _pmean_grad_safe(aux, ("model",) + batch_axes)
             return y.reshape(xb.shape), aux
 
         wspec = P("model", None, None) if ep else P(None, None, None)

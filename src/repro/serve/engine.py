@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.core.offload import Mailbox, TargetRegion
 from repro.models import blocks, transformer
-from repro.serve.kvcache import CachePool
+from repro.serve import paged_step
+from repro.serve.kvcache import CachePool, PagedCachePool
 from repro.train import step as steps
 
 
@@ -38,17 +39,45 @@ class Request:
 
 
 class Engine:
+    """Continuous-batching engine with two cache regimes.
+
+    * dense (default): fixed decode slots over [n_slots, K, max_seq, hd]
+      caches — admission is slot-limited.
+    * paged (``paged=True``): a PagedCachePool over vmm.PagedAllocator —
+      sequences own page lists, the decode TargetRegion dispatches the
+      page-table flash-decode kernel, and the mailbox drain admits by *page
+      availability* (reservation-based, refusing instead of crashing when
+      the pool is exhausted).
+    """
+
     def __init__(self, cfg: transformer.ModelConfig, params, n_slots: int = 4,
-                 max_seq: int = 256, greedy: bool = True):
+                 max_seq: int = 256, greedy: bool = True, paged: bool = False,
+                 page_tokens: int = 16, n_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
-        self.pool = CachePool(cfg, n_slots, max_seq)
+        self.paged = paged
         self.mailbox = Mailbox(depth=256)
         self.active: Dict[int, Request] = {}       # slot -> request
         self.greedy = greedy
-        self._decode = TargetRegion(steps.make_decode_step(cfg), name="decode")
-        self._prefill_single = TargetRegion(self._prefill_one, name="prefill")
-        self.stats = {"decode_steps": 0, "prefills": 0, "batch_occupancy": []}
+        self.stats = {"decode_steps": 0, "prefills": 0, "batch_occupancy": [],
+                      "admission_refusals": 0}
+        if paged:
+            if n_pages is None:
+                # parity budget with the dense pool's HBM footprint (floor:
+                # never exceed n_slots × max_seq tokens of physical pages)
+                n_pages = max(1, (n_slots * max_seq) // page_tokens)
+            self.pool = PagedCachePool(cfg, max_batch=n_slots, max_seq=max_seq,
+                                       n_pages=n_pages, page_tokens=page_tokens)
+            self._admit_stalled = False
+            self._decode = TargetRegion(
+                paged_step.make_paged_decode_step(cfg, page_tokens),
+                name="paged_decode")
+            self._prefill_dense = TargetRegion(steps.make_prefill_step(cfg),
+                                               name="paged_prefill")
+        else:
+            self.pool = CachePool(cfg, n_slots, max_seq)
+            self._decode = TargetRegion(steps.make_decode_step(cfg), name="decode")
+            self._prefill_single = TargetRegion(self._prefill_one, name="prefill")
 
     # -- host API -------------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -59,12 +88,13 @@ class Engine:
     def run(self, max_steps: int = 1000) -> List[Request]:
         finished: List[Request] = []
         for _ in range(max_steps):
-            self._admit()
+            self._admit_paged() if self.paged else self._admit()
             if not self.active:
                 if len(self.mailbox) == 0:
                     break
                 continue
-            finished.extend(self._decode_step())
+            finished.extend(self._decode_step_paged() if self.paged
+                            else self._decode_step())
         self.pool  # noqa: B018
         return finished
 
@@ -129,4 +159,79 @@ class Engine:
                 finished.append(req)
                 del self.active[slot]
                 self.pool.free_slot(slot)
+        return finished
+
+    # -- paged internals ---------------------------------------------------
+    def _admit_paged(self):
+        """Admit by page availability: the drain stops at the first request
+        the pool cannot take (requeued at the front, FIFO preserved).
+
+        A refusal *stalls* admission until a release frees capacity —
+        otherwise every decode step would drain/refuse/requeue the same head
+        request, inflating the refusal stat and churning the mailbox lock."""
+        if getattr(self, "_admit_stalled", False):
+            return
+        while True:
+            reqs = self.mailbox.drain(1)
+            if not reqs:
+                break
+            req = reqs[0]
+            L = len(req.prompt)
+            if not self.pool.admissible_ever(L, req.max_new):
+                # could never fit even on an idle pool: reject outright so it
+                # doesn't head-of-line-block the drain forever
+                self.stats["rejected"] = self.stats.get("rejected", 0) + 1
+                continue
+            if not self.pool.can_admit(L, req.max_new):
+                self.mailbox.requeue(req)
+                self.stats["admission_refusals"] += 1
+                self._admit_stalled = True
+                break
+            slot = self.pool.admit(req.seq_id, L, req.max_new)
+            # dense B=1 prefill over the prompt, cache padded to a page
+            # multiple, then scattered into this sequence's pages
+            S_p = self.pool.padded_len(L)
+            caches = transformer.init_caches(self.cfg, 1, S_p)
+            toks = jnp.asarray(req.prompt[None, :].astype(np.int32))
+            logits_last, caches = self._prefill_dense(self.params, toks, caches)
+            self.pool.write_prefill(slot, caches, L)
+            nxt = int(jnp.argmax(logits_last[0, -1]))
+            req.tokens_out.append(nxt)
+            self.active[slot] = req
+            self.stats["prefills"] += 1
+
+    def _decode_step_paged(self) -> List[Request]:
+        B = self.pool.max_batch
+        toks = np.zeros((B, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.tokens_out[-1]
+            # map the write position (lengths[slot]) before dispatch; the
+            # admission reservation guarantees this never fails
+            self.pool.ensure(slot, int(self.pool.lengths[slot]) + 1)
+        tables = jnp.asarray(self.pool.device_page_tables())
+        lengths = jnp.asarray(self.pool.lengths.astype(np.int32))
+        active = jnp.asarray(self.pool.seq_ids >= 0)
+        logits, self.pool.pages = self._decode(
+            self.params, jnp.asarray(toks), self.pool.pages, tables, lengths,
+            active)
+        self.stats["decode_steps"] += 1
+        self.stats["batch_occupancy"].append(len(self.active) / B)
+        used = self.pool.used_bytes()
+        self.stats["peak_used_bytes"] = max(
+            self.stats.get("peak_used_bytes", 0), used)
+        finished = []
+        for slot in list(self.active):
+            req = self.active[slot]
+            nxt = int(jnp.argmax(logits[slot]))
+            req.tokens_out.append(nxt)
+            self.pool.lengths[slot] += 1
+            # paged lengths count KV rows (dense counts rows + the pending
+            # token), hence the -2: both paths stop at the same stream length
+            if len(req.tokens_out) >= req.max_new or \
+               self.pool.lengths[slot] >= self.pool.max_seq - 2:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                self.pool.release(slot)
+                self._admit_stalled = False       # capacity freed: retry admits
         return finished

@@ -60,23 +60,211 @@ class CachePool:
 
     def token_bytes(self) -> int:
         """Per-token cache footprint (all layers) — capacity planning."""
-        total = 0
-        for gi, (pattern, count) in enumerate(self.cfg.groups):
-            for kind in pattern:
-                mixer, _ = transformer.parse_kind(kind)
-                if mixer in ("gqa", "global", "shared"):
-                    total += count * 2 * self.cfg.n_kv * self.cfg.hd * 2
-                elif mixer == "mla":
-                    total += count * (self.cfg.mla.kv_lora + self.cfg.mla.qk_rope) * 2
-                # window/ssm: constant, not per-token beyond W
-        return total
+        return token_bytes(self.cfg)
+
+    def footprint_bytes(self) -> int:
+        """HBM held by the dense pool — fixed at n_slots × max_seq regardless
+        of how short the resident sequences actually are."""
+        return self.n_slots * self.max_seq * token_bytes(self.cfg)
+
+
+def token_bytes(cfg: transformer.ModelConfig) -> int:
+    """Per-token cache footprint (all layers) — capacity planning."""
+    total = 0
+    for gi, (pattern, count) in enumerate(cfg.groups):
+        for kind in pattern:
+            mixer, _ = transformer.parse_kind(kind)
+            if mixer in ("gqa", "global", "shared"):
+                total += count * 2 * cfg.n_kv * cfg.hd * 2
+            elif mixer == "mla":
+                total += count * (cfg.mla.kv_lora + cfg.mla.qk_rope) * 2
+            # window/ssm: constant, not per-token beyond W
+    return total
 
 
 def paged_pool(cfg: transformer.ModelConfig, hbm_budget_bytes: int,
                page_tokens: int = 64) -> vmm.PagedAllocator:
     """Budget a vmm paged allocator from the per-token cache footprint."""
-    pool = CachePool(cfg, n_slots=1, max_seq=page_tokens)  # probe footprint
-    tb = max(1, pool.token_bytes())
+    tb = max(1, token_bytes(cfg))
     n_pages = max(1, hbm_budget_bytes // (tb * page_tokens))
     alloc = vmm.PagedAllocator(n_pages, page_tokens, tb)
     return alloc
+
+
+_PAGEABLE = ("gqa", "global", "shared")
+
+
+class PagedCachePool:
+    """Paged serving pool: sequences own page lists over a physical page pool.
+
+    The HEROv2 move applied to KV memory: instead of ``n_slots`` dense caches
+    of ``max_seq`` rows each, the pool holds ``n_pages`` physical pages of
+    ``page_tokens`` rows ([count, P, K, pt, hd] per layer position — one
+    *logical* page id maps into every layer's pool at once, so a page holds
+    ``page_tokens`` tokens of *all-layer* KV). A per-sequence int32 page table
+    translates logical token position → physical page on the device
+    (kernels/paged_decode_attention.py walks it via scalar prefetch).
+
+    Admission control is reservation-based: ``admit`` reserves the worst-case
+    page count (⌈(prompt+max_new)/page_tokens⌉) but only *allocates* the
+    prefill pages up front; decode grows the page list on demand via
+    ``ensure`` — the reservation guarantees on-demand growth never fails, so
+    exhaustion surfaces as an admission refusal (can_admit→False), never as a
+    mid-decode crash.
+
+    Only full-attention caches (gqa/global/shared) are pageable; window/MLA/
+    SSM caches are constant-size or compressed and stay on the dense path.
+    """
+
+    def __init__(self, cfg: transformer.ModelConfig, max_batch: int,
+                 max_seq: int, n_pages: int, page_tokens: int = 16,
+                 dtype=None):
+        for pattern, _ in cfg.groups:
+            for kind in pattern:
+                mixer, _ = transformer.parse_kind(kind)
+                if mixer not in _PAGEABLE:
+                    raise ValueError(
+                        f"PagedCachePool: mixer {mixer!r} is not pageable "
+                        f"(supported: {_PAGEABLE}); use the dense CachePool")
+        if cfg.logit_softcap:
+            raise ValueError("PagedCachePool: the paged flash-decode kernel "
+                             "has no logit-softcap path; use the dense pool")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.page_tokens = page_tokens
+        self.max_pages_per_seq = -(-max_seq // page_tokens)
+        self.alloc = vmm.PagedAllocator(n_pages, page_tokens,
+                                        max(1, token_bytes(cfg)))
+        dtype = dtype or cfg.compute_dtype
+        K, hd = cfg.n_kv, cfg.hd
+        self.pages = []
+        for pattern, count in cfg.groups:
+            per_pos = []
+            for kind in pattern:
+                per_pos.append({
+                    "k": jnp.zeros((count, n_pages, K, page_tokens, hd), dtype),
+                    "v": jnp.zeros((count, n_pages, K, page_tokens, hd), dtype),
+                })
+            self.pages.append(tuple(per_pos))
+        # host-side slot state (decode batch width is compiled-static)
+        self.seq_ids = np.full(max_batch, -1, np.int64)
+        self.lengths = np.zeros(max_batch, np.int64)   # valid KV rows per slot
+        self._reserved: Dict[int, int] = {}            # seq_id -> pages reserved
+
+    # -- admission --------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_tokens)
+
+    def padded_len(self, n_tokens: int) -> int:
+        """n_tokens rounded up to a page multiple (prefill cache sizing)."""
+        return self.pages_for(n_tokens) * self.page_tokens
+
+    def _worst_pages(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case page need for a request: the engine always decodes at
+        least one token (its KV lands at position prompt_len), so the floor
+        on generated tokens is 1 even for max_new <= 1."""
+        return self.pages_for(
+            min(prompt_len + max(max_new, 1), self.max_seq))
+
+    def _reservation_debt(self) -> int:
+        """Reserved-but-not-yet-allocated pages across active sequences."""
+        debt = 0
+        for sid, reserved in self._reserved.items():
+            have = len(self.alloc._seq_pages.get(sid, []))
+            debt += max(0, reserved - have)
+        return debt
+
+    def admissible_ever(self, prompt_len: int, max_new: int) -> bool:
+        """False iff the request can never fit, even on an idle pool —
+        callers should reject it outright instead of requeueing forever."""
+        worst = self._worst_pages(prompt_len, max_new)
+        return (worst <= self.max_pages_per_seq
+                and worst <= self.alloc.n_pages
+                and prompt_len < self.max_seq)
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        if not np.any(self.seq_ids < 0):
+            return False                               # no decode slot
+        if not self.admissible_ever(prompt_len, max_new):
+            return False
+        worst = self._worst_pages(prompt_len, max_new)
+        return worst <= self.alloc.free_pages - self._reservation_debt()
+
+    def admit(self, seq_id: int, prompt_len: int, max_new: int) -> int:
+        """Reserve worst-case pages, allocate the prefill pages, claim a slot."""
+        if seq_id in self.alloc._seq_pages or seq_id in self._reserved:
+            raise ValueError(f"paged KV: seq_id {seq_id} already resident "
+                             "(page lists would silently merge)")
+        if not self.can_admit(prompt_len, max_new):
+            raise MemoryError("paged KV: admission refused (out of pages/slots)")
+        slot = int(np.where(self.seq_ids < 0)[0][0])
+        self._reserved[seq_id] = self._worst_pages(prompt_len, max_new)
+        self.alloc.alloc_seq(seq_id, prompt_len)
+        self.seq_ids[slot] = seq_id
+        self.lengths[slot] = 0
+        return slot
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow slot's page list on demand so positions < n_tokens are mapped
+        (never fails for admitted sequences — the reservation covers it)."""
+        sid = int(self.seq_ids[slot])
+        self.alloc.extend_seq(sid, n_tokens - int(self.lengths[slot]),
+                              int(self.lengths[slot]))
+
+    def release(self, slot: int) -> None:
+        sid = int(self.seq_ids[slot])
+        self.alloc.free_seq(sid)
+        self._reserved.pop(sid, None)
+        self.seq_ids[slot] = -1
+        self.lengths[slot] = 0
+
+    # -- device views -----------------------------------------------------
+    def device_page_tables(self) -> np.ndarray:
+        """[max_batch, max_pages_per_seq] int32, -1 = unmapped."""
+        out = np.full((self.max_batch, self.max_pages_per_seq), -1, np.int32)
+        for slot in range(self.max_batch):
+            sid = int(self.seq_ids[slot])
+            if sid >= 0:
+                out[slot] = self.alloc.page_table(sid, self.max_pages_per_seq)
+        return out
+
+    def write_prefill(self, slot: int, caches, length: int) -> None:
+        """Scatter a dense B=1 prefill cache ([count, 1, K, S, hd] leaves)
+        into this slot's pages; S must be padded to a page multiple ≥ length.
+
+        One vectorized scatter per k/v leaf (not per page): an [count, S, ...]
+        cache reshapes to [count, n_pages, pt, ...] page rows which land on
+        the owned page ids in a single ``.at[:, ids].set``."""
+        sid = int(self.seq_ids[slot])
+        page_ids = jnp.asarray(self.alloc._seq_pages[sid], jnp.int32)
+        npg = len(self.alloc._seq_pages[sid])
+        pt = self.page_tokens
+        new_pages = []
+        for gi, per_pos in enumerate(self.pages):
+            new_per_pos = []
+            for pi, kv in enumerate(per_pos):
+                dense = caches[gi][pi]
+                upd = {}
+                for name in ("k", "v"):
+                    pool = kv[name]
+                    count, _, K, S, hd = dense[name].shape
+                    rows = dense[name][:, 0, :, :npg * pt]     # [count,K,S,hd]
+                    rows = rows.reshape(count, K, npg, pt, hd)
+                    rows = jnp.transpose(rows, (0, 2, 1, 3, 4))
+                    upd[name] = pool.at[:, page_ids].set(rows.astype(pool.dtype))
+                new_per_pos.append(upd)
+            new_pages.append(tuple(new_per_pos))
+        self.pages = new_pages
+        self.lengths[slot] = length
+
+    # -- accounting -------------------------------------------------------
+    def token_bytes(self) -> int:
+        return token_bytes(self.cfg)
+
+    def footprint_bytes(self) -> int:
+        """HBM held by the page pool (total physical pages)."""
+        return self.alloc.n_pages * self.alloc.page_bytes
+
+    def used_bytes(self) -> int:
+        return (self.alloc.n_pages - self.alloc.free_pages) * self.alloc.page_bytes

@@ -1,0 +1,150 @@
+"""Paged serving steps: transformer decode over a page-table KV cache.
+
+The dense decode path (train/step.make_decode_step → transformer.forward)
+carries [B, K, max_seq, hd] caches per layer. This module is the paged
+counterpart: caches live in a physical page pool ([count, P, K, pt, hd] per
+layer position, see serve.kvcache.PagedCachePool) and each decode step
+
+  1. computes the new token's K/V per layer,
+  2. scatters it into the page mapped at logical position ``lengths[b]``
+     (page-table translation, host-filled, device-walked),
+  3. attends via the paged flash-decode Pallas kernel
+     (kernels/paged_decode_attention.py) with the page table scalar-prefetched.
+
+The group walk mirrors transformer._apply_group — lax.scan over units with
+the pattern unrolled inside the body — so HLO stays one-unit-sized regardless
+of depth. Only full-attention mixers (gqa/global/shared) are supported;
+PagedCachePool rejects anything else at construction.
+
+Per-sequence RoPE positions come from ``lengths`` (each slot rotates at its
+own length), which is exact for ragged batches; the dense engine's shared
+``cache_pos`` is the max over slots, so the two paths agree whenever slot
+lengths coincide (the regression test's request mix).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, transformer
+from repro.kernels.paged_decode_attention import paged_flash_decode
+
+
+def _scatter_token(pool: jax.Array, tok: jax.Array, page_table: jax.Array,
+                   lengths: jax.Array, active: jax.Array,
+                   page_tokens: int) -> jax.Array:
+    """Write tok[b] ([B, K, hd]) at logical position lengths[b] of each active
+    slot's page list. Inactive slots read-modify-write their target in place
+    (a masked no-op), so no trash page is needed."""
+    B = tok.shape[0]
+    K, hd = tok.shape[1], tok.shape[2]
+    for b in range(B):
+        pid = jnp.maximum(page_table[b, lengths[b] // page_tokens], 0)
+        off = lengths[b] % page_tokens
+        val = tok[b].astype(pool.dtype)[None, :, None, :]       # [1, K, 1, hd]
+        cur = jax.lax.dynamic_slice(pool, (pid, 0, off, 0), (1, K, 1, hd))
+        val = jnp.where(active[b], val, cur)
+        pool = jax.lax.dynamic_update_slice(pool, val, (pid, 0, off, 0))
+    return pool
+
+
+def _paged_gqa_layer(p, x, pages, page_table, lengths, active,
+                     cfg: transformer.ModelConfig, acfg, page_tokens: int,
+                     interpret: bool):
+    """One decode-mode attention layer over the paged cache.
+
+    x: [B, 1, d]; pages: {"k","v"} [P, K, pt, hd] (this unit's pool slice).
+    Returns (y [B, 1, d], updated pages).
+    """
+    B = x.shape[0]
+    H, K, hd = acfg.n_heads, acfg.n_kv, acfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if acfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, K, hd)
+    v = v.reshape(B, 1, K, hd)
+    if acfg.rope_theta is not None:
+        positions = lengths.astype(jnp.int32)[:, None]          # [B, 1]
+        q = blocks.apply_rope(q, positions, acfg.rope_theta)
+        k = blocks.apply_rope(k, positions, acfg.rope_theta)
+    k_pool = _scatter_token(pages["k"], k[:, 0], page_table, lengths, active,
+                            page_tokens)
+    v_pool = _scatter_token(pages["v"], v[:, 0], page_table, lengths, active,
+                            page_tokens)
+    # the freshly written token must be visible: active slots attend over
+    # lengths+1 positions
+    kv_len = jnp.where(active, lengths + 1, 0).astype(jnp.int32)
+    att = paged_flash_decode(q[:, 0].astype(jnp.float32),
+                             k_pool, v_pool, page_table, kv_len,
+                             interpret=interpret)               # [B, H, hd]
+    y = att.reshape(B, 1, H * hd).astype(x.dtype) @ p["wo"]
+    return y, {"k": k_pool, "v": v_pool}
+
+
+def make_paged_decode_step(cfg: transformer.ModelConfig, page_tokens: int,
+                           interpret: bool = True):
+    """Returns decode_step(params, tokens, pages, page_table, lengths, active)
+    -> (logits [B, vocab], new pages).
+
+    tokens: [B, 1] int32 (last sampled token per slot); pages: the
+    PagedCachePool.pages pytree; page_table: [B, max_pages] int32;
+    lengths: [B] int32 valid KV rows (the new token's write position);
+    active: [B] bool slot-occupancy mask.
+    """
+
+    def decode_step(params, tokens, pages, page_table, lengths, active):
+        B = tokens.shape[0]
+        cd = cfg.compute_dtype
+        lengths = lengths.astype(jnp.int32)
+        embed = params["embed"].astype(cd)
+        x = blocks.embed_lookup(embed, tokens)                  # [B, 1, d]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+
+        shared_p = transformer._cast(params.get("shared_block"), cd)
+        new_pages = []
+        for gi, (pattern, count) in enumerate(cfg.groups):
+            gp = params["groups"][gi]
+            gpg = pages[gi]
+
+            def unit_body(x, xs, pattern=pattern):
+                unit_p, unit_pg = xs
+                unit_p = transformer._barrier(unit_p)
+                unit_p = transformer._cast(unit_p, cd)
+                new_pgs = []
+                for i, kind in enumerate(pattern):
+                    mixer, ffn = transformer.parse_kind(kind)
+                    p = unit_p[i]
+                    h = transformer._norm_apply(p["ln1"], x, cfg)
+                    mixer_p = shared_p["mixer"] if mixer == "shared" else p["mixer"]
+                    y, npg = _paged_gqa_layer(
+                        mixer_p, h, unit_pg[i], page_table, lengths, active,
+                        cfg, cfg.attn_cfg(mixer), page_tokens, interpret)
+                    if cfg.sandwich_norm:
+                        y = transformer._norm_apply(p["ln1_post"], y, cfg)
+                    x = x + y
+                    if ffn != "none":
+                        h2 = transformer._norm_apply(p["ln2"], x, cfg)
+                        ffn_p = shared_p["ffn"] if mixer == "shared" else p["ffn"]
+                        y2, _ = transformer._ffn_apply(ffn_p, ffn, h2, cfg)
+                        if cfg.sandwich_norm:
+                            y2 = transformer._norm_apply(p["ln2_post"], y2, cfg)
+                        x = x + y2
+                    new_pgs.append(npg)
+                return x, tuple(new_pgs)
+
+            x, ngp = jax.lax.scan(unit_body, x, (gp, gpg))
+            new_pages.append(ngp)
+
+        h_final = transformer._norm_apply(
+            transformer._cast(params["final_norm"], cd), x, cfg)
+        head = (embed.T if cfg.tie_embeddings else params["lm_head"].astype(cd))
+        logits = h_final @ head                                  # [B, 1, vocab]
+        return logits[:, 0], new_pages
+
+    return decode_step

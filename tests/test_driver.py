@@ -63,11 +63,17 @@ def test_grad_accum_matches_plain():
     np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2.5e-3)
 
 
-def test_serve_driver_cli():
+@pytest.mark.slow  # subprocess CLI end-to-end
+@pytest.mark.parametrize("mode", ["dense", "paged"])
+def test_serve_driver_cli(mode):
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--requests", "3",
-         "--slots", "2", "--max-new", "3", "--max-seq", "32"],
-        env=env, capture_output=True, text=True, timeout=400)
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--requests", "3",
+           "--slots", "2", "--max-new", "3", "--max-seq", "32"]
+    if mode == "paged":
+        cmd += ["--paged", "--page-tokens", "8"]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=400)
     assert "3 requests" in r.stdout, r.stdout + r.stderr
+    if mode == "paged":
+        assert "admission refusals" in r.stdout

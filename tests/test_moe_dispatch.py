@@ -5,6 +5,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -49,6 +51,7 @@ print("MOE_DISPATCH_OK")
 """
 
 
+@pytest.mark.slow  # 8-fake-device subprocess, fwd+bwd compiles
 def test_moe_dispatch_equivalence():
     env = dict(os.environ, PYTHONPATH=os.path.join(
         os.path.dirname(__file__), "..", "src"))

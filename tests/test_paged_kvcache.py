@@ -1,0 +1,159 @@
+"""PagedCachePool: page lifecycle, page-table translation, admission control,
+and leak-freedom over full request lifecycles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serve import kvcache
+
+
+def _pool(n_pages=16, page_tokens=8, max_batch=2, max_seq=64):
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    return kvcache.PagedCachePool(cfg, max_batch=max_batch, max_seq=max_seq,
+                                  n_pages=n_pages, page_tokens=page_tokens)
+
+
+def test_alloc_free_lifecycle():
+    pool = _pool()
+    p0 = pool.alloc.free_pages
+    slot = pool.admit(seq_id=7, prompt_len=10, max_new=4)   # 10 tok → 2 pages
+    assert pool.seq_ids[slot] == 7
+    assert pool.alloc.free_pages == p0 - 2
+    pool.lengths[slot] = 10
+    pool.ensure(slot, 17)                                   # crosses a boundary
+    assert pool.alloc.free_pages == p0 - 3
+    pool.release(slot)
+    assert pool.alloc.free_pages == p0
+    assert pool.seq_ids[slot] == -1
+
+
+def test_page_table_translation_correctness():
+    """The device page table must map logical position → the exact physical
+    page the allocator handed the sequence, in order."""
+    pool = _pool(page_tokens=4)
+    s0 = pool.admit(seq_id=0, prompt_len=9, max_new=0)      # 3 pages
+    s1 = pool.admit(seq_id=1, prompt_len=5, max_new=0)      # 2 pages
+    tables = pool.device_page_tables()
+    own0 = pool.alloc._seq_pages[0]
+    own1 = pool.alloc._seq_pages[1]
+    np.testing.assert_array_equal(tables[s0, :3], own0)
+    np.testing.assert_array_equal(tables[s1, :2], own1)
+    assert (tables[s0, 3:] == -1).all() and (tables[s1, 2:] == -1).all()
+    # no physical page mapped twice
+    mapped = tables[tables >= 0]
+    assert len(mapped) == len(set(mapped.tolist()))
+    # logical token t of seq 0 lives in page own0[t // 4]
+    for t in (0, 3, 4, 8):
+        assert tables[s0, t // 4] == own0[t // 4]
+
+
+def test_exhaustion_refuses_instead_of_crashing():
+    pool = _pool(n_pages=4, page_tokens=8, max_batch=4)
+    assert pool.can_admit(8, 8)                             # 2 pages, fits
+    s = pool.admit(seq_id=0, prompt_len=8, max_new=8)
+    # seq 0 reserved 2 pages (1 allocated); 4-2=2 usable remain
+    assert not pool.can_admit(17, 8), "would need 4 pages, only 2 usable"
+    assert pool.can_admit(8, 0)
+    with pytest.raises(MemoryError):
+        pool.admit(seq_id=1, prompt_len=17, max_new=8)
+    # reservation math: the refused admit must not have leaked anything
+    assert pool.alloc.free_pages == 3
+    assert 1 not in pool.alloc._seq_pages
+    pool.release(s)
+    assert pool.alloc.free_pages == 4
+
+
+def test_reservation_guarantees_on_demand_growth():
+    """Admitted sequences must always be extendable up to their reservation,
+    even with the pool otherwise full."""
+    pool = _pool(n_pages=4, page_tokens=8, max_batch=2, max_seq=32)
+    a = pool.admit(seq_id=0, prompt_len=8, max_new=8)       # reserve 2, alloc 1
+    b = pool.admit(seq_id=1, prompt_len=8, max_new=8)       # reserve 2, alloc 1
+    assert not pool.can_admit(1, 1)                         # debt covers rest
+    pool.lengths[a] = 8
+    pool.lengths[b] = 8
+    pool.ensure(a, 9)                                       # must not raise
+    pool.ensure(b, 9)
+    assert pool.alloc.free_pages == 0
+
+
+def test_reservation_covers_max_new_zero():
+    """The engine always decodes ≥1 token, so max_new=0 must still reserve
+    the page that token's KV lands in (regression: under-counted worst case
+    crashed ensure() mid-decode on a full pool)."""
+    pool = _pool(n_pages=2, page_tokens=8, max_batch=2, max_seq=32)
+    a = pool.admit(seq_id=0, prompt_len=8, max_new=0)   # page-aligned prompt
+    pool.lengths[a] = 8
+    pool.ensure(a, 9)                                   # must not raise
+    assert pool.alloc.free_pages == 0
+    # and the second page-aligned request was NOT admissible concurrently
+    assert not pool.can_admit(8, 0)
+
+
+def test_duplicate_seq_id_rejected():
+    pool = _pool()
+    pool.admit(seq_id=5, prompt_len=4, max_new=2)
+    with pytest.raises(ValueError):
+        pool.admit(seq_id=5, prompt_len=4, max_new=2)
+
+
+def test_no_page_leaked_after_full_lifecycle():
+    pool = _pool(n_pages=8, page_tokens=4, max_batch=2, max_seq=32)
+    p0 = pool.alloc.free_pages
+    rng = np.random.default_rng(0)
+    for round_ in range(5):
+        slots = []
+        for sid in (10 * round_, 10 * round_ + 1):
+            L = int(rng.integers(1, 9))
+            slots.append((pool.admit(sid, L, max_new=4), L))
+        for slot, L in slots:
+            pool.lengths[slot] = L
+            pool.ensure(slot, min(L + 4, 32))
+            pool.release(slot)
+    assert pool.alloc.free_pages == p0
+    assert pool.alloc._seq_pages == {}
+    assert pool._reserved == {}
+    assert (pool.seq_ids == -1).all()
+
+
+def test_write_prefill_scatters_rows_to_owned_pages():
+    from repro.models import transformer
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    pt = 4
+    pool = kvcache.PagedCachePool(cfg, max_batch=1, max_seq=32, n_pages=8,
+                                  page_tokens=pt)
+    L = 10                                                 # 3 pages, last partial
+    slot = pool.admit(seq_id=0, prompt_len=L, max_new=0)
+    S_p = -(-L // pt) * pt
+    caches = transformer.init_caches(cfg, 1, S_p)
+    rng = np.random.default_rng(1)
+    caches = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape), a.dtype), caches)
+    pool.write_prefill(slot, caches, L)
+    own = pool.alloc._seq_pages[0]
+    for gi in range(len(cfg.groups)):
+        for pi in range(len(cfg.groups[gi][0])):
+            for name in ("k", "v"):
+                dense = np.asarray(caches[gi][pi][name][:, 0], np.float32)
+                pool_pages = np.asarray(pool.pages[gi][pi][name], np.float32)
+                for j, pid in enumerate(own):
+                    np.testing.assert_allclose(
+                        pool_pages[:, pid],
+                        dense[:, :, j * pt:(j + 1) * pt], rtol=1e-6, atol=1e-6)
+
+
+def test_unpageable_config_rejected():
+    cfg = configs.get_smoke_config("gemma3-27b")            # sliding-window
+    with pytest.raises(ValueError):
+        kvcache.PagedCachePool(cfg, max_batch=1, max_seq=32, n_pages=4)
+
+
+def test_footprint_accounting():
+    pool = _pool(n_pages=16, page_tokens=8)
+    tb = pool.token_bytes()
+    assert pool.footprint_bytes() == 16 * 8 * tb
+    assert pool.used_bytes() == 0
+    pool.admit(seq_id=0, prompt_len=20, max_new=0)          # 3 pages
+    assert pool.used_bytes() == 3 * 8 * tb

@@ -42,6 +42,7 @@ def test_forward_shapes_finite(arch, rng):
         assert bool(jnp.all(jnp.isfinite(aux["mtp_logits"].astype(jnp.float32))))
 
 
+@pytest.mark.slow  # full fwd+bwd compile per arch (~15-35s each on CPU)
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_smoke(arch, rng):
     """One full train step (fwd+bwd+adamw) on the reduced config."""

@@ -177,18 +177,25 @@ def test_error_feedback_preserves_sum():
 # --------------------------------------------------------------------------
 # serving engine (continuous batching over the mailbox)
 # --------------------------------------------------------------------------
-def test_engine_serves_batched_requests():
+def _run_engine(cfg, params, paged: bool, prompts, max_new=4, n_slots=2,
+                max_seq=64):
     from repro.serve.engine import Engine, Request
+    eng = Engine(cfg, params, n_slots=n_slots, max_seq=max_seq, paged=paged)
+    for i, p in enumerate(prompts):
+        assert eng.submit(Request(seq_id=i, prompt=p.copy(), max_new=max_new))
+    done = eng.run(max_steps=200)
+    return eng, done
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_engine_serves_batched_requests(paged):
     cfg = configs.get_smoke_config("qwen2-0.5b")
     params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
     params, _ = blocks.split_params(params_t)
-    eng = Engine(cfg, params, n_slots=2, max_seq=64)
     rng = np.random.default_rng(0)
-    reqs = [Request(seq_id=i, prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32),
-                    max_new=4) for i in range(5)]
-    for r in reqs:
-        assert eng.submit(r)
-    done = eng.run(max_steps=200)
+    prompts = [rng.integers(0, cfg.vocab, 5).astype(np.int32)
+               for _ in range(5)]
+    eng, done = _run_engine(cfg, params, paged, prompts)
     assert len(done) == 5
     for r in done:
         assert len(r.tokens_out) >= 4
@@ -197,9 +204,35 @@ def test_engine_serves_batched_requests():
     assert max(eng.stats["batch_occupancy"]) == 1.0  # batching really happened
 
 
+def test_engine_paged_matches_dense_greedy_streams():
+    """The acceptance bar for the paged serving path: the same request
+    stream must produce identical greedy token streams in both cache
+    regimes, and a full paged run must leak no pages."""
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, 6).astype(np.int32)
+               for _ in range(4)]
+    streams = {}
+    engines = {}
+    for paged in (False, True):
+        eng, done = _run_engine(cfg, params, paged, prompts, max_new=5)
+        assert len(done) == 4
+        streams[paged] = {r.seq_id: r.tokens_out for r in done}
+        engines[paged] = eng
+    assert streams[True] == streams[False]
+    pool = engines[True].pool
+    assert pool.alloc.free_pages == pool.alloc.n_pages   # nothing leaked
+    assert engines[True].stats["peak_used_bytes"] > 0
+    assert engines[True].stats["peak_used_bytes"] <= \
+        engines[False].pool.footprint_bytes()
+
+
 # --------------------------------------------------------------------------
 # training actually learns (synthetic structured stream)
 # --------------------------------------------------------------------------
+@pytest.mark.slow  # 30-step training loop
 def test_loss_decreases_on_synthetic_stream():
     cfg = configs.get_smoke_config("qwen2-0.5b")
     dcfg = dp.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=3)
@@ -248,6 +281,7 @@ print("PIPE_OK")
 """
 
 
+@pytest.mark.slow  # 8-fake-device subprocess
 def test_gpipe_equivalence_subprocess():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__),
                                                    "..", "src"))
