@@ -1,0 +1,144 @@
+"""Tiered (HBM + host-DRAM) vs untiered paged serving: admitted concurrency
+and swap overhead.
+
+The workload oversubscribes the hot tier: with the hot pool sized to K pages,
+the submitted requests need > 2K pages of *concurrent* KV. The untiered paged
+engine refuses that concurrency (admission stalls; requests serialize), while
+the tiered engine admits every request into the system by preempting LRU
+residents to host DRAM over hero_memcpy DMA — at a measured swap-traffic and
+latency cost, with greedy token streams bit-identical to running the same
+requests on an untiered pool large enough to hold them.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_tiering.py [--smoke]
+Writes BENCH_serve.json at the repo root (the cross-PR perf trajectory file)
+and benchmarks/results/tiering.json (full detail).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_bench, save_json
+from repro import configs
+from repro.models import blocks, transformer
+from repro.serve.engine import Engine, Request
+
+
+def _submit_all(eng, cfg, mix):
+    rng = np.random.default_rng(0)
+    for i, (L, new) in enumerate(mix):
+        assert eng.submit(Request(
+            seq_id=i, prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+            max_new=new))
+
+
+def _run(cfg, params, mix, *, n_slots, max_seq, page_tokens, n_pages,
+         tiered, host_budget_bytes=None, max_steps=200000):
+    eng = Engine(cfg, params, n_slots=n_slots, max_seq=max_seq,
+                 paged=True, tiered=tiered, page_tokens=page_tokens,
+                 n_pages=n_pages, host_budget_bytes=host_budget_bytes)
+    _submit_all(eng, cfg, mix)
+    t0 = time.perf_counter()
+    done = eng.run(max_steps=max_steps)
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.tokens_out) for r in done)
+    out = {"completed": len(done), "tokens": toks, "wall_s": wall,
+           "tok_per_s": toks / wall,
+           "peak_hbm_bytes": eng.stats.get("peak_used_bytes", 0),
+           "streams": {r.seq_id: list(r.tokens_out) for r in done}}
+    out.update(eng.stats_summary())
+    return eng, out
+
+
+def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
+        max_seq: int = 64, page_tokens: int = 8, hot_pages: int = 4):
+    """K = hot_pages; each request worst-cases 2 pages, so the request count
+    below needs well over 2K pages of concurrent KV."""
+    cfg = configs.get_smoke_config(arch)
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+
+    per_req = (6, 6) if smoke else (8, 8)       # ≤ 2 pages of 8 either way
+    n_req = (3 if smoke else 6) * hot_pages     # 2 pages each → ≥ 6K total
+    mix = [per_req] * n_req
+    need_pages = n_req * 2
+    kw = dict(n_slots=n_slots, max_seq=max_seq, page_tokens=page_tokens)
+
+    # reference: untiered pool large enough for the whole workload at once
+    _, ref = _run(cfg, params, mix, n_pages=need_pages,
+                  tiered=False, **kw)
+    # untiered at K hot pages: admission refuses the oversubscription
+    _, unt = _run(cfg, params, mix, n_pages=hot_pages, tiered=False, **kw)
+    # tiered at the same K hot pages + host-DRAM swap tier
+    eng_t, tier = _run(cfg, params, mix, n_pages=hot_pages, tiered=True,
+                       host_budget_bytes=16 * need_pages
+                       * eng_page_bytes(cfg, page_tokens), **kw)
+
+    assert tier["completed"] == n_req, "tiered engine must finish the workload"
+    assert tier["streams"] == ref["streams"], \
+        "tiered greedy streams must be bit-identical to the untiered path"
+    assert unt["peak_in_system"] <= n_slots, "untiered cannot oversubscribe"
+    assert tier["peak_in_system"] * 2 > 2 * hot_pages, \
+        "tiered must hold >2K pages of concurrent KV in the system"
+
+    for r in (ref, unt, tier):
+        r.pop("streams")
+    payload = {
+        "arch": arch, "hot_pages": hot_pages, "page_tokens": page_tokens,
+        "n_slots": n_slots, "requests": n_req,
+        "concurrent_pages_needed": need_pages,
+        "reference_untiered_large": ref,
+        "untiered_hot_only": unt,
+        "tiered": tier,
+        "throughput_tok_per_s": tier["tok_per_s"],
+        "peak_hbm_bytes": tier["peak_hbm_bytes"],
+        "admitted_seq_count": tier["peak_in_system"],
+        # wall cost of oversubscription vs. the same K-page budget untiered
+        "swap_overhead_ratio": tier["wall_s"] / unt["wall_s"],
+    }
+    save_json("tiering", payload)
+    path = save_bench("serve", payload)
+    print(f"# hot tier K={hot_pages} pages; workload needs {need_pages} "
+          f"concurrent pages")
+    print(f"tiering_untiered,{unt['wall_s'] * 1e6:.1f},"
+          f"in_system={unt['peak_in_system']} refusals="
+          f"{unt['admission_refusals']}")
+    print(f"tiering_tiered,{tier['wall_s'] * 1e6:.1f},"
+          f"in_system={tier['peak_in_system']} preemptions="
+          f"{tier['preemptions']} swap_bytes="
+          f"{tier['swap_out_bytes'] + tier['swap_in_bytes']}")
+    print(f"# tiered admits {tier['peak_in_system']}× concurrent seqs "
+          f"(untiered {unt['peak_in_system']}×) at "
+          f"{payload['swap_overhead_ratio']:.2f}× wall cost; wrote {path}")
+    return payload
+
+
+def eng_page_bytes(cfg, page_tokens: int) -> int:
+    from repro.serve.kvcache import token_bytes
+    return token_bytes(cfg) * page_tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, interpret-mode kernels (CI job)")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--hot-pages", type=int, default=4)
+    args = ap.parse_args()
+    run(smoke=args.smoke, arch=args.arch, n_slots=args.slots,
+        max_seq=args.max_seq, page_tokens=args.page_tokens,
+        hot_pages=args.hot_pages)
+
+
+if __name__ == "__main__":
+    main()

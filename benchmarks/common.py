@@ -80,3 +80,17 @@ def save_json(name: str, payload):
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, name + ".json"), "w") as f:
         json.dump(payload, f, indent=1, default=str)
+
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def save_bench(name: str, payload) -> str:
+    """Machine-readable perf trajectory: write ``BENCH_<name>.json`` at the
+    repo root (committed/diffed across PRs, uploaded as a CI artifact) —
+    unlike results/, which is a scratch directory."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, default=str)
+        f.write("\n")
+    return path

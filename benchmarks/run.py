@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
   Fig. 8  bench_interconnect  link-width sweep over dry-run collectives
   Fig. 9  bench_isa           MXU-MAC / hardware-loop ISA analogue
   §Roofline roofline_report   per-cell terms from the dry-run
+  §2.4    bench_tiering       tiered KV serving → BENCH_serve.json (repo
+                              root, the cross-PR perf trajectory artifact)
 """
 from __future__ import annotations
 
@@ -18,11 +20,11 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_autodma, bench_complexity,
                             bench_interconnect, bench_isa, bench_parallel,
-                            bench_tiling, roofline_report)
+                            bench_tiering, bench_tiling, roofline_report)
     failures = []
     for mod in (bench_tiling, bench_parallel, bench_complexity,
                 bench_autodma, bench_interconnect, bench_isa,
-                roofline_report):
+                roofline_report, bench_tiering):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()
@@ -32,7 +34,7 @@ def main() -> None:
     if failures:
         print(f"# FAILED: {failures}", file=sys.stderr)
         raise SystemExit(1)
-    print("# all benchmarks complete")
+    print("# all benchmarks complete (BENCH_serve.json refreshed)")
 
 
 if __name__ == "__main__":

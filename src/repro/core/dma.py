@@ -37,9 +37,15 @@ except Exception:  # pragma: no cover
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class TransferHandle:
-    """The paper's 'unique transfer identifier' for _async variants."""
+    """The paper's 'unique transfer identifier' for _async variants.
+
+    ``wait()`` is idempotent (re-waiting a completed transfer is a no-op that
+    returns the same value) and ``nbytes`` carries the transfer size for
+    hero_perf-style traffic counters (the swap tier sums these).
+    """
     value: object
     _id: int
+    nbytes: int = 0
 
     def wait(self):
         jax.block_until_ready(self.value)
@@ -49,9 +55,16 @@ class TransferHandle:
 _NEXT_ID = [0]
 
 
+def _nbytes(v) -> int:
+    try:
+        return int(v.size) * int(v.dtype.itemsize)
+    except Exception:
+        return 0
+
+
 def _handle(v) -> TransferHandle:
     _NEXT_ID[0] += 1
-    return TransferHandle(v, _NEXT_ID[0])
+    return TransferHandle(v, _NEXT_ID[0], _nbytes(v))
 
 
 def hero_memcpy_host2dev(dst_sharding, src) -> jax.Array:
@@ -81,6 +94,13 @@ def hero_memcpy_dev2host_async(src: jax.Array) -> TransferHandle:
 def hero_memcpy_wait(handle: TransferHandle):
     """Guarantees transfer completion before the data can be used."""
     return handle.wait()
+
+
+def hero_memcpy_wait_all(handles) -> list:
+    """Wait a batch of handles (all transfers were already in flight, so the
+    total wait is the slowest transfer, not the sum — the double-buffering
+    contract the swap tier relies on)."""
+    return [h.wait() for h in handles]
 
 
 # --------------------------------------------------------------------------

@@ -28,6 +28,7 @@ from typing import Dict, Optional, Tuple
 VMEM_BYTES = 128 * 1024 * 1024  # per-core VMEM
 VMEM_RESERVE = 32 * 1024 * 1024  # XLA scratch + pallas pipeline headroom
 HBM_BYTES = 16 * 1024 * 1024 * 1024  # per-chip HBM
+DRAM_BYTES = 64 * 1024 * 1024 * 1024  # host DRAM reachable over hero_memcpy
 GRANULE = 8  # paper: "alignment and minimum allocation granule is 8 B"
 CANARY = 0x48455232  # "HER2"
 
@@ -46,6 +47,13 @@ class OutOfMemory(Exception):
 
 def _next_pow2(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def fragment_size(nbytes: int) -> int:
+    """The o1heap fragment a request of ``nbytes`` actually occupies
+    (canary word added, pow2-rounded) — shared by malloc, the can_alloc
+    guarantee probe, and external arena accounting (tiered-KV tests)."""
+    return _next_pow2(_align(nbytes + GRANULE, GRANULE))
 
 
 @dataclasses.dataclass
@@ -92,12 +100,28 @@ class SpmLevel:
         del used, free_binned
         return max(0, guaranteed - GRANULE)  # minus canary word
 
+    def can_alloc(self, nbytes: int) -> bool:
+        """True iff ``malloc(nbytes)`` is guaranteed to succeed *right now*.
+
+        ``capacity()`` alone is not that guarantee: malloc rounds to a pow2
+        fragment and only reuses *exact-size* bins (o1heap's constant-time
+        constraint), so a caller that must not fail mid-operation (the KV
+        swap tier, which frees device pages only after the host copy is
+        funded) probes with the rounded size.
+        """
+        if nbytes <= 0:
+            return False
+        size = fragment_size(nbytes)
+        if self._free_bins.get(size):
+            return True
+        return _align(self._cursor, GRANULE) + size <= self.arena
+
     def malloc(self, nbytes: int) -> Optional[int]:
         """``hero_lN_malloc``: returns a handle (int) or None (POSIX NULL)."""
         if nbytes <= 0:
             return None
         self.n_alloc += 1
-        size = _next_pow2(_align(nbytes + GRANULE, GRANULE))  # +canary
+        size = fragment_size(nbytes)  # +canary
         # constant-time: exact bin hit, else carve from the linear zone
         bin_ = self._free_bins.get(size)
         if bin_:
@@ -137,14 +161,22 @@ def _align(n: int, a: int) -> int:
 
 
 class HeroMemory:
-    """All SPM levels of one accelerator (TPU core): L1=VMEM, L2=HBM slice."""
+    """The memory hierarchy of one accelerator (TPU core), paper §2.4:
+    L1=VMEM (SPM), L2=HBM slice (SPM), L3=host DRAM (the shared-virtual-memory
+    tier reached over hero_memcpy DMA — what the serving swap tier budgets)."""
 
     def __init__(self, l1_bytes: int = VMEM_BYTES - VMEM_RESERVE,
-                 l2_bytes: int = HBM_BYTES // 8):
-        self.levels = {1: SpmLevel("L1/VMEM", l1_bytes), 2: SpmLevel("L2/HBM", l2_bytes)}
+                 l2_bytes: int = HBM_BYTES // 8,
+                 l3_bytes: int = DRAM_BYTES // 8):
+        self.levels = {1: SpmLevel("L1/VMEM", l1_bytes),
+                       2: SpmLevel("L2/HBM", l2_bytes),
+                       3: SpmLevel("L3/DRAM", l3_bytes)}
 
     def capacity(self, level: int) -> int:
         return self.levels[level].capacity()
+
+    def can_alloc(self, level: int, nbytes: int) -> bool:
+        return self.levels[level].can_alloc(nbytes)
 
     def malloc(self, level: int, nbytes: int) -> Optional[int]:
         return self.levels[level].malloc(nbytes)
@@ -179,6 +211,18 @@ def hero_l2_malloc(nbytes: int) -> Optional[int]:
 
 def hero_l2_free(handle: int) -> None:
     _DEFAULT.free(2, handle)
+
+
+def hero_l3_capacity() -> int:
+    return _DEFAULT.capacity(3)
+
+
+def hero_l3_malloc(nbytes: int) -> Optional[int]:
+    return _DEFAULT.malloc(3, nbytes)
+
+
+def hero_l3_free(handle: int) -> None:
+    _DEFAULT.free(3, handle)
 
 
 def paper_tile_side(n_arrays: int, dims: int, capacity_words: Optional[int] = None,

@@ -4,10 +4,16 @@ Usage (CPU container, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --requests 8
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --paged \
       --page-tokens 16 --pages 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --tiered \
+      --pages 8 --host-budget-mb 64 --requests 16
 
 ``--paged`` switches the engine to the page-table KV cache (vmm-backed pool +
 paged flash-decode kernel); ``--pages`` caps the physical page pool — when
 omitted it defaults to parity with the dense pool's HBM footprint.
+``--tiered`` layers a host-DRAM swap tier under the paged pool: when the hot
+tier is exhausted and requests wait, the LRU resident's pages swap out over
+hero_memcpy DMA and the request resumes later (preemptive scheduling);
+``--host-budget-mb`` bounds the cold tier (HeroMemory L3/DRAM level).
 """
 from __future__ import annotations
 
@@ -36,6 +42,13 @@ def main():
                     help="tokens per physical KV page")
     ap.add_argument("--pages", type=int, default=None,
                     help="physical page-pool size (default: dense parity)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="host-DRAM swap tier under the paged pool "
+                         "(preemptive scheduling; implies --paged)")
+    ap.add_argument("--host-budget-mb", type=int, default=None,
+                    help="cold-tier budget in MiB (HeroMemory L3/DRAM)")
+    ap.add_argument("--preempt-quantum", type=int, default=1,
+                    help="decode steps a resident is exempt from eviction")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
@@ -43,7 +56,10 @@ def main():
     params, _ = blocks.split_params(params_t)
     eng = Engine(cfg, params, n_slots=args.slots, max_seq=args.max_seq,
                  paged=args.paged, page_tokens=args.page_tokens,
-                 n_pages=args.pages)
+                 n_pages=args.pages, tiered=args.tiered,
+                 host_budget_bytes=(args.host_budget_mb * 1024 * 1024
+                                    if args.host_budget_mb else None),
+                 preempt_quantum=args.preempt_quantum)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -56,16 +72,25 @@ def main():
     wall = time.time() - t0
     total_new = sum(len(r.tokens_out) for r in done)
     occ = np.mean(eng.stats["batch_occupancy"]) if eng.stats["batch_occupancy"] else 0
-    mode = "paged" if args.paged else "dense"
+    mode = "tiered" if args.tiered else ("paged" if args.paged else "dense")
     print(f"[serve:{mode}] {len(done)} requests, {total_new} tokens in "
           f"{wall:.2f}s ({total_new / wall:.1f} tok/s), "
           f"decode steps {eng.stats['decode_steps']}, "
           f"mean batch occupancy {occ:.2f}")
-    if args.paged:
+    if args.paged or args.tiered:
         a = eng.pool.alloc
-        print(f"[serve:paged] pool {a.n_pages} pages × {a.page_tokens} tok "
+        print(f"[serve:{mode}] pool {a.n_pages} pages × {a.page_tokens} tok "
               f"({eng.pool.footprint_bytes()} B), free {a.free_pages}, "
               f"admission refusals {eng.stats['admission_refusals']}")
+    if args.tiered:
+        s = eng.stats_summary()
+        print(f"[serve:tiered] preemptions {s['preemptions']}, swap out "
+              f"{s['swap_out_count']}×/{s['swap_out_bytes']} B, swap in "
+              f"{s['swap_in_count']}×/{s['swap_in_bytes']} B, peak host "
+              f"{s['peak_host_bytes']} B, peak in-system "
+              f"{s['peak_in_system']} seqs, queue p50/p90/p99 "
+              f"{s['queue_lat_p50_s']:.3f}/{s['queue_lat_p90_s']:.3f}/"
+              f"{s['queue_lat_p99_s']:.3f} s")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,1 @@
-from repro.serve import engine, kvcache  # noqa: F401
+from repro.serve import engine, kvcache, tiering  # noqa: F401

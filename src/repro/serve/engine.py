@@ -25,6 +25,7 @@ from repro.core.offload import Mailbox, TargetRegion
 from repro.models import blocks, transformer
 from repro.serve import paged_step
 from repro.serve.kvcache import CachePool, PagedCachePool
+from repro.serve.tiering import TieredCachePool
 from repro.train import step as steps
 
 
@@ -48,27 +49,55 @@ class Engine:
       page-table flash-decode kernel, and the mailbox drain admits by *page
       availability* (reservation-based, refusing instead of crashing when
       the pool is exhausted).
+    * tiered (``tiered=True``, implies paged): a TieredCachePool — the paged
+      hot tier over a host-DRAM swap tier (hero_memcpy DMA). Admission is
+      two-level: when the mailbox has a waiting request and the hot tier is
+      exhausted, the LRU resident (by last-decoded step, then oldest
+      admission) is preempted — its pages swap out to host, its request is
+      requeued, and it resumes later via an async prefetch started right
+      after a decode step, whose host→dev DMA overlaps the next admission
+      pass. Only total-capacity exhaustion refuses.
     """
 
     def __init__(self, cfg: transformer.ModelConfig, params, n_slots: int = 4,
                  max_seq: int = 256, greedy: bool = True, paged: bool = False,
-                 page_tokens: int = 16, n_pages: Optional[int] = None):
+                 page_tokens: int = 16, n_pages: Optional[int] = None,
+                 tiered: bool = False,
+                 host_budget_bytes: Optional[int] = None,
+                 preempt_quantum: int = 1):
         self.cfg = cfg
         self.params = params
-        self.paged = paged
+        self.paged = paged or tiered
+        self.tiered = tiered
         self.mailbox = Mailbox(depth=256)
         self.active: Dict[int, Request] = {}       # slot -> request
         self.greedy = greedy
         self.stats = {"decode_steps": 0, "prefills": 0, "batch_occupancy": [],
-                      "admission_refusals": 0}
-        if paged:
+                      "admission_refusals": 0, "preemptions": 0,
+                      "swap_out_count": 0, "swap_in_count": 0,
+                      "swap_out_bytes": 0, "swap_in_bytes": 0,
+                      "queue_lat_s": []}
+        if self.paged:
             if n_pages is None:
                 # parity budget with the dense pool's HBM footprint (floor:
                 # never exceed n_slots × max_seq tokens of physical pages)
                 n_pages = max(1, (n_slots * max_seq) // page_tokens)
-            self.pool = PagedCachePool(cfg, max_batch=n_slots, max_seq=max_seq,
-                                       n_pages=n_pages, page_tokens=page_tokens)
+            if tiered:
+                self.pool = TieredCachePool(
+                    cfg, max_batch=n_slots, max_seq=max_seq, n_pages=n_pages,
+                    page_tokens=page_tokens,
+                    host_budget_bytes=host_budget_bytes)
+            else:
+                self.pool = PagedCachePool(cfg, max_batch=n_slots,
+                                           max_seq=max_seq, n_pages=n_pages,
+                                           page_tokens=page_tokens)
             self._admit_stalled = False
+            self._pending_swapin = None            # (Request, PendingSwapIn)
+            self._last_decoded = np.zeros(n_slots, np.int64)
+            self._admitted_at = np.zeros(n_slots, np.int64)
+            self._resident_since = np.zeros(n_slots, np.int64)
+            self._admit_clock = 0
+            self.preempt_quantum = max(1, preempt_quantum)
             self._decode = TargetRegion(
                 paged_step.make_paged_decode_step(cfg, page_tokens),
                 name="paged_decode")
@@ -90,7 +119,8 @@ class Engine:
         for _ in range(max_steps):
             self._admit_paged() if self.paged else self._admit()
             if not self.active:
-                if len(self.mailbox) == 0:
+                if len(self.mailbox) == 0 and \
+                   getattr(self, "_pending_swapin", None) is None:
                     break
                 continue
             finished.extend(self._decode_step_paged() if self.paged
@@ -132,6 +162,8 @@ class Engine:
             req.tokens_out.append(nxt)
             self.pool.lengths[slot] = L + 1
             self.active[slot] = req
+            self.stats["queue_lat_s"].append(
+                time.perf_counter() - req.t_submit)
             self.stats["prefills"] += 1
 
     def _decode_step(self) -> List[Request]:
@@ -162,13 +194,86 @@ class Engine:
         return finished
 
     # -- paged internals ---------------------------------------------------
+    def _activate(self, slot: int, req: Request, first_admit: bool):
+        self.active[slot] = req
+        self._admit_clock += 1
+        self._admitted_at[slot] = self._admit_clock
+        self._last_decoded[slot] = self.stats["decode_steps"]
+        self._resident_since[slot] = self.stats["decode_steps"]
+        if first_admit:
+            self.stats["queue_lat_s"].append(
+                time.perf_counter() - req.t_submit)
+
+    def _pick_victim(self) -> Optional[int]:
+        """LRU preemption victim: least-recently-decoded resident, oldest
+        admission breaking ties (all residents decode together, so the
+        tie-break usually decides). A resident is exempt until it has decoded
+        ``preempt_quantum`` steps in its current residency — every admitted
+        sequence makes progress before it can be evicted again, which is
+        what guarantees the rotation terminates."""
+        best, best_key = None, None
+        for slot in self.active:
+            if self.stats["decode_steps"] - self._resident_since[slot] \
+               < self.preempt_quantum:
+                continue
+            if not self.pool.can_swap_out(slot):
+                continue
+            key = (self._last_decoded[slot], self._admitted_at[slot])
+            if best_key is None or key < best_key:
+                best, best_key = slot, key
+        return best
+
+    def _preempt_until(self, can_fit) -> bool:
+        """Evict LRU residents to host DRAM until ``can_fit()`` passes.
+        Returns False (leaving partial evictions in place — their capacity
+        stays freed) when no eligible victim remains."""
+        while not can_fit():
+            victim = self._pick_victim()
+            if victim is None:
+                return False
+            vreq = self.active.pop(victim)
+            self.pool.swap_out(victim)
+            # back of the queue: the waiting request goes first, the victim
+            # resumes in FIFO turn (front-requeue only if the mailbox is
+            # full — never lose a request)
+            if not self.mailbox.put(vreq):
+                self.mailbox.requeue(vreq)
+            self.stats["preemptions"] += 1
+            self._sync_swap_stats()
+        return True
+
+    def _sync_swap_stats(self):
+        self.stats["swap_out_count"] = self.pool.swap_out_count
+        self.stats["swap_in_count"] = self.pool.swap_in_count
+        self.stats["swap_out_bytes"] = self.pool.swap_out_bytes
+        self.stats["swap_in_bytes"] = self.pool.swap_in_bytes
+
+    def _finish_pending_swapin(self):
+        if self._pending_swapin is None:
+            return
+        req, token = self._pending_swapin
+        self._pending_swapin = None
+        slot = self.pool.swap_in_finish(token)
+        self._activate(slot, req, first_admit=False)
+        self._sync_swap_stats()
+
     def _admit_paged(self):
         """Admit by page availability: the drain stops at the first request
         the pool cannot take (requeued at the front, FIFO preserved).
 
-        A refusal *stalls* admission until a release frees capacity —
-        otherwise every decode step would drain/refuse/requeue the same head
-        request, inflating the refusal stat and churning the mailbox lock."""
+        Untiered, a refusal *stalls* admission until a release frees
+        capacity — otherwise every decode step would drain/refuse/requeue the
+        same head request, inflating the refusal stat and churning the
+        mailbox lock. Tiered, a refusal instead preempts the LRU resident
+        (pages swap out to host DRAM) and the stall clears every pass:
+        decode steps expire residency quanta, so a retry can make progress —
+        only total-capacity exhaustion leaves the head waiting."""
+        if self.tiered:
+            if not self.active:
+                # no decode step will run to land the prefetch — finish it
+                # here so the run loop always makes progress
+                self._finish_pending_swapin()
+            self._admit_stalled = False
         if getattr(self, "_admit_stalled", False):
             return
         while True:
@@ -176,6 +281,20 @@ class Engine:
             if not reqs:
                 break
             req = reqs[0]
+            if self.tiered and self.pool.is_cold(req.seq_id):
+                # resume path: restore the preempted sequence's pages from
+                # host DRAM (no re-prefill — its KV and tokens_out survive)
+                if not self.pool.can_resume(req.seq_id) and \
+                   not self._preempt_until(
+                        lambda: self.pool.can_resume(req.seq_id)):
+                    self.mailbox.requeue(req)
+                    self.stats["admission_refusals"] += 1
+                    self._admit_stalled = True
+                    break
+                slot = self.pool.swap_in(req.seq_id)
+                self._activate(slot, req, first_admit=False)
+                self._sync_swap_stats()
+                continue
             L = len(req.prompt)
             if not self.pool.admissible_ever(L, req.max_new):
                 # could never fit even on an idle pool: reject outright so it
@@ -183,10 +302,12 @@ class Engine:
                 self.stats["rejected"] = self.stats.get("rejected", 0) + 1
                 continue
             if not self.pool.can_admit(L, req.max_new):
-                self.mailbox.requeue(req)
-                self.stats["admission_refusals"] += 1
-                self._admit_stalled = True
-                break
+                if not (self.tiered and self._preempt_until(
+                        lambda: self.pool.can_admit(L, req.max_new))):
+                    self.mailbox.requeue(req)
+                    self.stats["admission_refusals"] += 1
+                    self._admit_stalled = True
+                    break
             slot = self.pool.admit(req.seq_id, L, req.max_new)
             # dense B=1 prefill over the prompt, cache padded to a page
             # multiple, then scattered into this sequence's pages
@@ -197,10 +318,16 @@ class Engine:
             self.pool.write_prefill(slot, caches, L)
             nxt = int(jnp.argmax(logits_last[0, -1]))
             req.tokens_out.append(nxt)
-            self.active[slot] = req
+            self._activate(slot, req, first_admit=True)
             self.stats["prefills"] += 1
 
     def _decode_step_paged(self) -> List[Request]:
+        if self.tiered:
+            # land the prefetch started at the end of the previous step: its
+            # host→dev DMA has been overlapping the admission pass (and any
+            # prefill dispatches) in between; the resumed slot joins this
+            # decode batch
+            self._finish_pending_swapin()
         B = self.pool.max_batch
         toks = np.zeros((B, 1), np.int32)
         for slot, req in self.active.items():
@@ -216,9 +343,21 @@ class Engine:
             active)
         self.stats["decode_steps"] += 1
         self.stats["batch_occupancy"].append(len(self.active) / B)
+        for slot in self.active:
+            self._last_decoded[slot] = self.stats["decode_steps"]
         used = self.pool.used_bytes()
         self.stats["peak_used_bytes"] = max(
             self.stats.get("peak_used_bytes", 0), used)
+        in_system = len(self.active)
+        if self.tiered:
+            # an in-flight prefetch stays in cold_seqs() until it lands, so
+            # the cold count already covers it — no separate pending term
+            in_system += len(self.pool.cold_seqs())
+            self.stats["peak_host_bytes"] = max(
+                self.stats.get("peak_host_bytes", 0),
+                self.pool.host_used_bytes())
+        self.stats["peak_in_system"] = max(
+            self.stats.get("peak_in_system", 0), in_system)
         finished = []
         for slot in list(self.active):
             req = self.active[slot]
@@ -234,4 +373,52 @@ class Engine:
                 del self.active[slot]
                 self.pool.release(slot)
                 self._admit_stalled = False       # capacity freed: retry admits
+        if self.tiered:
+            # double-buffer: with this step's releases applied, start the
+            # head-of-queue resume's host→dev DMAs now; they overlap the
+            # upcoming admission pass and land at the top of the next step
+            self._start_prefetch()
         return finished
+
+    def _start_prefetch(self):
+        """If the mailbox head is a preempted (cold) sequence the hot tier
+        can take right now, start its host→dev page DMAs; they are finished
+        (waited + scattered) at the top of the next decode step, so the
+        transfer overlaps the admission pass in between (AutoDMA's
+        load/execute phasing, lifted to the serving level)."""
+        if self._pending_swapin is not None or not self.pool.cold_seqs():
+            return
+        head = self.mailbox.drain(1)
+        if not head:
+            return
+        req = head[0]
+        if self.pool.is_cold(req.seq_id) and self.pool.can_resume(req.seq_id):
+            self._pending_swapin = (req, self.pool.swap_in_start(req.seq_id))
+        else:
+            self.mailbox.requeue(req)
+
+    # -- hero_perf-style counter summary ----------------------------------
+    def stats_summary(self) -> Dict[str, Any]:
+        """Engine counters in report form: occupancy, swap traffic,
+        preemptions, and queue-latency percentiles (time from submit to
+        first prefill)."""
+        occ = self.stats["batch_occupancy"]
+        lat = sorted(self.stats["queue_lat_s"])
+        out = {
+            "decode_steps": self.stats["decode_steps"],
+            "prefills": self.stats["prefills"],
+            "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
+            "admission_refusals": self.stats["admission_refusals"],
+            "preemptions": self.stats["preemptions"],
+            "swap_out_count": self.stats["swap_out_count"],
+            "swap_in_count": self.stats["swap_in_count"],
+            "swap_out_bytes": self.stats["swap_out_bytes"],
+            "swap_in_bytes": self.stats["swap_in_bytes"],
+            "peak_used_bytes": self.stats.get("peak_used_bytes", 0),
+            "peak_host_bytes": self.stats.get("peak_host_bytes", 0),
+            "peak_in_system": self.stats.get("peak_in_system", 0),
+        }
+        for p in (50, 90, 99):
+            out[f"queue_lat_p{p}_s"] = (
+                float(np.percentile(lat, p)) if lat else 0.0)
+        return out

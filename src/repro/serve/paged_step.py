@@ -32,6 +32,20 @@ from repro.models import blocks, transformer
 from repro.kernels.paged_decode_attention import paged_flash_decode
 
 
+def gather_pages(pool: jax.Array, page_ids: jax.Array) -> jax.Array:
+    """Pull a sequence's pages out of a pool leaf: [count, P, K, pt, hd] +
+    n page ids → [count, n, K, pt, hd]. Dispatched async; the caller chains a
+    hero_memcpy_dev2host_async on the result (swap-out's gather phase)."""
+    return pool[:, page_ids]
+
+
+def scatter_pages(pool: jax.Array, rows: jax.Array,
+                  page_ids: jax.Array) -> jax.Array:
+    """Inverse of gather_pages: land [count, n, K, pt, hd] rows on the given
+    page ids of a pool leaf (swap-in's store phase)."""
+    return pool.at[:, page_ids].set(rows.astype(pool.dtype))
+
+
 def _scatter_token(pool: jax.Array, tok: jax.Array, page_table: jax.Array,
                    lengths: jax.Array, active: jax.Array,
                    page_tokens: int) -> jax.Array:

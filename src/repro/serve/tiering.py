@@ -1,0 +1,291 @@
+"""Tiered KV cache: HBM hot tier over a host-DRAM swap tier (HEROv2 §2.4).
+
+The paper's core claim is seamless host↔accelerator data sharing over one
+DMA API (``hero_memcpy_*``). Applied to serving: device HBM holds only the
+*hot* working set of KV pages (the PR-1 ``PagedCachePool``); everything else
+lives in host DRAM, budgeted by the ``HeroMemory`` L3/DRAM level, and moves
+page-granularly over ``hero_memcpy_dev2host_async`` / ``_host2dev_async``.
+
+Swap phasing mirrors AutoDMA's load/execute/store pipeline:
+
+* **swap-out** — one ``gather_pages`` per pool leaf is dispatched (device-side
+  gather), then every leaf's dev→host DMA is started before any is waited:
+  the transfers double-buffer against each other, so the wall cost is the
+  slowest leaf, not the sum.
+* **swap-in** — split into ``swap_in_start`` (allocate hot pages, start all
+  host→dev DMAs, return a :class:`PendingSwapIn`) and ``swap_in_finish``
+  (wait + scatter into the pool). The engine calls ``start`` right after
+  dispatching a decode step and ``finish`` on the next admission pass, so the
+  host→device traffic overlaps device compute (the paper's load phase of
+  iteration i+1 overlapping execute of iteration i).
+
+Accounting invariants (property-tested in tests/test_paged_kvcache.py):
+a sequence is resident in exactly one tier; hot pages never double-allocate;
+releasing everything restores both the page pool and the L3 arena.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dma, heromem
+from repro.models import transformer
+from repro.serve import paged_step
+from repro.serve.kvcache import PagedCachePool
+
+
+@dataclasses.dataclass
+class ColdSeq:
+    """One swapped-out sequence: its KV pages in host DRAM + resume metadata."""
+    seq_id: int
+    length: int                 # valid KV rows at swap-out
+    n_pages: int                # pages owned at swap-out (re-alloc'd on resume)
+    reserved: int               # worst-case reservation, restored on resume
+    nbytes: int                 # page_bytes × n_pages (L3 budget accounting)
+    mem_handle: int             # heromem L3 allocation handle
+    host: List[List[Dict[str, np.ndarray]]]  # [group][pos]{k,v} page rows
+
+
+@dataclasses.dataclass
+class PendingSwapIn:
+    """An in-flight host→device prefetch (double-buffer token)."""
+    seq_id: int
+    slot: int
+    rec: ColdSeq
+    handles: List[List[Dict[str, dma.TransferHandle]]]
+
+
+class TieredCachePool:
+    """Two-tier paged KV pool: HBM hot tier + host-DRAM cold tier.
+
+    Wraps a :class:`PagedCachePool` and adds page-granular swap. The engine
+    sees the hot pool's interface (admit/ensure/release/device_page_tables/
+    write_prefill) plus the swap ops; admission becomes two-level — a request
+    refused by the hot tier may still enter the system by preempting a
+    resident sequence into host DRAM (the engine's policy; this class only
+    enforces capacity on both tiers).
+    """
+
+    def __init__(self, cfg: transformer.ModelConfig, max_batch: int,
+                 max_seq: int, n_pages: int, page_tokens: int = 16,
+                 host_budget_bytes: Optional[int] = None, dtype=None,
+                 hero: Optional[heromem.HeroMemory] = None):
+        self.hot = PagedCachePool(cfg, max_batch=max_batch, max_seq=max_seq,
+                                  n_pages=n_pages, page_tokens=page_tokens,
+                                  dtype=dtype)
+        if host_budget_bytes is None:
+            # default: an 8×-the-hot-pool cold tier (the o1heap pow2
+            # rounding makes the budget conservative, so size generously)
+            host_budget_bytes = 8 * n_pages * self.hot.alloc.page_bytes
+        self.hero = hero or heromem.HeroMemory(l3_bytes=host_budget_bytes)
+        self._cold: Dict[int, ColdSeq] = {}
+        self.swap_out_count = 0
+        self.swap_in_count = 0
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
+
+    # -- hot-pool delegation (the engine's existing paged interface) -------
+    @property
+    def cfg(self):
+        return self.hot.cfg
+
+    @property
+    def max_batch(self):
+        return self.hot.max_batch
+
+    @property
+    def max_seq(self):
+        return self.hot.max_seq
+
+    @property
+    def page_tokens(self):
+        return self.hot.page_tokens
+
+    @property
+    def alloc(self):
+        return self.hot.alloc
+
+    @property
+    def pages(self):
+        return self.hot.pages
+
+    @pages.setter
+    def pages(self, v):
+        self.hot.pages = v
+
+    @property
+    def seq_ids(self):
+        return self.hot.seq_ids
+
+    @property
+    def lengths(self):
+        return self.hot.lengths
+
+    def pages_for(self, n_tokens: int) -> int:
+        return self.hot.pages_for(n_tokens)
+
+    def padded_len(self, n_tokens: int) -> int:
+        return self.hot.padded_len(n_tokens)
+
+    def admissible_ever(self, prompt_len: int, max_new: int) -> bool:
+        # per-request feasibility is a *hot-tier* question: a sequence must
+        # fit entirely in HBM while it decodes, whatever the cold tier holds
+        return self.hot.admissible_ever(prompt_len, max_new)
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        return self.hot.can_admit(prompt_len, max_new)
+
+    def admit(self, seq_id: int, prompt_len: int, max_new: int) -> int:
+        if seq_id in self._cold:
+            raise ValueError(f"tiered KV: seq_id {seq_id} is resident in the "
+                             "cold tier (resume it, don't re-admit)")
+        return self.hot.admit(seq_id, prompt_len, max_new)
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        self.hot.ensure(slot, n_tokens)
+
+    def release(self, slot: int) -> None:
+        self.hot.release(slot)
+
+    def write_prefill(self, slot: int, caches, length: int) -> None:
+        self.hot.write_prefill(slot, caches, length)
+
+    def device_page_tables(self) -> np.ndarray:
+        return self.hot.device_page_tables()
+
+    def token_bytes(self) -> int:
+        return self.hot.token_bytes()
+
+    def footprint_bytes(self) -> int:
+        return self.hot.footprint_bytes()
+
+    def used_bytes(self) -> int:
+        return self.hot.used_bytes()
+
+    # -- cold-tier state ---------------------------------------------------
+    def is_cold(self, seq_id: int) -> bool:
+        return seq_id in self._cold
+
+    def cold_seqs(self) -> List[int]:
+        return list(self._cold)
+
+    def host_used_bytes(self) -> int:
+        return sum(r.nbytes for r in self._cold.values())
+
+    def host_free_bytes(self) -> int:
+        return self.hero.capacity(3)
+
+    def _slot_bytes(self, slot: int) -> int:
+        sid = int(self.hot.seq_ids[slot])
+        return len(self.hot.alloc._seq_pages[sid]) * self.hot.alloc.page_bytes
+
+    def can_swap_out(self, slot: int) -> bool:
+        """Host budget check via the o1heap guaranteed-success probe: a True
+        here means swap_out cannot fail mid-eviction."""
+        if int(self.hot.seq_ids[slot]) < 0:
+            return False
+        return self.hero.can_alloc(3, self._slot_bytes(slot))
+
+    # -- swap-out: HBM → host DRAM ----------------------------------------
+    def swap_out(self, slot: int) -> int:
+        """Evict one resident sequence's pages to host DRAM; frees its hot
+        pages + slot + reservation. Returns the seq_id (for requeueing)."""
+        sid = int(self.hot.seq_ids[slot])
+        if sid < 0:
+            raise ValueError(f"tiered KV: swap_out of free slot {slot}")
+        page_ids = self.hot.alloc._seq_pages[sid]
+        nbytes = len(page_ids) * self.hot.alloc.page_bytes
+        mem = self.hero.malloc(3, nbytes)
+        if mem is None:
+            raise MemoryError("tiered KV: host-DRAM budget exhausted "
+                              f"({nbytes} B for seq {sid})")
+        idx = jnp.asarray(page_ids, jnp.int32)
+        # load phase: dispatch every leaf's gather, start every dev→host DMA
+        # before waiting any — the transfers overlap (double-buffered)
+        handles: List[List[Dict[str, dma.TransferHandle]]] = []
+        for per_pos in self.hot.pages:
+            row = []
+            for kv in per_pos:
+                row.append({name: dma.hero_memcpy_dev2host_async(
+                    paged_step.gather_pages(kv[name], idx))
+                    for name in ("k", "v")})
+            handles.append(row)
+        dma.hero_memcpy_wait_all(
+            [h for row in handles for ent in row for h in ent.values()])
+        host = [[{name: np.asarray(h.value) for name, h in ent.items()}
+                 for ent in row] for row in handles]
+        self._cold[sid] = ColdSeq(
+            seq_id=sid, length=int(self.hot.lengths[slot]),
+            n_pages=len(page_ids),
+            reserved=self.hot._reserved.get(sid, len(page_ids)),
+            nbytes=nbytes, mem_handle=mem, host=host)
+        self.hot.release(slot)
+        self.swap_out_count += 1
+        self.swap_out_bytes += nbytes
+        return sid
+
+    # -- swap-in: host DRAM → HBM -----------------------------------------
+    def can_resume(self, seq_id: int) -> bool:
+        rec = self._cold.get(seq_id)
+        if rec is None:
+            return False
+        if not np.any(self.hot.seq_ids < 0):
+            return False
+        need = max(rec.reserved, rec.n_pages)
+        return need <= self.hot.alloc.free_pages - self.hot._reservation_debt()
+
+    def swap_in_start(self, seq_id: int) -> PendingSwapIn:
+        """Claim hot capacity and start all host→dev DMAs (non-blocking).
+        The caller overlaps device work before calling swap_in_finish."""
+        if not self.can_resume(seq_id):
+            raise MemoryError(f"tiered KV: cannot resume seq {seq_id} "
+                              "(hot tier exhausted or not cold)")
+        rec = self._cold[seq_id]
+        slot = int(np.where(self.hot.seq_ids < 0)[0][0])
+        self.hot._reserved[seq_id] = rec.reserved
+        self.hot.alloc.alloc_seq(seq_id, rec.n_pages * self.hot.page_tokens)
+        self.hot.seq_ids[slot] = seq_id
+        self.hot.lengths[slot] = 0           # valid only after finish
+        handles = [[{name: dma.hero_memcpy_host2dev_async(None, arr)
+                     for name, arr in ent.items()}
+                    for ent in row] for row in rec.host]
+        return PendingSwapIn(seq_id=seq_id, slot=slot, rec=rec,
+                             handles=handles)
+
+    def swap_in_finish(self, pending: PendingSwapIn) -> int:
+        """Wait the prefetch and scatter the pages into the hot pool; the
+        sequence is resident again (same KV bits, possibly new physical
+        pages). Returns the slot."""
+        rec = pending.rec
+        idx = jnp.asarray(self.hot.alloc._seq_pages[rec.seq_id], jnp.int32)
+        dma.hero_memcpy_wait_all(
+            [h for row in pending.handles for ent in row
+             for h in ent.values()])
+        new_pages = []
+        for gi, per_pos in enumerate(self.hot.pages):
+            new_per_pos = []
+            for pi, kv in enumerate(per_pos):
+                new_per_pos.append({
+                    name: paged_step.scatter_pages(
+                        kv[name], pending.handles[gi][pi][name].value, idx)
+                    for name in ("k", "v")})
+            new_pages.append(tuple(new_per_pos))
+        self.hot.pages = new_pages
+        self.hot.lengths[pending.slot] = rec.length
+        self.hero.free(3, rec.mem_handle)
+        del self._cold[rec.seq_id]
+        self.swap_in_count += 1
+        self.swap_in_bytes += rec.nbytes
+        return pending.slot
+
+    def swap_in(self, seq_id: int) -> int:
+        """Blocking convenience: start + finish in one call."""
+        return self.swap_in_finish(self.swap_in_start(seq_id))
+
+    def drop_cold(self, seq_id: int) -> None:
+        """Discard a cold sequence without resuming it (cancelled request)."""
+        rec = self._cold.pop(seq_id)
+        self.hero.free(3, rec.mem_handle)

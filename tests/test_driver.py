@@ -64,7 +64,7 @@ def test_grad_accum_matches_plain():
 
 
 @pytest.mark.slow  # subprocess CLI end-to-end
-@pytest.mark.parametrize("mode", ["dense", "paged"])
+@pytest.mark.parametrize("mode", ["dense", "paged", "tiered"])
 def test_serve_driver_cli(mode):
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -72,8 +72,14 @@ def test_serve_driver_cli(mode):
            "--slots", "2", "--max-new", "3", "--max-seq", "32"]
     if mode == "paged":
         cmd += ["--paged", "--page-tokens", "8"]
+    elif mode == "tiered":
+        # 2 pages force oversubscription → at least one preemptive swap
+        cmd += ["--tiered", "--page-tokens", "8", "--pages", "2",
+                "--host-budget-mb", "1"]
     r = subprocess.run(cmd, env=env, capture_output=True, text=True,
                        timeout=400)
     assert "3 requests" in r.stdout, r.stdout + r.stderr
     if mode == "paged":
         assert "admission refusals" in r.stdout
+    elif mode == "tiered":
+        assert "preemptions" in r.stdout and "swap out" in r.stdout

@@ -1,12 +1,22 @@
 """PagedCachePool: page lifecycle, page-table translation, admission control,
-and leak-freedom over full request lifecycles."""
+and leak-freedom over full request lifecycles — plus the TieredCachePool's
+two-tier accounting (hot pages + host-DRAM swap records + HeroMemory L3
+arena) under random admit/ensure/release/swap sequences."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import configs
+from repro.core import heromem
 from repro.serve import kvcache
+from repro.serve.tiering import TieredCachePool
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def _pool(n_pages=16, page_tokens=8, max_batch=2, max_seq=64):
@@ -157,3 +167,164 @@ def test_footprint_accounting():
     assert pool.used_bytes() == 0
     pool.admit(seq_id=0, prompt_len=20, max_new=0)          # 3 pages
     assert pool.used_bytes() == 3 * 8 * tb
+
+
+# --------------------------------------------------------------------------
+# TieredCachePool — host-DRAM swap tier
+# --------------------------------------------------------------------------
+def _tiered(n_pages=8, page_tokens=4, max_batch=3, max_seq=16,
+            host_budget=8192):
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    return TieredCachePool(cfg, max_batch=max_batch, max_seq=max_seq,
+                           n_pages=n_pages, page_tokens=page_tokens,
+                           host_budget_bytes=host_budget)
+
+
+def test_tiered_swap_roundtrip_bitexact():
+    """swap-out → swap-in must restore the sequence's KV bit-exactly, even
+    though it may land on different physical pages."""
+    from repro.models import transformer
+    pool = _tiered(host_budget=1 << 16)
+    pt = pool.page_tokens
+    L = 10                                                  # 3 pages
+    slot = pool.admit(seq_id=0, prompt_len=L, max_new=0)
+    S_p = pool.padded_len(L)
+    caches = transformer.init_caches(pool.cfg, 1, S_p)
+    rng = np.random.default_rng(2)
+    caches = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape), a.dtype), caches)
+    pool.write_prefill(slot, caches, L)
+    before = [[{n: np.asarray(kv[n][:, pool.alloc._seq_pages[0]])
+                for n in ("k", "v")} for kv in per_pos]
+              for per_pos in pool.pages]
+    pool.swap_out(slot)
+    assert pool.is_cold(0) and pool.alloc.free_pages == pool.alloc.n_pages
+    new_slot = pool.swap_in(0)
+    assert int(pool.lengths[new_slot]) == L
+    after = [[{n: np.asarray(kv[n][:, pool.alloc._seq_pages[0]])
+               for n in ("k", "v")} for kv in per_pos]
+             for per_pos in pool.pages]
+    for b_row, a_row in zip(before, after):
+        for b_ent, a_ent in zip(b_row, a_row):
+            for n in ("k", "v"):
+                np.testing.assert_array_equal(b_ent[n], a_ent[n])
+    assert pool.swap_out_bytes == pool.swap_in_bytes == \
+        3 * pool.alloc.page_bytes
+    pool.release(new_slot)
+    assert pool.hero.levels[3].in_use() == 0
+
+
+def test_tiered_cold_seq_cannot_readmit():
+    pool = _tiered()
+    slot = pool.admit(seq_id=3, prompt_len=4, max_new=0)
+    pool.lengths[slot] = 4
+    pool.swap_out(slot)
+    with pytest.raises(ValueError):
+        pool.admit(seq_id=3, prompt_len=4, max_new=0)
+    pool.drop_cold(3)
+    assert pool.hero.levels[3].in_use() == 0
+
+
+def test_tiered_host_budget_refuses_guaranteed():
+    """can_swap_out is a guarantee: once it says no, swap_out must raise (and
+    leave the resident sequence untouched)."""
+    pool = _tiered(host_budget=4096)        # fits one 2-page seq (pow2 model)
+    a = pool.admit(seq_id=0, prompt_len=8, max_new=0)
+    b = pool.admit(seq_id=1, prompt_len=8, max_new=0)
+    pool.lengths[a] = pool.lengths[b] = 8
+    assert pool.can_swap_out(a)
+    pool.swap_out(a)
+    assert not pool.can_swap_out(b)
+    with pytest.raises(MemoryError):
+        pool.swap_out(b)
+    assert int(pool.seq_ids[b]) == 1        # victim untouched after refusal
+
+
+# -- random-op accounting property -----------------------------------------
+def _active_slots(pool):
+    return [s for s in range(pool.max_batch) if pool.seq_ids[s] >= 0]
+
+
+def _check_tier_invariants(pool):
+    owned = [p for ps in pool.alloc._seq_pages.values() for p in ps]
+    assert len(owned) == len(set(owned)), "hot page double-allocated"
+    assert len(owned) + pool.alloc.free_pages == pool.alloc.n_pages, \
+        "hot pages leaked"
+    hot_sids = {int(s) for s in pool.seq_ids if s >= 0}
+    cold_sids = set(pool.cold_seqs())
+    assert not (hot_sids & cold_sids), "sequence resident in both tiers"
+    assert set(pool.alloc._seq_pages) == hot_sids
+    expect = sum(heromem.fragment_size(r.nbytes)
+                 for r in pool._cold.values())
+    assert pool.hero.levels[3].in_use() == expect, "L3 arena drifted"
+
+
+def _apply_tier_ops(pool, ops):
+    next_sid = 0
+    worst = {}                              # sid -> reservation bound (tokens)
+    for code, a, b in ops:
+        kind = code % 5
+        if kind == 0:                                       # admit
+            L, max_new = 1 + a % 12, b % 6
+            if pool.can_admit(L, max_new):
+                slot = pool.admit(next_sid, L, max_new)
+                pool.lengths[slot] = L
+                worst[next_sid] = min(L + max(max_new, 1), pool.max_seq)
+                next_sid += 1
+        elif kind == 1:                                     # ensure (grow)
+            acts = _active_slots(pool)
+            if acts:
+                slot = acts[a % len(acts)]
+                sid = int(pool.seq_ids[slot])
+                tgt = min(int(pool.lengths[slot]) + 1 + b % 4, worst[sid])
+                if tgt > int(pool.lengths[slot]):
+                    pool.ensure(slot, tgt)                  # must never fail
+                    pool.lengths[slot] = tgt
+        elif kind == 2:                                     # release
+            acts = _active_slots(pool)
+            if acts:
+                pool.release(acts[a % len(acts)])
+        elif kind == 3:                                     # swap out
+            acts = _active_slots(pool)
+            if acts:
+                slot = acts[a % len(acts)]
+                if pool.can_swap_out(slot):
+                    pool.swap_out(slot)
+        else:                                               # swap in
+            cold = pool.cold_seqs()
+            if cold:
+                sid = cold[a % len(cold)]
+                if pool.can_resume(sid):
+                    pool.swap_in(sid)
+        _check_tier_invariants(pool)
+    # full drain: everything admitted must be releasable from either tier
+    for slot in _active_slots(pool):
+        pool.release(slot)
+    for sid in list(pool.cold_seqs()):
+        assert pool.can_resume(sid)         # idle hot tier always fits
+        pool.release(pool.swap_in(sid))
+    assert pool.alloc.free_pages == pool.alloc.n_pages
+    assert pool.alloc._seq_pages == {}
+    assert pool.hot._reserved == {}
+    assert pool.hero.levels[3].in_use() == 0
+    assert (pool.seq_ids == -1).all()
+
+
+def test_tiered_random_ops_never_leak_seeded():
+    """Deterministic twin of the hypothesis property (runs even without
+    hypothesis installed)."""
+    rng = np.random.default_rng(7)
+    for _ in range(6):
+        ops = [tuple(int(x) for x in rng.integers(0, 32, 3))
+               for _ in range(12)]
+        _apply_tier_ops(_tiered(), ops)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_tiered_random_ops_never_leak_property():
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 31), st.integers(0, 31),
+                              st.integers(0, 7)), max_size=14))
+    def prop(ops):
+        _apply_tier_ops(_tiered(), ops)
+    prop()
