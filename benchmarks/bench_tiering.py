@@ -71,6 +71,11 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
     need_pages = n_req * 2
     kw = dict(n_slots=n_slots, max_seq=max_seq, page_tokens=page_tokens)
 
+    # warmup: engines share the jit'd step regions (engine._REGION_CACHE), so
+    # a throwaway pass pays all tracing once — otherwise the first measured
+    # engine eats the compiles and every cross-engine wall ratio is skewed
+    _run(cfg, params, mix, n_pages=need_pages, tiered=False, **kw)
+
     # reference: untiered pool large enough for the whole workload at once
     _, ref = _run(cfg, params, mix, n_pages=need_pages,
                   tiered=False, **kw)
@@ -104,7 +109,7 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
         "swap_overhead_ratio": tier["wall_s"] / unt["wall_s"],
     }
     save_json("tiering", payload)
-    path = save_bench("serve", payload)
+    path = save_bench("serve", payload, section="tiering")
     print(f"# hot tier K={hot_pages} pages; workload needs {need_pages} "
           f"concurrent pages")
     print(f"tiering_untiered,{unt['wall_s'] * 1e6:.1f},"

@@ -85,11 +85,29 @@ def save_json(name: str, payload):
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def save_bench(name: str, payload) -> str:
+def save_bench(name: str, payload, section: str = None) -> str:
     """Machine-readable perf trajectory: write ``BENCH_<name>.json`` at the
     repo root (committed/diffed across PRs, uploaded as a CI artifact) —
-    unlike results/, which is a scratch directory."""
+    unlike results/, which is a scratch directory.
+
+    With ``section``, the payload is merged under that top-level key so
+    several benchmarks append to one trajectory file (e.g. ``tiering`` and
+    ``chunked_prefill`` both land in BENCH_serve.json). A pre-section flat
+    file (or unreadable JSON) is replaced rather than merged."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    if section is not None:
+        obj = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    obj = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                obj = {}
+        if not isinstance(obj, dict) or \
+                not all(isinstance(v, dict) for v in obj.values()):
+            obj = {}                     # legacy flat layout: start over
+        obj[section] = payload
+        payload = obj
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True, default=str)
         f.write("\n")

@@ -10,31 +10,44 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
   §Roofline roofline_report   per-cell terms from the dry-run
   §2.4    bench_tiering       tiered KV serving → BENCH_serve.json (repo
                               root, the cross-PR perf trajectory artifact)
+  §3      bench_chunked_prefill  continuous batching w/ chunked prefill —
+                              TTFT + decode-stall vs monolithic →
+                              BENCH_serve.json ``chunked_prefill`` section
+  (validate_bench checks the BENCH_serve.json schema after the benches)
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_autodma, bench_complexity,
-                            bench_interconnect, bench_isa, bench_parallel,
-                            bench_tiering, bench_tiling, roofline_report)
+    from benchmarks import (bench_autodma, bench_chunked_prefill,
+                            bench_complexity, bench_interconnect, bench_isa,
+                            bench_parallel, bench_tiering, bench_tiling,
+                            roofline_report, validate_bench)
     failures = []
     for mod in (bench_tiling, bench_parallel, bench_complexity,
                 bench_autodma, bench_interconnect, bench_isa,
-                roofline_report, bench_tiering):
+                roofline_report, bench_tiering, bench_chunked_prefill):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()
         except Exception:
             failures.append(mod.__name__)
             traceback.print_exc()
+    from benchmarks.common import REPO_ROOT
+    errors = validate_bench.validate(
+        os.path.join(REPO_ROOT, "BENCH_serve.json"))
+    if errors:
+        failures.append("validate_bench")
+        for e in errors:
+            print(f"BENCH-SCHEMA-ERROR: {e}", file=sys.stderr)
     if failures:
         print(f"# FAILED: {failures}", file=sys.stderr)
         raise SystemExit(1)
-    print("# all benchmarks complete (BENCH_serve.json refreshed)")
+    print("# all benchmarks complete (BENCH_serve.json refreshed + validated)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,115 @@
+"""Schema validator for the BENCH_serve.json perf-trajectory artifact.
+
+CI runs this after the smoke benches so a malformed bench write (missing
+section, non-numeric field, NaN, truncated JSON) fails the workflow instead
+of silently uploading a broken artifact that the cross-PR trajectory diff
+would then choke on.
+
+Usage:  python benchmarks/validate_bench.py BENCH_serve.json \
+            [--require tiering chunked_prefill]
+
+The schema is deliberately shallow — required keys and numeric-ness, not
+values: perf numbers move across PRs by design; shape regressions are bugs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+# section -> {key: type-check}; "num" = int/float, finite, >= 0
+_NUM = "num"
+SCHEMAS = {
+    "tiering": {
+        "arch": str, "hot_pages": _NUM, "page_tokens": _NUM, "n_slots": _NUM,
+        "requests": _NUM, "concurrent_pages_needed": _NUM,
+        "throughput_tok_per_s": _NUM, "peak_hbm_bytes": _NUM,
+        "admitted_seq_count": _NUM, "swap_overhead_ratio": _NUM,
+        "reference_untiered_large": dict, "untiered_hot_only": dict,
+        "tiered": dict,
+    },
+    "chunked_prefill": {
+        "arch": str, "token_budget": _NUM, "n_slots": _NUM,
+        "page_tokens": _NUM, "n_pages": _NUM, "requests": _NUM,
+        "late_arrivals": _NUM, "ttft_speedup": _NUM, "stall_p99_ratio": _NUM,
+        "monolithic": dict, "chunked": dict,
+    },
+}
+# keys every per-engine sub-dict must carry with numeric values
+ENGINE_NUM_KEYS = {
+    "tiering": ("completed", "tokens", "wall_s", "tok_per_s", "decode_steps",
+                "prefills", "admission_refusals", "preemptions",
+                "swap_out_bytes", "swap_in_bytes", "peak_in_system"),
+    "chunked_prefill": ("ttft_mean_s", "ttft_p99_s", "decode_stall_p99_s",
+                        "prefills", "decode_tokens"),
+}
+
+
+def _is_num(v) -> bool:
+    return (isinstance(v, (int, float)) and not isinstance(v, bool)
+            and math.isfinite(v) and v >= 0)
+
+
+def _check(errors, path, obj, schema):
+    for key, want in schema.items():
+        if key not in obj:
+            errors.append(f"{path}: missing key {key!r}")
+            continue
+        v = obj[key]
+        if want is _NUM:
+            if not _is_num(v):
+                errors.append(f"{path}.{key}: expected finite number >= 0, "
+                              f"got {v!r}")
+        elif not isinstance(v, want):
+            errors.append(f"{path}.{key}: expected {want.__name__}, "
+                          f"got {type(v).__name__}")
+
+
+def validate(path: str, require=("tiering", "chunked_prefill")):
+    """Returns a list of error strings (empty = valid)."""
+    errors = []
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(obj, dict):
+        return [f"{path}: top level must be an object of sections"]
+    for section in require:
+        if section not in obj:
+            errors.append(f"{path}: missing section {section!r}")
+            continue
+        sec = obj[section]
+        if not isinstance(sec, dict):
+            errors.append(f"{path}.{section}: not an object")
+            continue
+        _check(errors, section, sec, SCHEMAS[section])
+        for key, sub in sec.items():
+            if isinstance(sub, dict):
+                for nk in ENGINE_NUM_KEYS.get(section, ()):
+                    if nk not in sub:
+                        errors.append(f"{section}.{key}: missing {nk!r}")
+                    elif not _is_num(sub[nk]):
+                        errors.append(f"{section}.{key}.{nk}: expected "
+                                      f"finite number >= 0, got {sub[nk]!r}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="BENCH_serve.json")
+    ap.add_argument("--require", nargs="+",
+                    default=["tiering", "chunked_prefill"])
+    args = ap.parse_args()
+    errors = validate(args.path, require=tuple(args.require))
+    if errors:
+        for e in errors:
+            print(f"BENCH-SCHEMA-ERROR: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"{args.path}: schema OK "
+          f"({', '.join(args.require)} sections validated)")
+
+
+if __name__ == "__main__":
+    main()

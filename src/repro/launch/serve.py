@@ -6,6 +6,8 @@ Usage (CPU container, reduced config):
       --page-tokens 16 --pages 32
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --tiered \
       --pages 8 --host-budget-mb 64 --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --chunked-prefill --token-budget 24 --requests 16
 
 ``--paged`` switches the engine to the page-table KV cache (vmm-backed pool +
 paged flash-decode kernel); ``--pages`` caps the physical page pool — when
@@ -14,6 +16,10 @@ omitted it defaults to parity with the dense pool's HBM footprint.
 tier is exhausted and requests wait, the LRU resident's pages swap out over
 hero_memcpy DMA and the request resumes later (preemptive scheduling);
 ``--host-budget-mb`` bounds the cold tier (HeroMemory L3/DRAM level).
+``--chunked-prefill`` fuses prefill and decode into one token-budgeted step
+loop (continuous batching with chunked prefill; implies --paged, composes
+with --tiered); ``--token-budget`` caps the tokens any iteration may process
+— decode tokens are packed first, prompt chunks fill the remainder.
 """
 from __future__ import annotations
 
@@ -49,6 +55,14 @@ def main():
                     help="cold-tier budget in MiB (HeroMemory L3/DRAM)")
     ap.add_argument("--preempt-quantum", type=int, default=1,
                     help="decode steps a resident is exempt from eviction")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="continuous batching with chunked prefill: fuse "
+                         "prefill and decode into one token-budgeted step "
+                         "loop (implies --paged)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="tokens per engine iteration (decode first, prompt "
+                         "chunks fill the remainder; default "
+                         "slots + 4×page-tokens)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
@@ -59,7 +73,9 @@ def main():
                  n_pages=args.pages, tiered=args.tiered,
                  host_budget_bytes=(args.host_budget_mb * 1024 * 1024
                                     if args.host_budget_mb else None),
-                 preempt_quantum=args.preempt_quantum)
+                 preempt_quantum=args.preempt_quantum,
+                 chunked_prefill=args.chunked_prefill,
+                 token_budget=args.token_budget)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -73,15 +89,24 @@ def main():
     total_new = sum(len(r.tokens_out) for r in done)
     occ = np.mean(eng.stats["batch_occupancy"]) if eng.stats["batch_occupancy"] else 0
     mode = "tiered" if args.tiered else ("paged" if args.paged else "dense")
+    if args.chunked_prefill:
+        mode = "chunked+" + mode if args.tiered else "chunked"
     print(f"[serve:{mode}] {len(done)} requests, {total_new} tokens in "
           f"{wall:.2f}s ({total_new / wall:.1f} tok/s), "
           f"decode steps {eng.stats['decode_steps']}, "
           f"mean batch occupancy {occ:.2f}")
-    if args.paged or args.tiered:
+    if args.paged or args.tiered or args.chunked_prefill:
         a = eng.pool.alloc
         print(f"[serve:{mode}] pool {a.n_pages} pages × {a.page_tokens} tok "
               f"({eng.pool.footprint_bytes()} B), free {a.free_pages}, "
               f"admission refusals {eng.stats['admission_refusals']}")
+    if args.chunked_prefill:
+        s = eng.stats_summary()
+        print(f"[serve:{mode}] token budget {s['token_budget']} "
+              f"(max iter {s['max_iter_tokens']}), prefill chunks "
+              f"{s['prefill_chunks']} ({s['prefill_chunk_tokens']} tok), "
+              f"decode tokens {s['decode_tokens']}, ttft p50/p99 "
+              f"{s['ttft_p50_s']:.3f}/{s['ttft_p99_s']:.3f} s")
     if args.tiered:
         s = eng.stats_summary()
         print(f"[serve:tiered] preemptions {s['preemptions']}, swap out "

@@ -10,12 +10,24 @@ per-request host round-trips.
 Continuous batching: fixed decode slots; finished sequences free their slot
 which the next mailbox drain refills (prefill into that slot's cache rows).
 Stats mirror hero_perf counters: queue latency, batch occupancy, steps.
+
+Chunked prefill (``chunked_prefill=True``, implies paged) fuses prefill and
+decode into one **token-budgeted** step loop — the serving-layer analogue of
+HEROv2's tiled offload: instead of one monolithic prefill whose latency
+stalls every decoding stream, each iteration packs ``token_budget`` tokens
+with decode tokens first (one per stream) and fills the remainder with
+prompt *chunks* from mid-prefill residents, fair-shared in admission order.
+Admission is partial-prefill-aware: only the prompt's pages are reserved up
+front (``admit_prefill``); the decode worst case is topped up at *promotion*
+(``reserve_decode``), after the prompt completes and its first token has
+already streamed. A preempted half-prefilled request resumes at its chunk
+offset — never re-prefilled (tiered swap keeps the written KV prefix).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +47,35 @@ class Request:
     prompt: np.ndarray          # [L] int32
     max_new: int = 16
     t_submit: float = 0.0
+    t_first: float = 0.0        # wall time of the first emitted token (TTFT)
+    prefill_pos: int = 0        # prompt tokens whose KV has been written
     tokens_out: Optional[List[int]] = None
+    t_tokens: Optional[List[float]] = None   # wall time of each emitted token
     done: bool = False
 
 
+# Step functions are pure in (cfg, page_tokens); sharing their TargetRegions
+# across Engine instances shares the jit cache — property tests and benches
+# construct many engines over the same config, and retracing the model per
+# engine dominated their wall time.
+_REGION_CACHE: Dict[Tuple, TargetRegion] = {}
+
+
+def _cached_region(name: str, key: Tuple, make: Callable) -> TargetRegion:
+    try:
+        full_key = (name,) + key
+        hash(full_key)
+    except TypeError:
+        return TargetRegion(make(), name=name)
+    reg = _REGION_CACHE.get(full_key)
+    if reg is None:
+        reg = TargetRegion(make(), name=name)
+        _REGION_CACHE[full_key] = reg
+    return reg
+
+
 class Engine:
-    """Continuous-batching engine with two cache regimes.
+    """Continuous-batching engine with three cache regimes and two step loops.
 
     * dense (default): fixed decode slots over [n_slots, K, max_seq, hd]
       caches — admission is slot-limited.
@@ -57,6 +92,8 @@ class Engine:
       requeued, and it resumes later via an async prefetch started right
       after a decode step, whose host→dev DMA overlaps the next admission
       pass. Only total-capacity exhaustion refuses.
+    * chunked (``chunked_prefill=True``, implies paged; composes with
+      tiered): the unified token-budgeted step loop — see module docstring.
     """
 
     def __init__(self, cfg: transformer.ModelConfig, params, n_slots: int = 4,
@@ -64,19 +101,27 @@ class Engine:
                  page_tokens: int = 16, n_pages: Optional[int] = None,
                  tiered: bool = False,
                  host_budget_bytes: Optional[int] = None,
-                 preempt_quantum: int = 1):
+                 preempt_quantum: int = 1,
+                 chunked_prefill: bool = False,
+                 token_budget: Optional[int] = None):
         self.cfg = cfg
         self.params = params
-        self.paged = paged or tiered
+        self.chunked = chunked_prefill
+        self.paged = paged or tiered or chunked_prefill
         self.tiered = tiered
         self.mailbox = Mailbox(depth=256)
-        self.active: Dict[int, Request] = {}       # slot -> request
+        self.active: Dict[int, Request] = {}       # slot -> decoding request
+        self.prefilling: Dict[int, Request] = {}   # slot -> mid-prompt request
+        self.prefilled_wait: Dict[int, Request] = {}  # awaiting promotion
         self.greedy = greedy
         self.stats = {"decode_steps": 0, "prefills": 0, "batch_occupancy": [],
                       "admission_refusals": 0, "preemptions": 0,
+                      "preempted_mid_prefill": 0, "evictions_reprefill": 0,
                       "swap_out_count": 0, "swap_in_count": 0,
                       "swap_out_bytes": 0, "swap_in_bytes": 0,
-                      "queue_lat_s": []}
+                      "prefill_chunks": 0, "prefill_chunk_tokens": 0,
+                      "decode_tokens": 0,
+                      "queue_lat_s": [], "ttft_s": [], "iter_log": []}
         if self.paged:
             if n_pages is None:
                 # parity budget with the dense pool's HBM footprint (floor:
@@ -96,13 +141,28 @@ class Engine:
             self._last_decoded = np.zeros(n_slots, np.int64)
             self._admitted_at = np.zeros(n_slots, np.int64)
             self._resident_since = np.zeros(n_slots, np.int64)
+            self._chunks_done = np.zeros(n_slots, np.int64)
             self._admit_clock = 0
             self.preempt_quantum = max(1, preempt_quantum)
-            self._decode = TargetRegion(
-                paged_step.make_paged_decode_step(cfg, page_tokens),
-                name="paged_decode")
-            self._prefill_dense = TargetRegion(steps.make_prefill_step(cfg),
-                                               name="paged_prefill")
+            self._decode = _cached_region(
+                "paged_decode", (cfg, page_tokens),
+                lambda: paged_step.make_paged_decode_step(cfg, page_tokens))
+            self._prefill_dense = _cached_region(
+                "paged_prefill", (cfg,),
+                lambda: steps.make_prefill_step(cfg))
+            if self.chunked:
+                if token_budget is None:
+                    token_budget = n_slots + 4 * page_tokens
+                if token_budget <= n_slots:
+                    raise ValueError(
+                        f"token_budget ({token_budget}) must exceed n_slots "
+                        f"({n_slots}): decode tokens are packed first, so a "
+                        "smaller budget could never schedule a prefill chunk")
+                self.token_budget = int(token_budget)
+                self._prefill_chunk = _cached_region(
+                    "paged_prefill_chunk", (cfg, page_tokens),
+                    lambda: paged_step.make_paged_prefill_chunk_step(
+                        cfg, page_tokens))
         else:
             self.pool = CachePool(cfg, n_slots, max_seq)
             self._decode = TargetRegion(steps.make_decode_step(cfg), name="decode")
@@ -111,24 +171,47 @@ class Engine:
     # -- host API -------------------------------------------------------------
     def submit(self, req: Request) -> bool:
         req.t_submit = time.perf_counter()
+        req.t_first = 0.0
+        req.prefill_pos = 0
         req.tokens_out = []
+        req.t_tokens = []
         return self.mailbox.put(req)
+
+    @property
+    def idle(self) -> bool:
+        """True when nothing is resident, queued, or in flight."""
+        return (not self.active and not self.prefilling
+                and not self.prefilled_wait and len(self.mailbox) == 0
+                and getattr(self, "_pending_swapin", None) is None)
+
+    def step(self) -> List[Request]:
+        """One engine iteration. Chunked mode: the unified token-budgeted
+        step. Otherwise: one admission pass + (if anything is resident) one
+        decode dispatch. Returns the requests that finished this iteration."""
+        if self.chunked:
+            return self._step_chunked()
+        self._admit_paged() if self.paged else self._admit()
+        if not self.active:
+            return []
+        return self._decode_step_paged() if self.paged else self._decode_step()
 
     def run(self, max_steps: int = 1000) -> List[Request]:
         finished: List[Request] = []
         for _ in range(max_steps):
-            self._admit_paged() if self.paged else self._admit()
-            if not self.active:
-                if len(self.mailbox) == 0 and \
-                   getattr(self, "_pending_swapin", None) is None:
-                    break
-                continue
-            finished.extend(self._decode_step_paged() if self.paged
-                            else self._decode_step())
-        self.pool  # noqa: B018
+            if self.idle:
+                break
+            finished.extend(self.step())
         return finished
 
     # -- internals --------------------------------------------------------
+    def _emit(self, req: Request, tok: int) -> None:
+        req.tokens_out.append(tok)
+        now = time.perf_counter()
+        if req.t_first == 0.0:
+            req.t_first = now
+            self.stats["ttft_s"].append(now - req.t_submit)
+        req.t_tokens.append(now)
+
     def _prefill_one(self, params, tokens, caches, slot, length):
         """Prefill one request's rows into the pool caches at `slot`."""
         logits, new_caches, _ = transformer.forward(
@@ -158,8 +241,8 @@ class Engine:
             logits_last, self.pool.caches = self._prefill_single(
                 self.params, jnp.asarray(toks), self.pool.caches,
                 slot, L)
-            nxt = int(jnp.argmax(logits_last[slot]))
-            req.tokens_out.append(nxt)
+            self._emit(req, int(jnp.argmax(logits_last[slot])))
+            req.prefill_pos = L
             self.pool.lengths[slot] = L + 1
             self.active[slot] = req
             self.stats["queue_lat_s"].append(
@@ -178,12 +261,12 @@ class Engine:
             self.params, jnp.asarray(toks), self.pool.caches,
             jnp.asarray(pos, jnp.int32))
         self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(self.active)
         self.stats["batch_occupancy"].append(len(self.active) / B)
         finished = []
         for slot in list(self.active):
             req = self.active[slot]
-            nxt = int(jnp.argmax(logits[slot, -1]))
-            req.tokens_out.append(nxt)
+            self._emit(req, int(jnp.argmax(logits[slot, -1])))
             self.pool.lengths[slot] += 1
             if len(req.tokens_out) >= req.max_new or \
                self.pool.lengths[slot] >= self.pool.max_seq - 1:
@@ -195,26 +278,43 @@ class Engine:
 
     # -- paged internals ---------------------------------------------------
     def _activate(self, slot: int, req: Request, first_admit: bool):
-        self.active[slot] = req
         self._admit_clock += 1
         self._admitted_at[slot] = self._admit_clock
         self._last_decoded[slot] = self.stats["decode_steps"]
         self._resident_since[slot] = self.stats["decode_steps"]
+        self._chunks_done[slot] = 0
+        if self.chunked and req.prefill_pos < len(req.prompt):
+            self.prefilling[slot] = req
+        elif self.chunked and not self.pool.has_decode_reservation(
+                req.seq_id, len(req.prompt), req.max_new):
+            self.prefilled_wait[slot] = req
+        else:
+            self.active[slot] = req
         if first_admit:
             self.stats["queue_lat_s"].append(
                 time.perf_counter() - req.t_submit)
 
-    def _pick_victim(self) -> Optional[int]:
+    def _pick_victim(self, exclude: Optional[int] = None) -> Optional[int]:
         """LRU preemption victim: least-recently-decoded resident, oldest
         admission breaking ties (all residents decode together, so the
-        tie-break usually decides). A resident is exempt until it has decoded
-        ``preempt_quantum`` steps in its current residency — every admitted
+        tie-break usually decides). A decoding resident is exempt until it
+        has decoded ``preempt_quantum`` steps in its current residency, and a
+        mid-prefill resident until it has landed one chunk — every admitted
         sequence makes progress before it can be evicted again, which is
         what guarantees the rotation terminates."""
+        candidates = dict(self.active)
+        if self.chunked:
+            candidates.update(self.prefilled_wait)
+            candidates.update(self.prefilling)
         best, best_key = None, None
-        for slot in self.active:
-            if self.stats["decode_steps"] - self._resident_since[slot] \
+        for slot in candidates:
+            if slot == exclude:
+                continue
+            if slot in self.active and \
+               self.stats["decode_steps"] - self._resident_since[slot] \
                < self.preempt_quantum:
+                continue
+            if slot in self.prefilling and self._chunks_done[slot] == 0:
                 continue
             if not self.pool.can_swap_out(slot):
                 continue
@@ -223,15 +323,21 @@ class Engine:
                 best, best_key = slot, key
         return best
 
-    def _preempt_until(self, can_fit) -> bool:
+    def _preempt_until(self, can_fit, exclude: Optional[int] = None) -> bool:
         """Evict LRU residents to host DRAM until ``can_fit()`` passes.
         Returns False (leaving partial evictions in place — their capacity
         stays freed) when no eligible victim remains."""
         while not can_fit():
-            victim = self._pick_victim()
+            victim = self._pick_victim(exclude)
             if victim is None:
                 return False
-            vreq = self.active.pop(victim)
+            vreq = self.active.pop(victim, None)
+            if vreq is None:
+                vreq = self.prefilling.pop(victim, None)
+                if vreq is not None:
+                    self.stats["preempted_mid_prefill"] += 1
+                else:
+                    vreq = self.prefilled_wait.pop(victim)
             self.pool.swap_out(victim)
             # back of the queue: the waiting request goes first, the victim
             # resumes in FIFO turn (front-requeue only if the mailbox is
@@ -267,7 +373,12 @@ class Engine:
         mailbox lock. Tiered, a refusal instead preempts the LRU resident
         (pages swap out to host DRAM) and the stall clears every pass:
         decode steps expire residency quanta, so a retry can make progress —
-        only total-capacity exhaustion leaves the head waiting."""
+        only total-capacity exhaustion leaves the head waiting.
+
+        Chunked, admission reserves only the *prompt* pages (partial-prefill-
+        aware): the request enters ``self.prefilling`` and the step loop
+        slices its prompt into token-budgeted chunks; no prefill is
+        dispatched here."""
         if self.tiered:
             if not self.active:
                 # no decode step will run to land the prefetch — finish it
@@ -283,7 +394,8 @@ class Engine:
             req = reqs[0]
             if self.tiered and self.pool.is_cold(req.seq_id):
                 # resume path: restore the preempted sequence's pages from
-                # host DRAM (no re-prefill — its KV and tokens_out survive)
+                # host DRAM (no re-prefill — its KV and tokens_out survive;
+                # a half-prefilled request resumes at its chunk offset)
                 if not self.pool.can_resume(req.seq_id) and \
                    not self._preempt_until(
                         lambda: self.pool.can_resume(req.seq_id)):
@@ -301,6 +413,18 @@ class Engine:
                 # doesn't head-of-line-block the drain forever
                 self.stats["rejected"] = self.stats.get("rejected", 0) + 1
                 continue
+            if self.chunked:
+                if not self.pool.can_admit_prefill(L, req.max_new):
+                    if not (self.tiered and self._preempt_until(
+                            lambda: self.pool.can_admit_prefill(
+                                L, req.max_new))):
+                        self.mailbox.requeue(req)
+                        self.stats["admission_refusals"] += 1
+                        self._admit_stalled = True
+                        break
+                slot = self.pool.admit_prefill(req.seq_id, L)
+                self._activate(slot, req, first_admit=True)
+                continue
             if not self.pool.can_admit(L, req.max_new):
                 if not (self.tiered and self._preempt_until(
                         lambda: self.pool.can_admit(L, req.max_new))):
@@ -316,39 +440,48 @@ class Engine:
             toks = jnp.asarray(req.prompt[None, :].astype(np.int32))
             logits_last, caches = self._prefill_dense(self.params, toks, caches)
             self.pool.write_prefill(slot, caches, L)
-            nxt = int(jnp.argmax(logits_last[0, -1]))
-            req.tokens_out.append(nxt)
+            self._emit(req, int(jnp.argmax(logits_last[0, -1])))
+            req.prefill_pos = L
             self._activate(slot, req, first_admit=True)
             self.stats["prefills"] += 1
 
-    def _decode_step_paged(self) -> List[Request]:
+    def _decode_step_paged(self, slots: Optional[List[int]] = None
+                           ) -> List[Request]:
         if self.tiered:
             # land the prefetch started at the end of the previous step: its
             # host→dev DMA has been overlapping the admission pass (and any
             # prefill dispatches) in between; the resumed slot joins this
             # decode batch
             self._finish_pending_swapin()
+        if slots is None:
+            slots = sorted(self.active)
         B = self.pool.max_batch
         toks = np.zeros((B, 1), np.int32)
-        for slot, req in self.active.items():
+        mask = np.zeros(B, bool)
+        for slot in slots:
+            req = self.active[slot]
             toks[slot, 0] = req.tokens_out[-1]
+            mask[slot] = True
             # map the write position (lengths[slot]) before dispatch; the
-            # admission reservation guarantees this never fails
+            # decode reservation guarantees this never fails
             self.pool.ensure(slot, int(self.pool.lengths[slot]) + 1)
         tables = jnp.asarray(self.pool.device_page_tables())
         lengths = jnp.asarray(self.pool.lengths.astype(np.int32))
-        active = jnp.asarray(self.pool.seq_ids >= 0)
+        # mid-prefill / unpromoted slots are resident but must not decode
+        active = jnp.asarray(mask)
         logits, self.pool.pages = self._decode(
             self.params, jnp.asarray(toks), self.pool.pages, tables, lengths,
             active)
         self.stats["decode_steps"] += 1
-        self.stats["batch_occupancy"].append(len(self.active) / B)
-        for slot in self.active:
+        self.stats["decode_tokens"] += len(slots)
+        self.stats["batch_occupancy"].append(len(slots) / B)
+        for slot in slots:
             self._last_decoded[slot] = self.stats["decode_steps"]
         used = self.pool.used_bytes()
         self.stats["peak_used_bytes"] = max(
             self.stats.get("peak_used_bytes", 0), used)
-        in_system = len(self.active)
+        in_system = len(self.active) + len(self.prefilling) + \
+            len(self.prefilled_wait)
         if self.tiered:
             # an in-flight prefetch stays in cold_seqs() until it lands, so
             # the cold count already covers it — no separate pending term
@@ -359,10 +492,9 @@ class Engine:
         self.stats["peak_in_system"] = max(
             self.stats.get("peak_in_system", 0), in_system)
         finished = []
-        for slot in list(self.active):
+        for slot in slots:
             req = self.active[slot]
-            nxt = int(jnp.argmax(logits[slot]))
-            req.tokens_out.append(nxt)
+            self._emit(req, int(jnp.argmax(logits[slot])))
             self.pool.lengths[slot] += 1
             # paged lengths count KV rows (dense counts rows + the pending
             # token), hence the -2: both paths stop at the same stream length
@@ -397,28 +529,189 @@ class Engine:
         else:
             self.mailbox.requeue(req)
 
+    # -- chunked prefill: the unified token-budgeted step ------------------
+    def _step_chunked(self) -> List[Request]:
+        """One unified engine iteration (continuous batching with chunked
+        prefill):
+
+          1. land any in-flight swap-in prefetch (tiered),
+          2. admission pass — prompt-only page reservations,
+          3. promote prefilled waiters whose decode worst case now fits,
+          4. pack the token budget: one decode token per decoding stream
+             first, then fair-share the remainder over mid-prefill residents
+             as prompt chunks,
+          5. dispatch the chunks, then one decode step over the streams.
+
+        A request whose whole prompt fits in the leftover budget is admitted,
+        prefilled, and streams its first token within this single iteration —
+        it never queues behind another request's whole prefill."""
+        if self.tiered:
+            self._finish_pending_swapin()
+        self._admit_paged()
+        self._promote_waiters()
+        decode_slots = sorted(self.active)
+        mid_prefill = sorted(int(r.seq_id) for r in self.prefilling.values())
+        chunks = self._pack_chunks(self.token_budget - len(decode_slots))
+        for slot, req, start, size in chunks:
+            self._run_chunk(slot, req, start, size)
+        finished = self._decode_step_paged(decode_slots) if decode_slots \
+            else []
+        self.stats["iter_log"].append({
+            "decode_tokens": len(decode_slots),
+            "prefill_tokens": int(sum(c[3] for c in chunks)),
+            "chunks": [(int(r.seq_id), int(start), int(size))
+                       for _, r, start, size in chunks],
+            "mid_prefill": mid_prefill,
+        })
+        return finished
+
+    def _pack_chunks(self, budget_left: int
+                     ) -> List[Tuple[int, Request, int, int]]:
+        """Fair-share the post-decode budget over mid-prefill residents in
+        admission order: whenever the remainder covers them all, every one
+        makes progress, and the shortest remaining prompt finishes first
+        within its share — a short request admitted this iteration starts
+        streaming this iteration instead of queueing behind a long prefill."""
+        if budget_left <= 0 or not self.prefilling:
+            return []
+        order = sorted(self.prefilling, key=lambda s: self._admitted_at[s])
+        remaining = {s: len(self.prefilling[s].prompt)
+                     - self.prefilling[s].prefill_pos for s in order}
+        share = dict.fromkeys(order, 0)
+        left = budget_left
+        while left > 0:
+            live = [s for s in order if share[s] < remaining[s]]
+            if not live:
+                break
+            quantum = max(1, left // len(live))
+            for s in live:
+                take = min(quantum, remaining[s] - share[s], left)
+                share[s] += take
+                left -= take
+                if left == 0:
+                    break
+        return [(s, self.prefilling[s], self.prefilling[s].prefill_pos,
+                 share[s]) for s in order if share[s] > 0]
+
+    def _run_chunk(self, slot: int, req: Request, start: int, size: int):
+        """Dispatch one prompt chunk ``[start, start+size)``: its KV lands in
+        the slot's already-reserved pages; on prompt completion the first
+        token streams immediately (from the chunk's last-position logits) and
+        promotion to the decode set is attempted."""
+        table_row = jnp.asarray(self.pool.page_table_row(slot))
+        toks = jnp.asarray(
+            req.prompt[start:start + size][None, :].astype(np.int32))
+        logits_last, self.pool.pages = self._prefill_chunk(
+            self.params, toks, self.pool.pages, table_row,
+            jnp.asarray(start, jnp.int32))
+        req.prefill_pos = start + size
+        self.pool.lengths[slot] = req.prefill_pos
+        self._chunks_done[slot] += 1
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_chunk_tokens"] += size
+        if req.prefill_pos >= len(req.prompt):
+            self._emit(req, int(jnp.argmax(logits_last[0])))
+            del self.prefilling[slot]
+            self.stats["prefills"] += 1
+            if self.pool.reserve_decode(req.seq_id, len(req.prompt),
+                                        req.max_new):
+                self.active[slot] = req
+            else:
+                self.prefilled_wait[slot] = req
+
+    def _promote_waiters(self):
+        """FIFO promotion of prefilled waiters into the decode set: top the
+        reservation up to the decode worst case. Tiered, a blocked head may
+        preempt LRU residents. When nothing is decoding or prefilling (so no
+        release can ever arrive) the youngest waiter is evicted and
+        re-prefills later — the oldest always eventually promotes
+        (``admissible_ever`` bounds its worst case by the pool size)."""
+        while True:
+            order = sorted(self.prefilled_wait,
+                           key=lambda s: self._admitted_at[s])
+            if not order:
+                return
+            head = order[0]
+            req = self.prefilled_wait[head]
+            L = len(req.prompt)
+            ok = self.pool.reserve_decode(req.seq_id, L, req.max_new)
+            if not ok and self.tiered:
+                ok = self._preempt_until(
+                    lambda: self.pool.can_reserve_decode(
+                        req.seq_id, L, req.max_new),
+                    exclude=head) and \
+                    self.pool.reserve_decode(req.seq_id, L, req.max_new)
+            if not ok and not self.active and not self.prefilling and \
+                    len(order) > 1:
+                self._evict_reprefill(order[-1])
+                continue
+            if not ok:
+                return
+            del self.prefilled_wait[head]
+            self.active[head] = req
+
+    def _evict_reprefill(self, slot: int):
+        """Promotion-deadlock breaker (untiered, or tiered with the host
+        budget exhausted): drop the youngest waiter's KV and requeue it — it
+        re-prefills from scratch later. Greedy streams are deterministic per
+        request, so the recomputed prefix is bit-identical; the already-
+        emitted first token is retracted and re-derived."""
+        req = self.prefilled_wait.pop(slot)
+        self.pool.release(slot)
+        req.prefill_pos = 0
+        if req.tokens_out:
+            req.tokens_out.pop()
+            req.t_tokens.pop()
+        if req.t_first:
+            # the first token was retracted with its emission: drop its TTFT
+            # sample too, so the stat reflects the token the user will get
+            try:
+                self.stats["ttft_s"].remove(req.t_first - req.t_submit)
+            except ValueError:
+                pass
+            req.t_first = 0.0
+        self.mailbox.requeue(req)
+        self.stats["evictions_reprefill"] += 1
+        self._admit_stalled = False
+
     # -- hero_perf-style counter summary ----------------------------------
     def stats_summary(self) -> Dict[str, Any]:
         """Engine counters in report form: occupancy, swap traffic,
-        preemptions, and queue-latency percentiles (time from submit to
-        first prefill)."""
-        occ = self.stats["batch_occupancy"]
-        lat = sorted(self.stats["queue_lat_s"])
+        preemptions, chunked-prefill token split, queue-latency percentiles
+        (submit → admission) and TTFT percentiles (submit → first token).
+        Every aggregate is guarded for the empty-engine case — a fresh or
+        idle engine reports zeros, never a numpy error."""
+        occ = self.stats.get("batch_occupancy") or []
+        lat = sorted(self.stats.get("queue_lat_s") or [])
+        ttft = sorted(self.stats.get("ttft_s") or [])
         out = {
-            "decode_steps": self.stats["decode_steps"],
-            "prefills": self.stats["prefills"],
+            "decode_steps": self.stats.get("decode_steps", 0),
+            "prefills": self.stats.get("prefills", 0),
             "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
-            "admission_refusals": self.stats["admission_refusals"],
-            "preemptions": self.stats["preemptions"],
-            "swap_out_count": self.stats["swap_out_count"],
-            "swap_in_count": self.stats["swap_in_count"],
-            "swap_out_bytes": self.stats["swap_out_bytes"],
-            "swap_in_bytes": self.stats["swap_in_bytes"],
+            "admission_refusals": self.stats.get("admission_refusals", 0),
+            "preemptions": self.stats.get("preemptions", 0),
+            "preempted_mid_prefill": self.stats.get("preempted_mid_prefill", 0),
+            "evictions_reprefill": self.stats.get("evictions_reprefill", 0),
+            "swap_out_count": self.stats.get("swap_out_count", 0),
+            "swap_in_count": self.stats.get("swap_in_count", 0),
+            "swap_out_bytes": self.stats.get("swap_out_bytes", 0),
+            "swap_in_bytes": self.stats.get("swap_in_bytes", 0),
+            "prefill_chunks": self.stats.get("prefill_chunks", 0),
+            "prefill_chunk_tokens": self.stats.get("prefill_chunk_tokens", 0),
+            "decode_tokens": self.stats.get("decode_tokens", 0),
             "peak_used_bytes": self.stats.get("peak_used_bytes", 0),
             "peak_host_bytes": self.stats.get("peak_host_bytes", 0),
             "peak_in_system": self.stats.get("peak_in_system", 0),
         }
+        if self.chunked:
+            iters = self.stats.get("iter_log") or []
+            out["token_budget"] = self.token_budget
+            out["max_iter_tokens"] = max(
+                (e["decode_tokens"] + e["prefill_tokens"] for e in iters),
+                default=0)
         for p in (50, 90, 99):
             out[f"queue_lat_p{p}_s"] = (
                 float(np.percentile(lat, p)) if lat else 0.0)
+            out[f"ttft_p{p}_s"] = (
+                float(np.percentile(ttft, p)) if ttft else 0.0)
         return out

@@ -205,6 +205,61 @@ class PagedCachePool:
         self.lengths[slot] = 0
         return slot
 
+    # -- chunked prefill: partial-prefill-aware admission -------------------
+    def can_admit_prefill(self, prompt_len: int, max_new: int) -> bool:
+        """Chunked-prefill admission: only the *prompt* pages need to be
+        coverable now — the decode worst case is topped up at promotion time
+        (``reserve_decode``), so a request can start prefilling, and stream
+        its first token, long before the pool could hold its whole decode."""
+        if not np.any(self.seq_ids < 0):
+            return False                               # no slot
+        if not self.admissible_ever(prompt_len, max_new):
+            return False
+        return self.pages_for(prompt_len) <= \
+            self.alloc.free_pages - self._reservation_debt()
+
+    def admit_prefill(self, seq_id: int, prompt_len: int) -> int:
+        """Admit for chunked prefill: allocate (and reserve) exactly the
+        prompt's pages, so every chunk ``[start, start+C)`` lands in
+        already-reserved pages; claim a slot. No decode reservation yet."""
+        if seq_id in self.alloc._seq_pages or seq_id in self._reserved:
+            raise ValueError(f"paged KV: seq_id {seq_id} already resident "
+                             "(page lists would silently merge)")
+        if self.pages_for(prompt_len) > \
+                self.alloc.free_pages - self._reservation_debt() or \
+                not np.any(self.seq_ids < 0):
+            raise MemoryError("paged KV: prefill admission refused")
+        slot = int(np.where(self.seq_ids < 0)[0][0])
+        self._reserved[seq_id] = self.pages_for(prompt_len)
+        self.alloc.alloc_seq(seq_id, prompt_len)
+        self.seq_ids[slot] = seq_id
+        self.lengths[slot] = 0
+        return slot
+
+    def can_reserve_decode(self, seq_id: int, prompt_len: int,
+                           max_new: int) -> bool:
+        extra = self._worst_pages(prompt_len, max_new) - \
+            self._reserved.get(seq_id, 0)
+        return extra <= 0 or \
+            extra <= self.alloc.free_pages - self._reservation_debt()
+
+    def reserve_decode(self, seq_id: int, prompt_len: int,
+                       max_new: int) -> bool:
+        """Top the prompt-only reservation up to the decode worst case —
+        the promotion gate between 'prompt prefilled' and 'decoding'. True
+        iff the reservation now covers decode (so mid-decode ``ensure`` can
+        never fail); False leaves the reservation unchanged."""
+        if not self.can_reserve_decode(seq_id, prompt_len, max_new):
+            return False
+        self._reserved[seq_id] = max(self._reserved.get(seq_id, 0),
+                                     self._worst_pages(prompt_len, max_new))
+        return True
+
+    def has_decode_reservation(self, seq_id: int, prompt_len: int,
+                               max_new: int) -> bool:
+        return self._reserved.get(seq_id, 0) >= \
+            self._worst_pages(prompt_len, max_new)
+
     def ensure(self, slot: int, n_tokens: int) -> None:
         """Grow slot's page list on demand so positions < n_tokens are mapped
         (never fails for admitted sequences — the reservation covers it)."""
@@ -228,6 +283,14 @@ class PagedCachePool:
             if sid >= 0:
                 out[slot] = self.alloc.page_table(sid, self.max_pages_per_seq)
         return out
+
+    def page_table_row(self, slot: int) -> np.ndarray:
+        """One slot's page-table row (chunked-prefill dispatches are
+        per-sequence, so they prefetch a single row, not the whole table)."""
+        sid = int(self.seq_ids[slot])
+        if sid < 0:
+            raise ValueError(f"paged KV: page_table_row of free slot {slot}")
+        return self.alloc.page_table(sid, self.max_pages_per_seq)
 
     def write_prefill(self, slot: int, caches, length: int) -> None:
         """Scatter a dense B=1 prefill cache ([count, 1, K, S, hd] leaves)

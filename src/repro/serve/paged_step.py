@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.models import blocks, transformer
 from repro.kernels.paged_decode_attention import paged_flash_decode
+from repro.kernels.paged_prefill_attention import paged_flash_prefill
 
 
 def gather_pages(pool: jax.Array, page_ids: jax.Array) -> jax.Array:
@@ -44,6 +45,21 @@ def scatter_pages(pool: jax.Array, rows: jax.Array,
     """Inverse of gather_pages: land [count, n, K, pt, hd] rows on the given
     page ids of a pool leaf (swap-in's store phase)."""
     return pool.at[:, page_ids].set(rows.astype(pool.dtype))
+
+
+def scatter_chunk(pool: jax.Array, rows: jax.Array, page_table: jax.Array,
+                  start: jax.Array, page_tokens: int) -> jax.Array:
+    """Write a prefill chunk's K/V rows ([C, K, hd]) at logical positions
+    ``[start, start+C)`` of one sequence's page list — the chunked-prefill
+    counterpart of ``PagedCachePool.write_prefill``, for an *arbitrary* slice
+    into already-reserved pages. ``start`` may be a traced scalar (one
+    compiled step serves every chunk offset); positions are distinct, so the
+    whole chunk lands in one scatter."""
+    C = rows.shape[0]
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    pids = jnp.maximum(jnp.take(page_table, pos // page_tokens), 0)
+    offs = pos % page_tokens
+    return pool.at[pids, :, offs].set(rows.astype(pool.dtype))
 
 
 def _scatter_token(pool: jax.Array, tok: jax.Array, page_table: jax.Array,
@@ -162,3 +178,103 @@ def make_paged_decode_step(cfg: transformer.ModelConfig, page_tokens: int,
         return logits[:, 0], new_pages
 
     return decode_step
+
+
+def _paged_gqa_prefill_layer(p, x, pages, page_table, start,
+                             cfg: transformer.ModelConfig, acfg,
+                             page_tokens: int, interpret: bool):
+    """One prefill-chunk attention layer over the paged cache.
+
+    x: [1, C, d] chunk hidden states at global positions start..start+C-1;
+    pages: {"k","v"} [P, K, pt, hd] (this unit's pool slice); page_table:
+    [max_pages] (one sequence's row). Writes the chunk's K/V into its pages,
+    then attends the chunk queries against the paged prefix with the
+    cross-chunk causal mask. Returns (y [1, C, d], updated pages).
+    """
+    C = x.shape[1]
+    H, K, hd = acfg.n_heads, acfg.n_kv, acfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if acfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(1, C, H, hd)
+    k = k.reshape(1, C, K, hd)
+    v = v.reshape(1, C, K, hd)
+    if acfg.rope_theta is not None:
+        positions = (start + jnp.arange(C, dtype=jnp.int32))[None, :]
+        q = blocks.apply_rope(q, positions, acfg.rope_theta)
+        k = blocks.apply_rope(k, positions, acfg.rope_theta)
+    k_pool = scatter_chunk(pages["k"], k[0], page_table, start, page_tokens)
+    v_pool = scatter_chunk(pages["v"], v[0], page_table, start, page_tokens)
+    att = paged_flash_prefill(q[0].astype(jnp.float32), k_pool, v_pool,
+                              page_table, start,
+                              interpret=interpret)               # [C, H, hd]
+    y = att.reshape(1, C, H * hd).astype(x.dtype) @ p["wo"]
+    return y, {"k": k_pool, "v": v_pool}
+
+
+def make_paged_prefill_chunk_step(cfg: transformer.ModelConfig,
+                                  page_tokens: int, interpret: bool = True):
+    """Returns prefill_chunk(params, tokens, pages, page_table, start)
+    -> (last_logits [1, vocab], new pages) — the chunked-prefill TargetRegion.
+
+    tokens: [1, C] int32 prompt slice ``prompt[start:start+C]``; pages: the
+    PagedCachePool.pages pytree; page_table: [max_pages] int32 (the owning
+    sequence's row, every page covering the *prompt* already reserved at
+    admission); start: scalar int32 chunk offset — traced, so one compile
+    serves every offset of a given chunk size. The returned logits are the
+    chunk's last position; the engine samples from them only when the chunk
+    completes the prompt.
+    """
+
+    def prefill_chunk(params, tokens, pages, page_table, start):
+        cd = cfg.compute_dtype
+        start = start.astype(jnp.int32)
+        embed = params["embed"].astype(cd)
+        x = blocks.embed_lookup(embed, tokens)                  # [1, C, d]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+
+        shared_p = transformer._cast(params.get("shared_block"), cd)
+        new_pages = []
+        for gi, (pattern, count) in enumerate(cfg.groups):
+            gp = params["groups"][gi]
+            gpg = pages[gi]
+
+            def unit_body(x, xs, pattern=pattern):
+                unit_p, unit_pg = xs
+                unit_p = transformer._barrier(unit_p)
+                unit_p = transformer._cast(unit_p, cd)
+                new_pgs = []
+                for i, kind in enumerate(pattern):
+                    mixer, ffn = transformer.parse_kind(kind)
+                    p = unit_p[i]
+                    h = transformer._norm_apply(p["ln1"], x, cfg)
+                    mixer_p = shared_p["mixer"] if mixer == "shared" else p["mixer"]
+                    y, npg = _paged_gqa_prefill_layer(
+                        mixer_p, h, unit_pg[i], page_table, start,
+                        cfg, cfg.attn_cfg(mixer), page_tokens, interpret)
+                    if cfg.sandwich_norm:
+                        y = transformer._norm_apply(p["ln1_post"], y, cfg)
+                    x = x + y
+                    if ffn != "none":
+                        h2 = transformer._norm_apply(p["ln2"], x, cfg)
+                        ffn_p = shared_p["ffn"] if mixer == "shared" else p["ffn"]
+                        y2, _ = transformer._ffn_apply(ffn_p, ffn, h2, cfg)
+                        if cfg.sandwich_norm:
+                            y2 = transformer._norm_apply(p["ln2_post"], y2, cfg)
+                        x = x + y2
+                    new_pgs.append(npg)
+                return x, tuple(new_pgs)
+
+            x, ngp = jax.lax.scan(unit_body, x, (gp, gpg))
+            new_pages.append(ngp)
+
+        h_final = transformer._norm_apply(
+            transformer._cast(params["final_norm"], cd), x, cfg)
+        head = (embed.T if cfg.tie_embeddings else params["lm_head"].astype(cd))
+        logits = h_final @ head                                  # [1, C, vocab]
+        return logits[:, -1], new_pages
+
+    return prefill_chunk

@@ -39,12 +39,18 @@ from repro.serve.kvcache import PagedCachePool
 
 @dataclasses.dataclass
 class ColdSeq:
-    """One swapped-out sequence: its KV pages in host DRAM + resume metadata."""
+    """One swapped-out sequence: its KV pages in host DRAM + resume metadata.
+
+    ``n_valid <= n_pages``: only pages holding *written* KV rows travel over
+    DMA (a half-prefilled preemptee owns every prompt page but has filled only
+    ``ceil(length / pt)`` of them — the unwritten tail is re-allocated on
+    resume but never copied, the paper's move-only-live-data discipline)."""
     seq_id: int
-    length: int                 # valid KV rows at swap-out
+    length: int                 # valid KV rows at swap-out (chunk offset)
     n_pages: int                # pages owned at swap-out (re-alloc'd on resume)
-    reserved: int               # worst-case reservation, restored on resume
-    nbytes: int                 # page_bytes × n_pages (L3 budget accounting)
+    n_valid: int                # pages actually swapped (cover `length` rows)
+    reserved: int               # reservation at swap-out, restored on resume
+    nbytes: int                 # page_bytes × n_valid (L3 budget accounting)
     mem_handle: int             # heromem L3 allocation handle
     host: List[List[Dict[str, np.ndarray]]]  # [group][pos]{k,v} page rows
 
@@ -144,6 +150,28 @@ class TieredCachePool:
                              "cold tier (resume it, don't re-admit)")
         return self.hot.admit(seq_id, prompt_len, max_new)
 
+    # chunked prefill: partial-prefill-aware admission + promotion gate
+    def can_admit_prefill(self, prompt_len: int, max_new: int) -> bool:
+        return self.hot.can_admit_prefill(prompt_len, max_new)
+
+    def admit_prefill(self, seq_id: int, prompt_len: int) -> int:
+        if seq_id in self._cold:
+            raise ValueError(f"tiered KV: seq_id {seq_id} is resident in the "
+                             "cold tier (resume it, don't re-admit)")
+        return self.hot.admit_prefill(seq_id, prompt_len)
+
+    def can_reserve_decode(self, seq_id: int, prompt_len: int,
+                           max_new: int) -> bool:
+        return self.hot.can_reserve_decode(seq_id, prompt_len, max_new)
+
+    def reserve_decode(self, seq_id: int, prompt_len: int,
+                       max_new: int) -> bool:
+        return self.hot.reserve_decode(seq_id, prompt_len, max_new)
+
+    def has_decode_reservation(self, seq_id: int, prompt_len: int,
+                               max_new: int) -> bool:
+        return self.hot.has_decode_reservation(seq_id, prompt_len, max_new)
+
     def ensure(self, slot: int, n_tokens: int) -> None:
         self.hot.ensure(slot, n_tokens)
 
@@ -155,6 +183,9 @@ class TieredCachePool:
 
     def device_page_tables(self) -> np.ndarray:
         return self.hot.device_page_tables()
+
+    def page_table_row(self, slot: int) -> np.ndarray:
+        return self.hot.page_table_row(slot)
 
     def token_bytes(self) -> int:
         return self.hot.token_bytes()
@@ -178,9 +209,18 @@ class TieredCachePool:
     def host_free_bytes(self) -> int:
         return self.hero.capacity(3)
 
-    def _slot_bytes(self, slot: int) -> int:
+    def _valid_pages(self, slot: int) -> int:
+        """Pages holding written KV rows — what swap-out actually moves. A
+        half-prefilled slot owns every prompt page but has filled only up to
+        its chunk offset (``lengths[slot]``); the unwritten tail never hits
+        the DMA engine or the host budget."""
         sid = int(self.hot.seq_ids[slot])
-        return len(self.hot.alloc._seq_pages[sid]) * self.hot.alloc.page_bytes
+        owned = len(self.hot.alloc._seq_pages[sid])
+        return min(owned, self.hot.pages_for(max(int(self.hot.lengths[slot]),
+                                                 1)))
+
+    def _slot_bytes(self, slot: int) -> int:
+        return self._valid_pages(slot) * self.hot.alloc.page_bytes
 
     def can_swap_out(self, slot: int) -> bool:
         """Host budget check via the o1heap guaranteed-success probe: a True
@@ -197,12 +237,13 @@ class TieredCachePool:
         if sid < 0:
             raise ValueError(f"tiered KV: swap_out of free slot {slot}")
         page_ids = self.hot.alloc._seq_pages[sid]
-        nbytes = len(page_ids) * self.hot.alloc.page_bytes
+        n_valid = self._valid_pages(slot)
+        nbytes = n_valid * self.hot.alloc.page_bytes
         mem = self.hero.malloc(3, nbytes)
         if mem is None:
             raise MemoryError("tiered KV: host-DRAM budget exhausted "
                               f"({nbytes} B for seq {sid})")
-        idx = jnp.asarray(page_ids, jnp.int32)
+        idx = jnp.asarray(page_ids[:n_valid], jnp.int32)
         # load phase: dispatch every leaf's gather, start every dev→host DMA
         # before waiting any — the transfers overlap (double-buffered)
         handles: List[List[Dict[str, dma.TransferHandle]]] = []
@@ -219,7 +260,7 @@ class TieredCachePool:
                  for ent in row] for row in handles]
         self._cold[sid] = ColdSeq(
             seq_id=sid, length=int(self.hot.lengths[slot]),
-            n_pages=len(page_ids),
+            n_pages=len(page_ids), n_valid=n_valid,
             reserved=self.hot._reserved.get(sid, len(page_ids)),
             nbytes=nbytes, mem_handle=mem, host=host)
         self.hot.release(slot)
@@ -260,7 +301,10 @@ class TieredCachePool:
         sequence is resident again (same KV bits, possibly new physical
         pages). Returns the slot."""
         rec = pending.rec
-        idx = jnp.asarray(self.hot.alloc._seq_pages[rec.seq_id], jnp.int32)
+        # scatter only the valid prefix; the unwritten tail pages (re-alloc'd
+        # in swap_in_start) are filled by later prefill chunks before any read
+        idx = jnp.asarray(self.hot.alloc._seq_pages[rec.seq_id][:rec.n_valid],
+                          jnp.int32)
         dma.hero_memcpy_wait_all(
             [h for row in pending.handles for ent in row
              for h in ent.values()])

@@ -64,7 +64,7 @@ def test_grad_accum_matches_plain():
 
 
 @pytest.mark.slow  # subprocess CLI end-to-end
-@pytest.mark.parametrize("mode", ["dense", "paged", "tiered"])
+@pytest.mark.parametrize("mode", ["dense", "paged", "tiered", "chunked"])
 def test_serve_driver_cli(mode):
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -76,6 +76,9 @@ def test_serve_driver_cli(mode):
         # 2 pages force oversubscription → at least one preemptive swap
         cmd += ["--tiered", "--page-tokens", "8", "--pages", "2",
                 "--host-budget-mb", "1"]
+    elif mode == "chunked":
+        cmd += ["--chunked-prefill", "--page-tokens", "8",
+                "--token-budget", "6"]
     r = subprocess.run(cmd, env=env, capture_output=True, text=True,
                        timeout=400)
     assert "3 requests" in r.stdout, r.stdout + r.stderr
@@ -83,3 +86,55 @@ def test_serve_driver_cli(mode):
         assert "admission refusals" in r.stdout
     elif mode == "tiered":
         assert "preemptions" in r.stdout and "swap out" in r.stdout
+    elif mode == "chunked":
+        assert "token budget 6" in r.stdout and "prefill chunks" in r.stdout
+
+
+def test_validate_bench_schema_roundtrip(tmp_path):
+    """The CI schema gate: a well-formed sectioned BENCH file passes; a
+    missing section, a NaN, and truncated JSON each fail with a pointed
+    error (so a malformed bench write fails the workflow)."""
+    import json
+    import sys as _sys
+    _sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.validate_bench import validate, ENGINE_NUM_KEYS, SCHEMAS
+
+    def engine_stub(section):
+        return {k: 1.0 for k in ENGINE_NUM_KEYS[section]}
+
+    good = {
+        "tiering": {"arch": "qwen2-0.5b", "hot_pages": 4, "page_tokens": 8,
+                    "n_slots": 2, "requests": 12,
+                    "concurrent_pages_needed": 24,
+                    "throughput_tok_per_s": 25.8, "peak_hbm_bytes": 8192,
+                    "admitted_seq_count": 12, "swap_overhead_ratio": 1.4,
+                    "reference_untiered_large": engine_stub("tiering"),
+                    "untiered_hot_only": engine_stub("tiering"),
+                    "tiered": engine_stub("tiering")},
+        "chunked_prefill": {"arch": "qwen2-0.5b", "token_budget": 12,
+                            "n_slots": 6, "page_tokens": 8, "n_pages": 17,
+                            "requests": 6, "late_arrivals": 4,
+                            "ttft_speedup": 4.2, "stall_p99_ratio": 1.1,
+                            "monolithic": engine_stub("chunked_prefill"),
+                            "chunked": engine_stub("chunked_prefill")},
+    }
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps(good))
+    assert validate(str(p)) == []
+    # missing section
+    p.write_text(json.dumps({"tiering": good["tiering"]}))
+    assert any("chunked_prefill" in e for e in validate(str(p)))
+    # NaN numeric field
+    bad = dict(good)
+    bad["chunked_prefill"] = dict(good["chunked_prefill"],
+                                  ttft_speedup=float("nan"))
+    p.write_text(json.dumps(bad))
+    assert any("ttft_speedup" in e for e in validate(str(p)))
+    # truncated JSON
+    p.write_text(json.dumps(good)[:40])
+    assert any("unreadable" in e for e in validate(str(p)))
+    # the committed artifact itself must be valid
+    repo_bench = os.path.join(os.path.dirname(__file__), "..",
+                              "BENCH_serve.json")
+    assert validate(repo_bench) == []
+    assert set(SCHEMAS) == {"tiering", "chunked_prefill"}

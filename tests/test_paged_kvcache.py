@@ -328,3 +328,75 @@ def test_tiered_random_ops_never_leak_property():
     def prop(ops):
         _apply_tier_ops(_tiered(), ops)
     prop()
+
+
+# --------------------------------------------------------------------------
+# chunked prefill: partial-prefill-aware admission + mid-prefill swap
+# --------------------------------------------------------------------------
+def test_admit_prefill_reserves_prompt_only_and_promotes():
+    """Prompt-only admission must fit where worst-case admission refuses;
+    reserve_decode is the promotion gate that restores the never-fails-
+    mid-decode guarantee before any decode step runs."""
+    pool = _pool(n_pages=4, page_tokens=8, max_batch=2, max_seq=64)
+    # worst case needs 3 pages: 2×16-token prompts could not both admit
+    assert pool.can_admit(16, 8)
+    a = pool.admit_prefill(seq_id=0, prompt_len=16)     # 2 pages, no debt
+    assert pool.can_admit_prefill(16, 8)
+    assert not pool.can_admit(16, 8), "worst-case admission must refuse"
+    b = pool.admit_prefill(seq_id=1, prompt_len=16)
+    assert pool.alloc.free_pages == 0
+    # neither holds a decode reservation yet
+    assert not pool.has_decode_reservation(0, 16, 8)
+    # promotion: no free page for either's third page
+    assert not pool.reserve_decode(0, 16, 8)
+    pool.release(b)                                     # frees 2 pages
+    assert pool.reserve_decode(0, 16, 8)
+    assert pool.has_decode_reservation(0, 16, 8)
+    pool.lengths[a] = 16
+    pool.ensure(a, 17)                                  # covered, never fails
+    pool.release(a)
+    assert pool.alloc.free_pages == 4 and pool._reserved == {}
+
+
+def test_tiered_swap_midprefill_trims_to_valid_prefix():
+    """A half-prefilled preemptee owns every prompt page but has written only
+    up to its chunk offset: swap-out must move (and budget) only the valid
+    prefix, and resume must restore it bit-exactly at the same offset."""
+    from repro.models import transformer
+    pool = _tiered(n_pages=8, page_tokens=4, max_batch=2, max_seq=32,
+                   host_budget=1 << 16)
+    pt = pool.page_tokens
+    L, written = 12, 5                       # 3 prompt pages, 2 written
+    slot = pool.admit_prefill(seq_id=0, prompt_len=L)
+    assert len(pool.alloc._seq_pages[0]) == 3
+    # fill the first `written` rows via the dense-prefill scatter path
+    S_p = pool.padded_len(L)
+    caches = transformer.init_caches(pool.cfg, 1, S_p)
+    rng = np.random.default_rng(3)
+    caches = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape), a.dtype), caches)
+    pool.write_prefill(slot, caches, L)
+    pool.lengths[slot] = written             # chunk offset: 5 of 12 rows
+    valid_pages = pool.alloc._seq_pages[0][:2]
+    before = [[{n: np.asarray(kv[n][:, valid_pages]) for n in ("k", "v")}
+               for kv in per_pos] for per_pos in pool.pages]
+    pool.swap_out(slot)
+    # only the 2 valid pages travelled, not the 3 owned
+    assert pool.swap_out_bytes == 2 * pool.alloc.page_bytes
+    assert pool._cold[0].n_valid == 2 and pool._cold[0].n_pages == 3
+    assert pool.hero.levels[3].in_use() == \
+        heromem.fragment_size(2 * pool.alloc.page_bytes)
+    new_slot = pool.swap_in(0)
+    assert int(pool.lengths[new_slot]) == written, \
+        "resume must continue from the chunk offset, not re-prefill"
+    assert len(pool.alloc._seq_pages[0]) == 3    # full page list re-mapped
+    restored = pool.alloc._seq_pages[0][:2]
+    after = [[{n: np.asarray(kv[n][:, restored]) for n in ("k", "v")}
+              for kv in per_pos] for per_pos in pool.pages]
+    for b_row, a_row in zip(before, after):
+        for b_ent, a_ent in zip(b_row, a_row):
+            for n in ("k", "v"):
+                np.testing.assert_array_equal(b_ent[n], a_ent[n])
+    pool.release(new_slot)
+    assert pool.hero.levels[3].in_use() == 0
+    assert pool.alloc.free_pages == pool.alloc.n_pages

@@ -332,3 +332,101 @@ def test_gpipe_equivalence_subprocess():
     r = subprocess.run([sys.executable, "-c", PIPE_SCRIPT], env=env,
                        capture_output=True, text=True, timeout=300)
     assert "PIPE_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_engine_chunked_prefill_matches_monolithic_streams():
+    """Acceptance bar for continuous batching with chunked prefill: the same
+    request mix through the unified token-budgeted step loop must produce
+    greedy token streams bit-identical to the monolithic-prefill paged
+    engine, while never exceeding the budget in any iteration."""
+    from repro.serve.engine import Engine, Request
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, int(L)).astype(np.int32)
+               for L in (6, 13, 3, 9)]
+
+    def go(**kw):
+        eng = Engine(cfg, params, n_slots=3, max_seq=64, page_tokens=8, **kw)
+        for i, p in enumerate(prompts):
+            assert eng.submit(Request(seq_id=i, prompt=p.copy(), max_new=5))
+        done = eng.run(max_steps=500)
+        return eng, {r.seq_id: list(r.tokens_out) for r in done}
+
+    _, mono = go(paged=True)
+    eng_c, chk = go(chunked_prefill=True, token_budget=8)
+    assert chk == mono
+    assert eng_c.stats["prefill_chunks"] > len(prompts), "prompts were sliced"
+    assert eng_c.stats["prefill_chunk_tokens"] == sum(len(p) for p in prompts)
+    for entry in eng_c.stats["iter_log"]:
+        assert entry["decode_tokens"] + entry["prefill_tokens"] <= 8
+    s = eng_c.stats_summary()
+    assert s["max_iter_tokens"] <= s["token_budget"] == 8
+    assert s["ttft_p50_s"] > 0
+    pool = eng_c.pool
+    assert pool.alloc.free_pages == pool.alloc.n_pages
+    assert pool._reserved == {}
+
+
+def test_engine_tiered_chunked_midprefill_preemption_resumes_at_offset():
+    """Tiered-path regression: preempt a request mid-prefill, swap it to
+    host DRAM, resume it, and assert it continues from its chunk offset
+    (never re-prefilled) with a bit-exact greedy stream."""
+    from repro.serve.engine import Engine, Request
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+    rng = np.random.default_rng(2)
+    # long prompt (4 pages of 8) + competitors on a 6-page hot pool: the
+    # long request is preempted mid-prefill when the shorts arrive behind it
+    lens = (30, 10, 10, 6)
+    prompts = [rng.integers(0, cfg.vocab, L).astype(np.int32) for L in lens]
+
+    def go(**kw):
+        eng = Engine(cfg, params, n_slots=2, max_seq=64, page_tokens=8, **kw)
+        for i, p in enumerate(prompts):
+            assert eng.submit(Request(seq_id=i, prompt=p.copy(), max_new=4))
+        done = eng.run(max_steps=2000)
+        return eng, {r.seq_id: list(r.tokens_out) for r in done}
+
+    _, ref = go(paged=True, n_pages=32)          # holds everything at once
+    eng_t, tier = go(tiered=True, chunked_prefill=True, token_budget=6,
+                     n_pages=6)
+    assert tier == ref                           # bit-exact streams
+    s = eng_t.stats_summary()
+    assert s["preempted_mid_prefill"] > 0, "a mid-prefill preemption occurred"
+    assert s["swap_in_count"] > 0
+    # resumed at the chunk offset: total chunk tokens == total prompt tokens
+    # (a re-prefill would recount the preempted prefix)
+    assert s["prefill_chunk_tokens"] == sum(lens)
+    assert s["evictions_reprefill"] == 0
+    pool = eng_t.pool
+    assert pool.alloc.free_pages == pool.alloc.n_pages
+    assert pool.cold_seqs() == [] and pool.hero.levels[3].in_use() == 0
+
+
+@pytest.mark.parametrize("kw", [dict(), dict(paged=True),
+                                dict(tiered=True),
+                                dict(chunked_prefill=True)],
+                         ids=["dense", "paged", "tiered", "chunked"])
+def test_stats_summary_empty_engine(kw):
+    """stats_summary() must report zeros on an engine that never served a
+    request — empty counter lists (queue latency, TTFT, occupancy, iteration
+    log) must not reach numpy aggregations."""
+    from repro.serve.engine import Engine
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+    eng = Engine(cfg, params, n_slots=2, max_seq=32, page_tokens=8, **kw)
+    assert eng.run(max_steps=3) == []            # idle run is a no-op
+    s = eng.stats_summary()
+    assert s["decode_steps"] == 0 and s["prefills"] == 0
+    assert s["mean_occupancy"] == 0.0
+    for p in (50, 90, 99):
+        assert s[f"queue_lat_p{p}_s"] == 0.0
+        assert s[f"ttft_p{p}_s"] == 0.0
+    if kw.get("chunked_prefill"):
+        assert s["max_iter_tokens"] == 0
+    for v in s.values():
+        assert np.isfinite(v), s
