@@ -1,0 +1,178 @@
+"""Shared-prefix KV caching vs plain chunked prefill: prefill-token
+reduction and TTFT on a shared-system-prompt ragged mix.
+
+The workload is the one prefix caching exists for: every request carries the
+same long system prompt followed by a short unique suffix (the "hundreds of
+requests, one system prompt" serving shape). The PR-3 chunked-prefill
+baseline prefills the full prompt for every request — the shared prefix is
+recomputed and re-stored once per arrival, burning pool pages and budget
+tokens that stall everyone else's first token. The prefix-cache engine
+prefills the shared prefix ONCE (the first arrival is the donor), indexes it
+in the radix tree, and every later arrival adopts the ref-counted pages and
+chunk-prefills only its suffix — the HEROv2 zero-copy sharing move applied
+to KV memory.
+
+Greedy streams are asserted bit-identical between the two engines (prefix
+reuse must never change tokens, only which of them are recomputed).
+
+Usage:  PYTHONPATH=src python benchmarks/bench_prefix_cache.py [--smoke]
+``--smoke`` (the CI job) measures one pass per engine; without it each
+engine is measured three times and the latency metrics are medians.
+Appends the ``prefix_cache`` section to BENCH_serve.json (the cross-PR perf
+trajectory file) and writes benchmarks/results/prefix_cache.json.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_bench, save_json
+from repro import configs
+from repro.models import blocks, transformer
+from repro.serve.engine import Engine, Request
+
+
+PREFIX_LEN = 64          # the shared system prompt (8 pages at pt=8)
+N_REQUESTS = 10
+
+
+def _mix(cfg, rng, tag):
+    """(arrival_iter, Request): one early donor, then a ragged stream of
+    arrivals all sharing the donor's system prompt with unique suffixes."""
+    shared = rng.integers(0, cfg.vocab, PREFIX_LEN)
+
+    def req(i, suffix_len, new, arrival):
+        suffix = rng.integers(0, cfg.vocab, suffix_len)
+        prompt = np.concatenate([shared, suffix]).astype(np.int32)
+        return (arrival, Request(seq_id=tag * 100 + i, prompt=prompt,
+                                 max_new=new))
+    sched = [req(0, 4, 8, 0)]                              # donor
+    for i in range(1, N_REQUESTS):
+        sched.append(req(i, 2 + int(rng.integers(0, 5)),
+                         2 + int(rng.integers(0, 5)),
+                         10 + 2 * i))                      # ragged arrivals
+    return sched
+
+
+def _drive(eng, schedule, max_iters=8000):
+    pending = sorted(schedule, key=lambda t: t[0])
+    done, it = [], 0
+    while True:
+        while pending and pending[0][0] <= it:
+            assert eng.submit(pending[0][1])
+            pending.pop(0)
+        if not pending and eng.idle:
+            return done
+        done.extend(eng.step())
+        it += 1
+        if it > max_iters:
+            raise RuntimeError("bench workload did not drain")
+
+
+def _metrics(done):
+    ttft = [r.t_first - r.t_submit for r in done]
+    return {
+        "ttft_mean_s": float(np.mean(ttft)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "streams": {r.seq_id % 100: list(r.tokens_out) for r in done},
+    }
+
+
+def run(smoke: bool = True, arch: str = "qwen2-0.5b", token_budget: int = 24,
+        page_tokens: int = 8, n_slots: int = 4):
+    cfg = configs.get_smoke_config(arch)
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+    # pool sized so all ten requests' worst cases fit over the run but the
+    # cache still competes for pages (prefix pins 9 of 60)
+    max_seq, n_pages = 96, 60
+    kw = dict(n_slots=n_slots, max_seq=max_seq, page_tokens=page_tokens,
+              n_pages=n_pages, token_budget=token_budget)
+
+    reps = 1 if smoke else 3
+    results = {}
+    for mode, mode_kw in (
+            ("baseline", dict(chunked_prefill=True)),
+            ("prefix", dict(prefix_cache=True,
+                            prefix_cache_pages=n_pages // 4))):
+        warm = Engine(cfg, params, **kw, **mode_kw)
+        _drive(warm, _mix(cfg, np.random.default_rng(0), tag=1))
+        runs = []
+        for rep in range(reps):
+            eng = Engine(cfg, params, **kw, **mode_kw)
+            done = _drive(eng, _mix(cfg, np.random.default_rng(0), tag=2))
+            m = _metrics(done)
+            m.update({k: v for k, v in eng.stats_summary().items()
+                      if k in ("prefills", "prefill_chunks",
+                               "prefill_chunk_tokens", "decode_tokens",
+                               "prefix_hits", "prefix_full_hits",
+                               "prefix_shared_tokens", "cow_forks",
+                               "admission_refusals")})
+            runs.append(m)
+        m = dict(runs[0])
+        for key in ("ttft_mean_s", "ttft_p99_s"):
+            m[key] = float(np.median([r[key] for r in runs]))
+        for r in runs[1:]:
+            assert r["streams"] == m["streams"], "streams must be stable"
+        results[mode] = m
+
+    assert results["prefix"]["streams"] == results["baseline"]["streams"], \
+        "prefix-sharing greedy streams must be bit-identical to the " \
+        "non-shared chunked-prefill path"
+    reduction = results["baseline"]["prefill_chunk_tokens"] / \
+        max(results["prefix"]["prefill_chunk_tokens"], 1)
+    assert reduction >= 5.0, \
+        f"prefix cache must cut prefill tokens ≥5x on the shared-system-" \
+        f"prompt mix (got {reduction:.2f}x)"
+    ttft_ratio = results["prefix"]["ttft_mean_s"] / \
+        results["baseline"]["ttft_mean_s"]
+    assert ttft_ratio < 1.0, \
+        f"prefix cache must lower mean TTFT (got {ttft_ratio:.2f}x)"
+
+    for m in results.values():
+        m.pop("streams")
+    payload = {
+        "arch": arch, "token_budget": token_budget, "n_slots": n_slots,
+        "page_tokens": page_tokens, "n_pages": n_pages,
+        "requests": N_REQUESTS, "prefix_len": PREFIX_LEN,
+        "baseline": results["baseline"],
+        "prefix": results["prefix"],
+        "prefill_token_reduction": reduction,
+        "ttft_speedup": 1.0 / ttft_ratio,
+    }
+    save_json("prefix_cache", payload)
+    path = save_bench("serve", payload, section="prefix_cache")
+    print(f"prefix_cache_baseline,"
+          f"{results['baseline']['ttft_mean_s'] * 1e6:.1f},"
+          f"prefill_tok={results['baseline']['prefill_chunk_tokens']}")
+    print(f"prefix_cache_shared,"
+          f"{results['prefix']['ttft_mean_s'] * 1e6:.1f},"
+          f"prefill_tok={results['prefix']['prefill_chunk_tokens']} "
+          f"hits={results['prefix']['prefix_hits']} "
+          f"cow={results['prefix']['cow_forks']}")
+    print(f"# prefix cache: {reduction:.2f}x fewer prefill tokens, "
+          f"{payload['ttft_speedup']:.2f}x lower mean TTFT; wrote {path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single measured pass per engine (CI job)")
+    ap.add_argument("--token-budget", type=int, default=24)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    run(smoke=args.smoke, arch=args.arch, token_budget=args.token_budget,
+        page_tokens=args.page_tokens, n_slots=args.slots)
+
+
+if __name__ == "__main__":
+    main()

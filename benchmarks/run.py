@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
   §3      bench_chunked_prefill  continuous batching w/ chunked prefill —
                               TTFT + decode-stall vs monolithic →
                               BENCH_serve.json ``chunked_prefill`` section
+  §2.1    bench_prefix_cache  shared-prefix KV cache (radix + COW pages) —
+                              prefill-token reduction + TTFT vs chunked →
+                              BENCH_serve.json ``prefix_cache`` section
   (validate_bench checks the BENCH_serve.json schema after the benches)
 """
 from __future__ import annotations
@@ -25,12 +28,13 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_autodma, bench_chunked_prefill,
                             bench_complexity, bench_interconnect, bench_isa,
-                            bench_parallel, bench_tiering, bench_tiling,
-                            roofline_report, validate_bench)
+                            bench_parallel, bench_prefix_cache, bench_tiering,
+                            bench_tiling, roofline_report, validate_bench)
     failures = []
     for mod in (bench_tiling, bench_parallel, bench_complexity,
                 bench_autodma, bench_interconnect, bench_isa,
-                roofline_report, bench_tiering, bench_chunked_prefill):
+                roofline_report, bench_tiering, bench_chunked_prefill,
+                bench_prefix_cache):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()

@@ -35,6 +35,12 @@ SCHEMAS = {
         "late_arrivals": _NUM, "ttft_speedup": _NUM, "stall_p99_ratio": _NUM,
         "monolithic": dict, "chunked": dict,
     },
+    "prefix_cache": {
+        "arch": str, "token_budget": _NUM, "n_slots": _NUM,
+        "page_tokens": _NUM, "n_pages": _NUM, "requests": _NUM,
+        "prefix_len": _NUM, "prefill_token_reduction": _NUM,
+        "ttft_speedup": _NUM, "baseline": dict, "prefix": dict,
+    },
 }
 # keys every per-engine sub-dict must carry with numeric values
 ENGINE_NUM_KEYS = {
@@ -43,6 +49,8 @@ ENGINE_NUM_KEYS = {
                 "swap_out_bytes", "swap_in_bytes", "peak_in_system"),
     "chunked_prefill": ("ttft_mean_s", "ttft_p99_s", "decode_stall_p99_s",
                         "prefills", "decode_tokens"),
+    "prefix_cache": ("ttft_mean_s", "ttft_p99_s", "prefills",
+                     "prefill_chunk_tokens", "decode_tokens"),
 }
 
 
@@ -66,7 +74,8 @@ def _check(errors, path, obj, schema):
                           f"got {type(v).__name__}")
 
 
-def validate(path: str, require=("tiering", "chunked_prefill")):
+def validate(path: str, require=("tiering", "chunked_prefill",
+                                 "prefix_cache")):
     """Returns a list of error strings (empty = valid)."""
     errors = []
     try:
@@ -100,7 +109,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("path", nargs="?", default="BENCH_serve.json")
     ap.add_argument("--require", nargs="+",
-                    default=["tiering", "chunked_prefill"])
+                    default=["tiering", "chunked_prefill", "prefix_cache"])
     args = ap.parse_args()
     errors = validate(args.path, require=tuple(args.require))
     if errors:

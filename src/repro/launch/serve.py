@@ -20,6 +20,14 @@ hero_memcpy DMA and the request resumes later (preemptive scheduling);
 loop (continuous batching with chunked prefill; implies --paged, composes
 with --tiered); ``--token-budget`` caps the tokens any iteration may process
 — decode tokens are packed first, prompt chunks fill the remainder.
+``--prefix-cache`` (implies --chunked-prefill) turns on shared-prefix KV
+caching: completed prompts are indexed in a radix tree and later arrivals
+adopt the ref-counted pages of their longest cached prefix instead of
+re-prefilling it; ``--prefix-cache-pages`` caps how many hot pages the cache
+may pin (LRU-evicted on demand).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --prefix-cache --shared-prefix-len 32 --requests 12
 """
 from __future__ import annotations
 
@@ -63,6 +71,16 @@ def main():
                     help="tokens per engine iteration (decode first, prompt "
                          "chunks fill the remainder; default "
                          "slots + 4×page-tokens)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix KV caching: radix prompt index + "
+                         "ref-counted copy-on-write pages (implies "
+                         "--chunked-prefill)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=None,
+                    help="max hot pages the prefix cache may pin "
+                         "(default: half the page pool)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend a shared system-prompt prefix of this many "
+                         "tokens to every request (demonstrates prefix reuse)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
@@ -75,32 +93,46 @@ def main():
                                     if args.host_budget_mb else None),
                  preempt_quantum=args.preempt_quantum,
                  chunked_prefill=args.chunked_prefill,
-                 token_budget=args.token_budget)
+                 token_budget=args.token_budget,
+                 prefix_cache=args.prefix_cache,
+                 prefix_cache_pages=args.prefix_cache_pages)
 
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, args.shared_prefix_len)
     t0 = time.time()
     for i in range(args.requests):
+        suffix = rng.integers(0, cfg.vocab, args.prompt_len)
         eng.submit(Request(
             seq_id=i,
-            prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
+            prompt=np.concatenate([shared, suffix]).astype(np.int32),
             max_new=args.max_new))
     done = eng.run(max_steps=10000)
     wall = time.time() - t0
     total_new = sum(len(r.tokens_out) for r in done)
     occ = np.mean(eng.stats["batch_occupancy"]) if eng.stats["batch_occupancy"] else 0
+    chunked = args.chunked_prefill or args.prefix_cache
     mode = "tiered" if args.tiered else ("paged" if args.paged else "dense")
-    if args.chunked_prefill:
+    if chunked:
         mode = "chunked+" + mode if args.tiered else "chunked"
+    if args.prefix_cache:
+        mode = "prefix+" + mode
     print(f"[serve:{mode}] {len(done)} requests, {total_new} tokens in "
           f"{wall:.2f}s ({total_new / wall:.1f} tok/s), "
           f"decode steps {eng.stats['decode_steps']}, "
           f"mean batch occupancy {occ:.2f}")
-    if args.paged or args.tiered or args.chunked_prefill:
+    if args.paged or args.tiered or chunked:
         a = eng.pool.alloc
         print(f"[serve:{mode}] pool {a.n_pages} pages × {a.page_tokens} tok "
               f"({eng.pool.footprint_bytes()} B), free {a.free_pages}, "
               f"admission refusals {eng.stats['admission_refusals']}")
-    if args.chunked_prefill:
+    if args.prefix_cache:
+        s = eng.stats_summary()
+        print(f"[serve:{mode}] prefix hits {s['prefix_hits']} "
+              f"({s['prefix_full_hits']} full), shared tokens "
+              f"{s['prefix_shared_tokens']}, cached pages "
+              f"{s['prefix_held_pages']}, cow forks {s['cow_forks']}, "
+              f"evicted pages {s['prefix_evicted_pages']}")
+    if chunked:
         s = eng.stats_summary()
         print(f"[serve:{mode}] token budget {s['token_budget']} "
               f"(max iter {s['max_iter_tokens']}), prefill chunks "

@@ -1,1 +1,1 @@
-from repro.serve import engine, kvcache, tiering  # noqa: F401
+from repro.serve import engine, kvcache, prefix_cache, tiering  # noqa: F401

@@ -22,6 +22,32 @@ front (``admit_prefill``); the decode worst case is topped up at *promotion*
 (``reserve_decode``), after the prompt completes and its first token has
 already streamed. A preempted half-prefilled request resumes at its chunk
 offset — never re-prefilled (tiered swap keeps the written KV prefix).
+
+Shared-prefix KV caching (``prefix_cache=True``, implies chunked) adds the
+radix prompt index (serve/prefix_cache.py) in front of admission: a new
+request adopts the ref-counted pages of its longest cached prefix and starts
+prefilling at the match offset; an exact full-prompt hit skips prefill
+entirely. Divergent writes COW-fork shared pages first (the fork page is
+pre-reserved, so the never-fails-mid-decode guarantee survives sharing).
+
+Ownership boundaries & invariants:
+
+  * This module owns **scheduling state only** — the mailbox, the four
+    request sets (``prefilling`` → ``prefilled_wait`` → ``active``, plus the
+    tiered pool's cold set), victim selection, and the token-budget packing.
+    Page accounting belongs to serve/kvcache.py, page identity/refcounts to
+    core/vmm.py, tier movement to serve/tiering.py, prefix lookup to
+    serve/prefix_cache.py.
+  * **Bit-identical streams**: scheduling decisions (chunking, preemption,
+    promotion order, prefix reuse) may change *when* tokens are computed,
+    never *which* tokens a greedy request streams
+    (tests/test_scheduler_properties.py).
+  * A request is in exactly one of: mailbox, prefilling, prefilled_wait,
+    active, cold (tiered), or finished; every admitted request eventually
+    finishes (the deadlock breakers guarantee rotation terminates).
+  * Engine stats never lie about totals: decode_tokens + prefill_chunk
+    tokens per iteration never exceed the budget, and accounting closes at
+    drain (no page, reservation, or slot leaks).
 """
 from __future__ import annotations
 
@@ -37,6 +63,7 @@ from repro.core.offload import Mailbox, TargetRegion
 from repro.models import blocks, transformer
 from repro.serve import paged_step
 from repro.serve.kvcache import CachePool, PagedCachePool
+from repro.serve.prefix_cache import PrefixCache, PrefixMatch
 from repro.serve.tiering import TieredCachePool
 from repro.train import step as steps
 
@@ -103,11 +130,13 @@ class Engine:
                  host_budget_bytes: Optional[int] = None,
                  preempt_quantum: int = 1,
                  chunked_prefill: bool = False,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
-        self.chunked = chunked_prefill
-        self.paged = paged or tiered or chunked_prefill
+        self.chunked = chunked_prefill or prefix_cache
+        self.paged = paged or tiered or self.chunked
         self.tiered = tiered
         self.mailbox = Mailbox(depth=256)
         self.active: Dict[int, Request] = {}       # slot -> decoding request
@@ -120,8 +149,11 @@ class Engine:
                       "swap_out_count": 0, "swap_in_count": 0,
                       "swap_out_bytes": 0, "swap_in_bytes": 0,
                       "prefill_chunks": 0, "prefill_chunk_tokens": 0,
-                      "decode_tokens": 0,
+                      "decode_tokens": 0, "cow_forks": 0,
+                      "prefix_hits": 0, "prefix_full_hits": 0,
+                      "prefix_shared_tokens": 0,
                       "queue_lat_s": [], "ttft_s": [], "iter_log": []}
+        self.prefix: Optional[PrefixCache] = None
         if self.paged:
             if n_pages is None:
                 # parity budget with the dense pool's HBM footprint (floor:
@@ -163,6 +195,14 @@ class Engine:
                     "paged_prefill_chunk", (cfg, page_tokens),
                     lambda: paged_step.make_paged_prefill_chunk_step(
                         cfg, page_tokens))
+                if prefix_cache:
+                    # the cap bounds how many hot pages the cache may pin;
+                    # admission evicts LRU entries when it needs them back
+                    self.prefix = PrefixCache(
+                        self.pool.alloc, page_tokens,
+                        max_pages=(prefix_cache_pages
+                                   if prefix_cache_pages is not None
+                                   else max(1, n_pages // 2)))
         else:
             self.pool = CachePool(cfg, n_slots, max_seq)
             self._decode = TargetRegion(steps.make_decode_step(cfg), name="decode")
@@ -414,15 +454,51 @@ class Engine:
                 self.stats["rejected"] = self.stats.get("rejected", 0) + 1
                 continue
             if self.chunked:
-                if not self.pool.can_admit_prefill(L, req.max_new):
-                    if not (self.tiered and self._preempt_until(
-                            lambda: self.pool.can_admit_prefill(
-                                L, req.max_new))):
-                        self.mailbox.requeue(req)
-                        self.stats["admission_refusals"] += 1
-                        self._admit_stalled = True
+                while True:
+                    # longest-cached-prefix lookup: the request adopts the
+                    # match's ref-counted pages and prefills only the
+                    # unshared suffix (re-matched after every eviction —
+                    # an evicted match page may have been freed)
+                    match = self._prefix_match(req)
+                    if self.pool.can_admit_prefill(
+                            L, req.max_new, len(match.pages), match.length):
                         break
-                slot = self.pool.admit_prefill(req.seq_id, L)
+                    # cache eviction can only fix a PAGE shortage; when the
+                    # refusal is slot-bound (or the request can never fit),
+                    # flushing the index would cost every future hit for
+                    # zero capacity — and only entries whose page actually
+                    # frees (refcount 1) are worth dropping
+                    if self.prefix is not None and \
+                            np.any(self.pool.seq_ids < 0) and \
+                            self.pool.admissible_ever(L, req.max_new) and \
+                            self.prefix.evict_lru(1, require_free=True):
+                        continue   # reclaimed a cache-pinned page: retry
+                    if self.tiered and self._preempt_until(
+                            lambda: self.pool.can_admit_prefill(
+                                L, req.max_new, len(match.pages),
+                                match.length)):
+                        continue
+                    self.mailbox.requeue(req)
+                    self.stats["admission_refusals"] += 1
+                    self._admit_stalled = True
+                    match = None
+                    break
+                if match is None:
+                    break
+                slot = self.pool.admit_prefill(req.seq_id, L,
+                                               shared_pages=match.pages,
+                                               match_len=match.length)
+                if match.length:
+                    req.prefill_pos = match.length
+                    self.pool.lengths[slot] = match.length
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_shared_tokens"] += match.length
+                if match.first_token is not None:
+                    self.stats["prefix_full_hits"] += 1
+                    # exact full-prompt hit: the cached greedy continuation
+                    # IS this request's first token — prefill is skipped
+                    # entirely and the request promotes straight to decode
+                    self._emit(req, match.first_token)
                 self._activate(slot, req, first_admit=True)
                 continue
             if not self.pool.can_admit(L, req.max_new):
@@ -445,6 +521,19 @@ class Engine:
             self._activate(slot, req, first_admit=True)
             self.stats["prefills"] += 1
 
+    def _prefix_match(self, req: Request) -> PrefixMatch:
+        """Prefix-cache lookup for a fresh request (no KV written yet). The
+        cached first token is honoured only on the greedy path — otherwise
+        the match is trimmed so at least one position is re-computed."""
+        if self.prefix is None or req.prefill_pos or req.tokens_out:
+            return PrefixMatch(length=0, pages=[])
+        m = self.prefix.match(req.prompt)
+        if m.first_token is not None and not self.greedy:
+            length = min(m.length, len(req.prompt) - 1)
+            m = PrefixMatch(length=length,
+                            pages=m.pages[:self.pool.pages_for(length)])
+        return m
+
     def _decode_step_paged(self, slots: Optional[List[int]] = None
                            ) -> List[Request]:
         if self.tiered:
@@ -462,6 +551,13 @@ class Engine:
             req = self.active[slot]
             toks[slot, 0] = req.tokens_out[-1]
             mask[slot] = True
+            # a shared page at the write position is COW-forked before the
+            # divergent write (first decode after a full-prefix hit, or a
+            # donor decoding into its cache-shared tail page); the fork page
+            # was pre-reserved, so neither call below can fail
+            if self.prefix is not None and self.pool.cow_unshare(
+                    slot, int(self.pool.lengths[slot])):
+                self.stats["cow_forks"] += 1
             # map the write position (lengths[slot]) before dispatch; the
             # decode reservation guarantees this never fails
             self.pool.ensure(slot, int(self.pool.lengths[slot]) + 1)
@@ -598,6 +694,10 @@ class Engine:
         the slot's already-reserved pages; on prompt completion the first
         token streams immediately (from the chunk's last-position logits) and
         promotion to the decode set is attempted."""
+        if self.prefix is not None and self.pool.cow_unshare(slot, start):
+            # the first chunk after a mid-page prefix match diverges inside
+            # the shared partially-filled page: fork it before the write
+            self.stats["cow_forks"] += 1
         table_row = jnp.asarray(self.pool.page_table_row(slot))
         toks = jnp.asarray(
             req.prompt[start:start + size][None, :].astype(np.int32))
@@ -610,9 +710,15 @@ class Engine:
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_chunk_tokens"] += size
         if req.prefill_pos >= len(req.prompt):
-            self._emit(req, int(jnp.argmax(logits_last[0])))
+            tok = int(jnp.argmax(logits_last[0]))
+            self._emit(req, tok)
             del self.prefilling[slot]
             self.stats["prefills"] += 1
+            if self.prefix is not None and self.greedy:
+                # index the completed prompt: its pages become claimable by
+                # later arrivals, its greedy first token makes an exact
+                # re-arrival skip prefill entirely
+                self.prefix.insert(self.pool, req.seq_id, req.prompt, tok)
             if self.pool.reserve_decode(req.seq_id, len(req.prompt),
                                         req.max_new):
                 self.active[slot] = req
@@ -635,6 +741,14 @@ class Engine:
             req = self.prefilled_wait[head]
             L = len(req.prompt)
             ok = self.pool.reserve_decode(req.seq_id, L, req.max_new)
+            if not ok and self.prefix is not None:
+                # reclaim cache-pinned pages before escalating to preemption
+                # (require_free: dropping a still-adopted page frees nothing)
+                while not self.pool.can_reserve_decode(
+                        req.seq_id, L, req.max_new) and \
+                        self.prefix.evict_lru(1, require_free=True):
+                    pass
+                ok = self.pool.reserve_decode(req.seq_id, L, req.max_new)
             if not ok and self.tiered:
                 ok = self._preempt_until(
                     lambda: self.pool.can_reserve_decode(
@@ -699,6 +813,10 @@ class Engine:
             "prefill_chunks": self.stats.get("prefill_chunks", 0),
             "prefill_chunk_tokens": self.stats.get("prefill_chunk_tokens", 0),
             "decode_tokens": self.stats.get("decode_tokens", 0),
+            "cow_forks": self.stats.get("cow_forks", 0),
+            "prefix_hits": self.stats.get("prefix_hits", 0),
+            "prefix_full_hits": self.stats.get("prefix_full_hits", 0),
+            "prefix_shared_tokens": self.stats.get("prefix_shared_tokens", 0),
             "peak_used_bytes": self.stats.get("peak_used_bytes", 0),
             "peak_host_bytes": self.stats.get("peak_host_bytes", 0),
             "peak_in_system": self.stats.get("peak_in_system", 0),
@@ -709,6 +827,8 @@ class Engine:
             out["max_iter_tokens"] = max(
                 (e["decode_tokens"] + e["prefill_tokens"] for e in iters),
                 default=0)
+        if self.prefix is not None:
+            out.update(self.prefix.stats())
         for p in (50, 90, 99):
             out[f"queue_lat_p{p}_s"] = (
                 float(np.percentile(lat, p)) if lat else 0.0)

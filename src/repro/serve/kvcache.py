@@ -14,6 +14,29 @@ serving: sequences own page lists; the device-side page table translates
 logical token position → physical page. Page-table rows are int32; *byte*
 offsets of pages can exceed 2³¹ (500k-ctx × many slots) — offset dtype goes
 through the addrspace promotion analysis.
+
+Ownership boundaries & invariants:
+
+  * This module owns the **device-resident page pool arrays** and the
+    host-side slot state (seq_ids/lengths) — the mapping between request
+    identity and physical KV rows. Scheduling (who admits, who decodes)
+    belongs to serve/engine.py; page *identity* and refcounts belong to
+    core/vmm.py; cross-tier movement to serve/tiering.py.
+  * **Never-fails-mid-decode**: every admitted sequence's reservation covers
+    its worst-case page growth (including the copy-on-write fork of a shared
+    partial page), so ``ensure``/``cow_unshare`` on a resident sequence
+    cannot raise — pool exhaustion surfaces as an admission refusal.
+  * **Reservations count private pages only**: shared prefix pages adopted
+    from the prefix cache (serve/prefix_cache.py) cost the admitting request
+    nothing — admission reserves only the *unshared* suffix plus one page
+    for the COW fork when the match ends mid-page.
+  * **Shared pages are read-only to sharers**: before the first divergent
+    write into a page whose refcount exceeds one, ``cow_unshare`` forks it
+    (vmm fork_page + device-side copy_page), so no write by one sequence is
+    ever visible through another sequence's page table.
+  * **No-leak accounting**: releasing every slot returns every private page
+    to the free list and zeroes the reservation table (property-tested in
+    tests/test_paged_kvcache.py and tests/test_scheduler_properties.py).
 """
 from __future__ import annotations
 
@@ -26,6 +49,7 @@ import numpy as np
 
 from repro.core import addrspace, vmm
 from repro.models import transformer
+from repro.serve import paged_step
 
 
 @dataclasses.dataclass
@@ -150,7 +174,12 @@ class PagedCachePool:
         # host-side slot state (decode batch width is compiled-static)
         self.seq_ids = np.full(max_batch, -1, np.int64)
         self.lengths = np.zeros(max_batch, np.int64)   # valid KV rows per slot
-        self._reserved: Dict[int, int] = {}            # seq_id -> pages reserved
+        self._reserved: Dict[int, int] = {}   # seq_id -> PRIVATE pages
+        #                                       reserved (shared prefix pages
+        #                                       cost the sharer nothing)
+        self._shared_base: Dict[int, int] = {}  # seq_id -> adopted pages the
+        #                                         seq will never write (full
+        #                                         shared prefix pages)
 
     # -- admission --------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -168,12 +197,22 @@ class PagedCachePool:
             min(prompt_len + max(max_new, 1), self.max_seq))
 
     def _reservation_debt(self) -> int:
-        """Reserved-but-not-yet-allocated pages across active sequences."""
+        """Reserved-but-not-yet-drawn private pages across active sequences.
+        Adopted shared pages are excluded on both sides of the subtraction:
+        reservations are private-page counts, and ``seq_private_pages`` counts
+        only pages drawn from the free list (alloc/extend/COW-fork)."""
         debt = 0
         for sid, reserved in self._reserved.items():
-            have = len(self.alloc._seq_pages.get(sid, []))
-            debt += max(0, reserved - have)
+            debt += max(0, reserved - self.alloc.seq_private_pages(sid))
         return debt
+
+    def _worst_private(self, seq_id: int, prompt_len: int,
+                       max_new: int) -> int:
+        """Worst-case *private* page need: total worst case minus the shared
+        prefix pages this sequence will never write (COW-forkable shares are
+        already counted private at admission)."""
+        return self._worst_pages(prompt_len, max_new) - \
+            self._shared_base.get(seq_id, 0)
 
     def admissible_ever(self, prompt_len: int, max_new: int) -> bool:
         """False iff the request can never fit, even on an idle pool —
@@ -206,39 +245,109 @@ class PagedCachePool:
         return slot
 
     # -- chunked prefill: partial-prefill-aware admission -------------------
-    def can_admit_prefill(self, prompt_len: int, max_new: int) -> bool:
+    def _private_prompt_need(self, prompt_len: int, n_shared_pages: int,
+                             match_len: int) -> int:
+        """Private pages a prefill admission must cover: the unshared prompt
+        suffix, plus one page when the shared match ends mid-page — that
+        partially-filled page is COW-forked before the first divergent write
+        lands in it."""
+        cow = 1 if (n_shared_pages and match_len % self.page_tokens) else 0
+        return self.pages_for(prompt_len) - n_shared_pages + cow
+
+    def can_admit_prefill(self, prompt_len: int, max_new: int,
+                          n_shared_pages: int = 0, match_len: int = 0) -> bool:
         """Chunked-prefill admission: only the *prompt* pages need to be
         coverable now — the decode worst case is topped up at promotion time
         (``reserve_decode``), so a request can start prefilling, and stream
-        its first token, long before the pool could hold its whole decode."""
+        its first token, long before the pool could hold its whole decode.
+        With a prefix-cache match, only the **unshared suffix** (plus the COW
+        page) needs covering — shared pages are adopted, not allocated."""
         if not np.any(self.seq_ids < 0):
             return False                               # no slot
         if not self.admissible_ever(prompt_len, max_new):
             return False
-        return self.pages_for(prompt_len) <= \
+        return self._private_prompt_need(prompt_len, n_shared_pages,
+                                         match_len) <= \
             self.alloc.free_pages - self._reservation_debt()
 
-    def admit_prefill(self, seq_id: int, prompt_len: int) -> int:
-        """Admit for chunked prefill: allocate (and reserve) exactly the
-        prompt's pages, so every chunk ``[start, start+C)`` lands in
-        already-reserved pages; claim a slot. No decode reservation yet."""
+    def admit_prefill(self, seq_id: int, prompt_len: int,
+                      shared_pages: Optional[List[int]] = None,
+                      match_len: int = 0) -> int:
+        """Admit for chunked prefill: adopt the shared prefix pages (if any),
+        allocate (and reserve) the private suffix pages, so every chunk
+        ``[start, start+C)`` lands in already-reserved pages; claim a slot.
+        No decode reservation yet.
+
+        ``shared_pages`` must cover logical positions ``[0, match_len)`` in
+        order (a prefix-cache match); the request's prefill resumes at
+        ``match_len``. The reservation includes one extra page when the match
+        ends mid-page — the COW fork ``cow_unshare`` will draw there."""
+        shared_pages = list(shared_pages or ())
         if seq_id in self.alloc._seq_pages or seq_id in self._reserved:
             raise ValueError(f"paged KV: seq_id {seq_id} already resident "
                              "(page lists would silently merge)")
-        if self.pages_for(prompt_len) > \
-                self.alloc.free_pages - self._reservation_debt() or \
+        if shared_pages and len(shared_pages) != self.pages_for(match_len):
+            raise ValueError(
+                f"paged KV: {len(shared_pages)} shared pages do not cover "
+                f"match_len {match_len} (need {self.pages_for(match_len)})")
+        need = self._private_prompt_need(prompt_len, len(shared_pages),
+                                         match_len)
+        if need > self.alloc.free_pages - self._reservation_debt() or \
                 not np.any(self.seq_ids < 0):
             raise MemoryError("paged KV: prefill admission refused")
         slot = int(np.where(self.seq_ids < 0)[0][0])
-        self._reserved[seq_id] = self.pages_for(prompt_len)
-        self.alloc.alloc_seq(seq_id, prompt_len)
+        self._reserved[seq_id] = need
+        if shared_pages:
+            cow = 1 if match_len % self.page_tokens else 0
+            self._shared_base[seq_id] = len(shared_pages) - cow
+            self.alloc.adopt_pages(seq_id, shared_pages)
+        self.alloc.alloc_pages(
+            seq_id, self.pages_for(prompt_len) - len(shared_pages))
         self.seq_ids[slot] = seq_id
         self.lengths[slot] = 0
         return slot
 
+    def reserve_extra(self, seq_id: int, n: int = 1) -> bool:
+        """Grow a resident sequence's private reservation by ``n`` pages if
+        the pool can cover it now. Used when a resident's own partial tail
+        page becomes shared (prefix-cache insertion): its next decode write
+        must COW-fork, and the fork must be pre-reserved to preserve the
+        never-fails-mid-decode guarantee. False leaves the reservation (and
+        therefore the sharing decision) unchanged."""
+        if seq_id not in self._reserved:
+            return False
+        if n > self.alloc.free_pages - self._reservation_debt():
+            return False
+        self._reserved[seq_id] += n
+        return True
+
+    def cow_unshare(self, slot: int, pos: int) -> bool:
+        """Copy-on-write fork of the page mapped at token position ``pos`` of
+        a resident sequence, iff that page is shared (refcount > 1). The vmm
+        fork swaps the page-table entry to a fresh private page; the device
+        copy (paged_step.copy_page, one per pool leaf) lands the shared
+        page's rows there before the caller's divergent write. Never fails
+        for admitted sequences: the fork page was reserved at admission
+        (`_private_prompt_need`) or by ``reserve_extra``. Returns True iff a
+        fork happened."""
+        sid = int(self.seq_ids[slot])
+        if sid < 0:
+            raise vmm.StaleSequenceError(
+                f"paged KV: cow_unshare of free slot {slot}")
+        idx = pos // self.page_tokens
+        pages = self.alloc._seq_pages[sid]
+        if idx >= len(pages) or self.alloc.refcount(pages[idx]) <= 1:
+            return False
+        old, new = self.alloc.fork_page(sid, idx)
+        self.pages = [
+            tuple({name: paged_step.copy_page(kv[name], old, new)
+                   for name in ("k", "v")} for kv in per_pos)
+            for per_pos in self.pages]
+        return True
+
     def can_reserve_decode(self, seq_id: int, prompt_len: int,
                            max_new: int) -> bool:
-        extra = self._worst_pages(prompt_len, max_new) - \
+        extra = self._worst_private(seq_id, prompt_len, max_new) - \
             self._reserved.get(seq_id, 0)
         return extra <= 0 or \
             extra <= self.alloc.free_pages - self._reservation_debt()
@@ -248,17 +357,20 @@ class PagedCachePool:
         """Top the prompt-only reservation up to the decode worst case —
         the promotion gate between 'prompt prefilled' and 'decoding'. True
         iff the reservation now covers decode (so mid-decode ``ensure`` can
-        never fail); False leaves the reservation unchanged."""
+        never fail); False leaves the reservation unchanged. Shared prefix
+        pages the sequence will never write are excluded from the worst case
+        (``_worst_private``)."""
         if not self.can_reserve_decode(seq_id, prompt_len, max_new):
             return False
-        self._reserved[seq_id] = max(self._reserved.get(seq_id, 0),
-                                     self._worst_pages(prompt_len, max_new))
+        self._reserved[seq_id] = max(
+            self._reserved.get(seq_id, 0),
+            self._worst_private(seq_id, prompt_len, max_new))
         return True
 
     def has_decode_reservation(self, seq_id: int, prompt_len: int,
                                max_new: int) -> bool:
         return self._reserved.get(seq_id, 0) >= \
-            self._worst_pages(prompt_len, max_new)
+            self._worst_private(seq_id, prompt_len, max_new)
 
     def ensure(self, slot: int, n_tokens: int) -> None:
         """Grow slot's page list on demand so positions < n_tokens are mapped
@@ -268,9 +380,16 @@ class PagedCachePool:
                               int(self.lengths[slot]))
 
     def release(self, slot: int) -> None:
+        """Drop a resident sequence: every page reference it holds is
+        released (shared pages survive for their other holders — the
+        refcount, not the release order, decides when a page frees)."""
         sid = int(self.seq_ids[slot])
+        if sid < 0:
+            raise vmm.StaleSequenceError(
+                f"paged KV: release of free slot {slot} (double release?)")
         self.alloc.free_seq(sid)
         self._reserved.pop(sid, None)
+        self._shared_base.pop(sid, None)
         self.seq_ids[slot] = -1
         self.lengths[slot] = 0
 

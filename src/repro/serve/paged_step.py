@@ -47,6 +47,14 @@ def scatter_pages(pool: jax.Array, rows: jax.Array,
     return pool.at[:, page_ids].set(rows.astype(pool.dtype))
 
 
+def copy_page(pool: jax.Array, src: int, dst: int) -> jax.Array:
+    """Device-side page duplication — the copy half of copy-on-write. All
+    ``page_tokens`` rows of page ``src`` land on page ``dst`` of the same
+    pool leaf; the caller (PagedCachePool.cow_unshare) has already moved the
+    sequence's page-table entry to ``dst`` via vmm fork_page."""
+    return pool.at[:, dst].set(pool[:, src])
+
+
 def scatter_chunk(pool: jax.Array, rows: jax.Array, page_table: jax.Array,
                   start: jax.Array, page_tokens: int) -> jax.Array:
     """Write a prefill chunk's K/V rows ([C, K, hd]) at logical positions

@@ -19,9 +19,24 @@ Swap phasing mirrors AutoDMA's load/execute/store pipeline:
   host→device traffic overlaps device compute (the paper's load phase of
   iteration i+1 overlapping execute of iteration i).
 
-Accounting invariants (property-tested in tests/test_paged_kvcache.py):
-a sequence is resident in exactly one tier; hot pages never double-allocate;
-releasing everything restores both the page pool and the L3 arena.
+Ownership boundaries & invariants (property-tested in
+tests/test_paged_kvcache.py):
+
+  * This module owns **cross-tier residency** — which sequences live in host
+    DRAM, their swap records, and the DMA traffic. Hot-tier page accounting
+    stays in the wrapped PagedCachePool; eviction *policy* (victim choice)
+    stays in serve/engine.py.
+  * A sequence is resident in exactly one tier; hot pages never
+    double-allocate; releasing everything restores both the page pool and
+    the L3 arena.
+  * Swap is **refcount-aware**: evicting a sequence only drops *its*
+    references (vmm free_seq), so a page shared with the prefix cache or
+    another resident is never yanked from under a reader — the bits were
+    copied to host first, and resume re-materialises them into fresh private
+    pages with the reservation widened to cover the formerly shared prefix.
+  * ``can_swap_out`` → True guarantees ``swap_out`` cannot fail mid-eviction
+    (the o1heap probe), and a swap-out/-in round trip restores KV bit-exactly
+    at the same chunk offset.
 """
 from __future__ import annotations
 
@@ -31,7 +46,7 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dma, heromem
+from repro.core import dma, heromem, vmm
 from repro.models import transformer
 from repro.serve import paged_step
 from repro.serve.kvcache import PagedCachePool
@@ -151,14 +166,26 @@ class TieredCachePool:
         return self.hot.admit(seq_id, prompt_len, max_new)
 
     # chunked prefill: partial-prefill-aware admission + promotion gate
-    def can_admit_prefill(self, prompt_len: int, max_new: int) -> bool:
-        return self.hot.can_admit_prefill(prompt_len, max_new)
+    def can_admit_prefill(self, prompt_len: int, max_new: int,
+                          n_shared_pages: int = 0, match_len: int = 0) -> bool:
+        return self.hot.can_admit_prefill(prompt_len, max_new,
+                                          n_shared_pages, match_len)
 
-    def admit_prefill(self, seq_id: int, prompt_len: int) -> int:
+    def admit_prefill(self, seq_id: int, prompt_len: int,
+                      shared_pages: Optional[List[int]] = None,
+                      match_len: int = 0) -> int:
         if seq_id in self._cold:
             raise ValueError(f"tiered KV: seq_id {seq_id} is resident in the "
                              "cold tier (resume it, don't re-admit)")
-        return self.hot.admit_prefill(seq_id, prompt_len)
+        return self.hot.admit_prefill(seq_id, prompt_len,
+                                      shared_pages=shared_pages,
+                                      match_len=match_len)
+
+    def reserve_extra(self, seq_id: int, n: int = 1) -> bool:
+        return self.hot.reserve_extra(seq_id, n)
+
+    def cow_unshare(self, slot: int, pos: int) -> bool:
+        return self.hot.cow_unshare(slot, pos)
 
     def can_reserve_decode(self, seq_id: int, prompt_len: int,
                            max_new: int) -> bool:
@@ -258,10 +285,14 @@ class TieredCachePool:
             [h for row in handles for ent in row for h in ent.values()])
         host = [[{name: np.asarray(h.value) for name, h in ent.items()}
                  for ent in row] for row in handles]
+        # resume re-allocates every page as private (the shared prefix is
+        # duplicated, not re-adopted), so the restored reservation must be
+        # the TOTAL worst case: private reservation + never-written shares
         self._cold[sid] = ColdSeq(
             seq_id=sid, length=int(self.hot.lengths[slot]),
             n_pages=len(page_ids), n_valid=n_valid,
-            reserved=self.hot._reserved.get(sid, len(page_ids)),
+            reserved=(self.hot._reserved.get(sid, len(page_ids))
+                      + self.hot._shared_base.get(sid, 0)),
             nbytes=nbytes, mem_handle=mem, host=host)
         self.hot.release(slot)
         self.swap_out_count += 1
@@ -331,5 +362,8 @@ class TieredCachePool:
 
     def drop_cold(self, seq_id: int) -> None:
         """Discard a cold sequence without resuming it (cancelled request)."""
-        rec = self._cold.pop(seq_id)
+        rec = self._cold.pop(seq_id, None)
+        if rec is None:
+            raise vmm.StaleSequenceError(
+                f"tiered KV: drop_cold of non-cold seq {seq_id}")
         self.hero.free(3, rec.mem_handle)

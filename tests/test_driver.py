@@ -64,7 +64,8 @@ def test_grad_accum_matches_plain():
 
 
 @pytest.mark.slow  # subprocess CLI end-to-end
-@pytest.mark.parametrize("mode", ["dense", "paged", "tiered", "chunked"])
+@pytest.mark.parametrize("mode", ["dense", "paged", "tiered", "chunked",
+                                  "prefix"])
 def test_serve_driver_cli(mode):
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -79,6 +80,10 @@ def test_serve_driver_cli(mode):
     elif mode == "chunked":
         cmd += ["--chunked-prefill", "--page-tokens", "8",
                 "--token-budget", "6"]
+    elif mode == "prefix":
+        # a shared 8-token system prompt → the 2nd/3rd requests must hit
+        cmd += ["--prefix-cache", "--page-tokens", "8", "--token-budget", "8",
+                "--shared-prefix-len", "8", "--prompt-len", "2"]
     r = subprocess.run(cmd, env=env, capture_output=True, text=True,
                        timeout=400)
     assert "3 requests" in r.stdout, r.stdout + r.stderr
@@ -88,6 +93,8 @@ def test_serve_driver_cli(mode):
         assert "preemptions" in r.stdout and "swap out" in r.stdout
     elif mode == "chunked":
         assert "token budget 6" in r.stdout and "prefill chunks" in r.stdout
+    elif mode == "prefix":
+        assert "prefix hits" in r.stdout and "shared tokens" in r.stdout
 
 
 def test_validate_bench_schema_roundtrip(tmp_path):
@@ -117,6 +124,12 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                             "ttft_speedup": 4.2, "stall_p99_ratio": 1.1,
                             "monolithic": engine_stub("chunked_prefill"),
                             "chunked": engine_stub("chunked_prefill")},
+        "prefix_cache": {"arch": "qwen2-0.5b", "token_budget": 24,
+                         "n_slots": 4, "page_tokens": 8, "n_pages": 60,
+                         "requests": 10, "prefix_len": 64,
+                         "prefill_token_reduction": 6.5, "ttft_speedup": 12.0,
+                         "baseline": engine_stub("prefix_cache"),
+                         "prefix": engine_stub("prefix_cache")},
     }
     p = tmp_path / "BENCH_serve.json"
     p.write_text(json.dumps(good))
@@ -124,6 +137,7 @@ def test_validate_bench_schema_roundtrip(tmp_path):
     # missing section
     p.write_text(json.dumps({"tiering": good["tiering"]}))
     assert any("chunked_prefill" in e for e in validate(str(p)))
+    assert any("prefix_cache" in e for e in validate(str(p)))
     # NaN numeric field
     bad = dict(good)
     bad["chunked_prefill"] = dict(good["chunked_prefill"],
@@ -137,4 +151,4 @@ def test_validate_bench_schema_roundtrip(tmp_path):
     repo_bench = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_serve.json")
     assert validate(repo_bench) == []
-    assert set(SCHEMAS) == {"tiering", "chunked_prefill"}
+    assert set(SCHEMAS) == {"tiering", "chunked_prefill", "prefix_cache"}

@@ -170,6 +170,102 @@ def test_footprint_accounting():
 
 
 # --------------------------------------------------------------------------
+# shared-prefix admission + copy-on-write
+# --------------------------------------------------------------------------
+def test_shared_admission_reserves_only_unshared_suffix():
+    """A prefix-sharing admission must cost only the suffix pages (plus the
+    COW page when the match ends mid-page) — that is the whole point."""
+    pool = _pool(n_pages=8, page_tokens=8, max_batch=3, max_seq=64)
+    a = pool.admit_prefill(seq_id=0, prompt_len=24)      # 3 private pages
+    donor_pages = list(pool.alloc._seq_pages[0])
+    pool.alloc.retain_pages(donor_pages[:2])             # "cache" pins 2
+    free0 = pool.alloc.free_pages
+    # page-aligned match: 16 of 24 tokens shared → only 1 private page
+    b = pool.admit_prefill(seq_id=1, prompt_len=24,
+                           shared_pages=donor_pages[:2], match_len=16)
+    assert pool.alloc.free_pages == free0 - 1
+    assert pool._reserved[1] == 1 and pool._shared_base[1] == 2
+    assert pool.alloc._seq_pages[1][:2] == donor_pages[:2]
+    # mid-page match: 2 shared pages cover 12 tokens → suffix 2 pages + COW
+    c = pool.admit_prefill(seq_id=2, prompt_len=24,
+                           shared_pages=donor_pages[:2], match_len=12)
+    assert pool._reserved[2] == 2 and pool._shared_base[2] == 1
+    for slot in (c, b, a):
+        pool.release(slot)
+    assert pool.alloc.refcount(donor_pages[0]) == 1      # cache ref survives
+    pool.alloc.release_pages(donor_pages[:2])
+    assert pool.alloc.free_pages == 8
+    pool.alloc.audit()
+
+
+def test_shared_page_count_must_cover_match():
+    pool = _pool(n_pages=8, page_tokens=8, max_batch=2)
+    pool.admit_prefill(seq_id=0, prompt_len=16)
+    donor = list(pool.alloc._seq_pages[0])
+    with pytest.raises(ValueError):
+        pool.admit_prefill(seq_id=1, prompt_len=24, shared_pages=donor[:1],
+                           match_len=16)                 # needs 2 pages
+
+
+def test_cow_unshare_copies_rows_and_preserves_donor():
+    """Forking the shared mid-page must land the donor's rows on the private
+    copy (so the sharer's prefix stays bit-identical) and leave the donor's
+    page untouched."""
+    from repro.models import transformer
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    pt = 4
+    pool = kvcache.PagedCachePool(cfg, max_batch=2, max_seq=32, n_pages=8,
+                                  page_tokens=pt)
+    L = 10                                               # 3 pages, last partial
+    a = pool.admit_prefill(seq_id=0, prompt_len=L)
+    S_p = pool.padded_len(L)
+    caches = transformer.init_caches(cfg, 1, S_p)
+    rng = np.random.default_rng(4)
+    caches = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape), x.dtype), caches)
+    pool.write_prefill(a, caches, L)
+    donor = list(pool.alloc._seq_pages[0])
+    b = pool.admit_prefill(seq_id=1, prompt_len=12, shared_pages=donor,
+                           match_len=L)                  # mid-page match
+    forked = pool.cow_unshare(b, L)                      # divergence point
+    assert forked
+    new_pages = pool.alloc._seq_pages[1]
+    assert new_pages[2] != donor[2] and new_pages[:2] == donor[:2]
+    assert pool.alloc.refcount(donor[2]) == 1            # back to donor only
+    for gi in range(len(cfg.groups)):
+        for pi in range(len(cfg.groups[gi][0])):
+            for name in ("k", "v"):
+                leaf = np.asarray(pool.pages[gi][pi][name], np.float32)
+                np.testing.assert_array_equal(leaf[:, new_pages[2]],
+                                              leaf[:, donor[2]])
+    # idempotent: the page is now private, a second call is a no-op
+    assert not pool.cow_unshare(b, L)
+    pool.release(b)
+    pool.release(a)
+    assert pool.alloc.free_pages == 8
+    pool.alloc.audit()
+
+
+def test_reserve_extra_respects_pool_headroom():
+    pool = _pool(n_pages=2, page_tokens=8, max_batch=2, max_seq=32)
+    a = pool.admit_prefill(seq_id=0, prompt_len=16)      # both pages drawn
+    assert not pool.reserve_extra(0, 1)                  # no headroom
+    pool.release(a)
+    b = pool.admit_prefill(seq_id=1, prompt_len=8)
+    assert pool.reserve_extra(1, 1)
+    assert pool._reserved[1] == 2
+    assert not pool.can_admit_prefill(8, 0)              # headroom is spoken for
+    pool.release(b)
+
+
+def test_release_of_free_slot_raises_typed_error():
+    from repro.core import vmm
+    pool = _pool()
+    with pytest.raises(vmm.StaleSequenceError):
+        pool.release(0)
+
+
+# --------------------------------------------------------------------------
 # TieredCachePool — host-DRAM swap tier
 # --------------------------------------------------------------------------
 def _tiered(n_pages=8, page_tokens=4, max_batch=3, max_seq=16,

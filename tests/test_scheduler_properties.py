@@ -69,6 +69,7 @@ def _check_scheduler_invariants(eng, schedule):
     budget = eng.token_budget
     iter_log = eng.stats["iter_log"]
     total_prompt = sum(len(p) for _, p, _ in schedule)
+    shared = eng.stats.get("prefix_shared_tokens", 0)
     # 1. the token budget is never exceeded in any iteration
     for entry in iter_log:
         assert entry["decode_tokens"] + entry["prefill_tokens"] <= budget, \
@@ -93,18 +94,33 @@ def _check_scheduler_invariants(eng, schedule):
             streak[sid] = 0 if sid in chunked_sids else streak.get(sid, 0) + 1
             assert streak[sid] <= total_prompt, \
                 f"request {sid} starved for {streak[sid]} iterations"
-    # 4. token accounting closes (no re-prefill unless explicitly evicted)
+    # 4. token accounting closes: every prompt token is either chunk-prefilled
+    #    or adopted from the prefix cache (no re-prefill unless evicted)
     if eng.stats["evictions_reprefill"] == 0 and \
             eng.stats["preempted_mid_prefill"] == 0:
-        assert eng.stats["prefill_chunk_tokens"] == total_prompt
+        assert eng.stats["prefill_chunk_tokens"] == total_prompt - shared
     else:
-        assert eng.stats["prefill_chunk_tokens"] >= total_prompt
+        assert eng.stats["prefill_chunk_tokens"] >= total_prompt - shared
     # 5. nothing leaks
     pool = eng.pool
-    assert pool.alloc.free_pages == pool.alloc.n_pages
     assert pool.alloc._seq_pages == {}
     assert (pool.seq_ids == -1).all()
     assert not eng.active and not eng.prefilling and not eng.prefilled_wait
+    if eng.prefix is None:
+        assert pool.alloc.free_pages == pool.alloc.n_pages
+    else:
+        # refcounts close at drain: the ONLY remaining references are the
+        # prefix cache's, exactly one per cached page; dropping them
+        # restores the whole pool
+        cached = eng.prefix.cached_pages()
+        assert len(cached) == len(set(cached)) == eng.prefix.held_pages
+        assert all(pool.alloc.refcount(p) == 1 for p in cached)
+        assert pool.alloc.free_pages == pool.alloc.n_pages - len(cached)
+        pool.alloc.audit()
+        eng.prefix.clear()
+        assert eng.prefix.held_pages == 0
+        assert pool.alloc.free_pages == pool.alloc.n_pages
+        pool.alloc.audit()
 
 
 def _run_case(schedule, token_budget, n_slots, n_pages, page_tokens=8,
@@ -141,6 +157,183 @@ def _schedule_from(raw, rng_seed, n_pages, page_tokens, max_seq):
         prompt = rng.integers(0, _CFG.vocab, L).astype(np.int32)
         sched.append((arrival, prompt, max_new))
     return sched
+
+
+# -- shared-prefix property ---------------------------------------------------
+def _run_case_prefix(schedule, token_budget, n_slots, n_pages,
+                     prefix_cache_pages, page_tokens=8, max_seq=64):
+    """Prefix-sharing engine vs the monolithic non-shared reference: same
+    greedy streams, refcounts close at drain, no page freed while referenced
+    (allocator audit), accounting closes minus the adopted tokens."""
+    kw = dict(n_slots=n_slots, max_seq=max_seq, page_tokens=page_tokens,
+              n_pages=n_pages)
+    mono = Engine(_CFG, _params(), paged=True, **kw)
+    ref = {r.seq_id: list(r.tokens_out) for r in _drive(mono, schedule)}
+    pfx = Engine(_CFG, _params(), prefix_cache=True,
+                 prefix_cache_pages=prefix_cache_pages,
+                 token_budget=token_budget, **kw)
+    got = {r.seq_id: list(r.tokens_out) for r in _drive(pfx, schedule)}
+    assert set(got) == set(ref) == set(range(len(schedule))), \
+        "both engines must complete every request"
+    assert got == ref, "prefix-sharing greedy streams must be bit-identical " \
+        "to the non-shared monolithic-prefill engine"
+    _check_scheduler_invariants(pfx, schedule)
+    return pfx
+
+
+def _prefix_schedule(raw, rng_seed, n_pages, page_tokens, max_seq,
+                     n_prefixes=2):
+    """Overlapping-prefix workload: requests draw a shared prefix from a
+    small pool and append a (possibly empty) random suffix — empty suffixes
+    collide into exact-duplicate prompts, exercising full-prefix hits."""
+    rng = np.random.default_rng(rng_seed)
+    prefixes = [rng.integers(0, _CFG.vocab,
+                             int(rng.integers(1, 2 * page_tokens + 3)))
+                for _ in range(n_prefixes)]
+    max_pages_per_seq = max_seq // page_tokens
+    sched = []
+    for arrival, pick, suffix_len, max_new in raw:
+        prefix = prefixes[pick % n_prefixes]
+        suffix = rng.integers(0, _CFG.vocab, suffix_len % 9)
+        prompt = np.concatenate([prefix, suffix]).astype(np.int32)
+        L, mn = len(prompt), max(1, max_new)
+        worst = -(-min(L + mn, max_seq) // page_tokens)
+        if worst > min(n_pages, max_pages_per_seq) or L >= max_seq:
+            prompt = prompt[:page_tokens]
+            mn = 1
+        sched.append((arrival, prompt, mn))
+    return sched
+
+
+def test_prefix_sharing_random_cases_seeded():
+    """Deterministic twin of the hypothesis prefix property."""
+    rng = np.random.default_rng(23)
+    for case in range(4):
+        n_req = int(rng.integers(2, 7))
+        raw = [(int(rng.integers(0, 10)), int(rng.integers(0, 3)),
+                int(rng.integers(0, 9)), int(rng.integers(1, 5)))
+               for _ in range(n_req)]
+        n_slots = int(rng.integers(2, 5))
+        budget = int(rng.integers(n_slots + 1, 22))
+        n_pages = int(rng.integers(10, 20))
+        sched = _prefix_schedule(raw, 200 + case, n_pages, 8, 64)
+        _run_case_prefix(sched, budget, n_slots, n_pages,
+                         prefix_cache_pages=max(2, n_pages // 2))
+
+
+def test_prefix_full_hit_skips_prefill_and_matches_streams():
+    """Back-to-back identical prompts: the second admission must be a full
+    hit (zero prefill chunks for it) with a bit-identical stream."""
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, _CFG.vocab, 13).astype(np.int32)
+    # staggered so the duplicate arrives after the donor's prefill completed
+    sched = [(0, prompt.copy(), 3), (30, prompt.copy(), 3)]
+    pfx = _run_case_prefix(sched, token_budget=8, n_slots=2, n_pages=12,
+                           prefix_cache_pages=6)
+    assert pfx.stats["prefix_full_hits"] == 1
+    assert pfx.stats["prefix_shared_tokens"] == len(prompt)
+    # the duplicate contributed no prefill chunks at all
+    assert pfx.stats["prefill_chunk_tokens"] == len(prompt)
+    assert pfx.stats["cow_forks"] >= 1       # tail page forked on divergence
+
+
+def test_prefix_cache_cap_evicts_and_stays_correct():
+    """A 2-page cache cap under many distinct prompts: hits shrink but
+    streams stay bit-identical and the held-page bound holds."""
+    rng = np.random.default_rng(9)
+    shared = rng.integers(0, _CFG.vocab, 10)
+    sched = [(3 * i, np.concatenate(
+        [shared, rng.integers(0, _CFG.vocab, 4 + i)]).astype(np.int32), 2)
+        for i in range(4)]
+    pfx = _run_case_prefix(sched, token_budget=10, n_slots=2, n_pages=14,
+                           prefix_cache_pages=2)
+    assert pfx.prefix.held_pages <= 2
+
+
+def test_slot_shortage_does_not_flush_prefix_cache():
+    """Regression: a slot-bound admission refusal must NOT evict the prefix
+    cache — eviction frees pages, and pages are not the binding constraint,
+    so flushing would defeat the cache under exactly the load it exists
+    for. Likewise, entries whose pages are still adopted by residents free
+    nothing and must survive page-pressure eviction (require_free)."""
+    rng = np.random.default_rng(41)
+    shared = rng.integers(0, _CFG.vocab, 16)
+
+    def req(i, new):
+        return Request(seq_id=i, prompt=np.concatenate(
+            [shared, rng.integers(0, _CFG.vocab, 2 + i)]).astype(np.int32),
+            max_new=new)
+    eng = Engine(_CFG, _params(), prefix_cache=True, prefix_cache_pages=8,
+                 n_slots=2, max_seq=64, page_tokens=8, n_pages=32,
+                 token_budget=24)
+    eng.submit(req(0, 1))                      # donor: warms the cache
+    eng.run(max_steps=200)
+    held0 = eng.prefix.held_pages
+    assert held0 > 0
+    eng.submit(req(1, 12))                     # occupy both slots with
+    eng.submit(req(2, 12))                     # long decodes
+    eng.step()
+    eng.submit(req(3, 2))                      # arrives into a full house
+    for _ in range(3):
+        eng.step()                             # refusals must not evict
+    assert eng.stats["admission_refusals"] >= 1
+    # the cache may have GROWN (residents completing prefill insert their
+    # suffixes) but a slot-bound refusal must never evict anything
+    assert eng.prefix.evicted_pages == 0, \
+        "slot-bound refusal flushed the prefix cache"
+    assert eng.prefix.held_pages >= held0
+    done = eng.run(max_steps=400)
+    assert len(done) == 3 and eng.idle
+
+
+def test_prefix_sharing_with_tiering_matches_streams():
+    """Prefix sharing composed with tiered preemption: a tiny hot pool
+    forces swap-outs of sequences holding adopted pages — the refcount-aware
+    eviction must never corrupt another resident's (or the cache's) prefix,
+    and streams stay bit-identical to an uncontended non-shared engine."""
+    rng = np.random.default_rng(17)
+    shared = rng.integers(0, _CFG.vocab, 12)
+    sched = [(2 * i, np.concatenate(
+        [shared, rng.integers(0, _CFG.vocab, 3 + i)]).astype(np.int32), 3)
+        for i in range(4)]
+    kw = dict(n_slots=2, max_seq=64, page_tokens=8)
+    mono = Engine(_CFG, _params(), paged=True, n_pages=24, **kw)
+    ref = {r.seq_id: list(r.tokens_out) for r in _drive(mono, sched)}
+    pfx = Engine(_CFG, _params(), prefix_cache=True, prefix_cache_pages=4,
+                 tiered=True, n_pages=8, token_budget=8, preempt_quantum=1,
+                 **kw)
+    got = {r.seq_id: list(r.tokens_out) for r in _drive(pfx, sched)}
+    assert got == ref
+    pool = pfx.pool
+    assert pool.alloc._seq_pages == {} and not pool.cold_seqs()
+    cached = pfx.prefix.cached_pages()
+    assert all(pool.alloc.refcount(p) == 1 for p in cached)
+    assert pool.alloc.free_pages == pool.alloc.n_pages - len(cached)
+    pool.alloc.audit()
+    pfx.prefix.clear()
+    assert pool.alloc.free_pages == pool.alloc.n_pages
+    assert pool.hero.levels[3].in_use() == 0
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_prefix_sharing_property():
+    @settings(max_examples=5, deadline=None, derandomize=True)
+    @given(
+        raw=st.lists(st.tuples(st.integers(0, 10),     # arrival iteration
+                               st.integers(0, 2),      # which shared prefix
+                               st.integers(0, 8),      # suffix length
+                               st.integers(1, 4)),     # max_new
+                     min_size=2, max_size=6),
+        n_slots=st.integers(2, 4),
+        budget_extra=st.integers(1, 12),
+        n_pages=st.integers(10, 18),
+        seed=st.integers(0, 3),
+    )
+    def prop(raw, n_slots, budget_extra, n_pages, seed):
+        sched = _prefix_schedule(raw, seed, n_pages, 8, 64)
+        _run_case_prefix(sched, n_slots + budget_extra, n_slots, n_pages,
+                         prefix_cache_pages=max(2, n_pages // 2))
+    prop()
 
 
 # -- deterministic twin (runs even without hypothesis) -----------------------

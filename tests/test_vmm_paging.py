@@ -57,6 +57,71 @@ def test_cache_pool_token_bytes_mla_vs_gqa():
     assert ds.token_bytes() > 0 and yi.token_bytes() > 0
 
 
+def test_refcounted_sharing_lifecycle():
+    """adopt/retain take references; a page frees only when the LAST
+    reference drops — never while any holder remains."""
+    alloc = vmm.PagedAllocator(n_pages=8, page_tokens=4, token_bytes=16)
+    donor = alloc.alloc_seq(0, 12)                   # 3 pages, refcount 1 each
+    alloc.retain_pages(donor[:2])                    # cache-style handle
+    alloc.adopt_pages(1, donor[:2])                  # sharer sequence
+    alloc.alloc_pages(1, 1)                          # private suffix
+    assert alloc.refcount(donor[0]) == 3
+    assert alloc.seq_private_pages(1) == 1           # shares aren't private
+    alloc.audit()
+    free0 = alloc.free_pages
+    alloc.free_seq(0)                                # donor leaves
+    assert alloc.refcount(donor[0]) == 2             # cache + sharer remain
+    assert alloc.free_pages == free0 + 1             # only donor[2] freed
+    alloc.free_seq(1)
+    assert alloc.refcount(donor[0]) == 1             # cache only
+    alloc.release_pages(donor[:2])
+    assert alloc.free_pages == 8
+    alloc.audit()
+
+
+def test_fork_page_unshares_without_touching_other_holders():
+    alloc = vmm.PagedAllocator(n_pages=4, page_tokens=4, token_bytes=16)
+    pages = alloc.alloc_seq(0, 8)
+    alloc.adopt_pages(1, pages)
+    old, new = alloc.fork_page(1, 1)
+    assert old == pages[1] and new not in pages
+    assert alloc._seq_pages[0] == pages              # donor list untouched
+    assert alloc._seq_pages[1] == [pages[0], new]
+    assert alloc.refcount(old) == 1 and alloc.refcount(new) == 1
+    assert alloc.seq_private_pages(1) == 1           # the fork is private
+    alloc.audit()
+    alloc.free_seq(0)
+    alloc.free_seq(1)
+    assert alloc.free_pages == 4
+
+
+def test_typed_errors_replace_silent_or_assert_paths():
+    alloc = vmm.PagedAllocator(n_pages=2, page_tokens=4, token_bytes=16)
+    alloc.alloc_seq(0, 8)
+    alloc.free_seq(0)
+    with pytest.raises(vmm.DoubleFreeError):
+        alloc.free_seq(0)                            # double free
+    with pytest.raises(vmm.StaleSequenceError):
+        alloc.extend_seq(7, 4, 0)                    # unknown handle
+    with pytest.raises(vmm.StaleSequenceError):
+        alloc.page_table(7, 4)
+    with pytest.raises(vmm.StaleSequenceError):
+        alloc.adopt_pages(1, [0])                    # adopting a free page
+    with pytest.raises(vmm.StaleSequenceError):
+        alloc.fork_page(7, 0)
+    alloc.alloc_seq(1, 8)
+    with pytest.raises(vmm.PageOutOfMemoryError):
+        alloc.alloc_pages(2, 1)                      # pool exhausted
+    with pytest.raises(MemoryError):
+        alloc.alloc_seq(3, 4)                        # ...and it IS a MemoryError
+    with pytest.raises(vmm.StaleSequenceError):
+        alloc.fork_page(1, 5)                        # index outside page list
+    # every refusal above must have leaked nothing
+    alloc.free_seq(1)
+    assert alloc.free_pages == 2
+    alloc.audit()
+
+
 def test_tlb_eviction_and_prefetch():
     mesh = jax.make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P

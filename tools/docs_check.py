@@ -1,0 +1,96 @@
+"""Docs gate for CI: intra-repo markdown links must resolve, and every
+serving/core module must carry a module docstring.
+
+Two checks, both cheap enough for the push-blocking tier:
+
+1. **Link check** — every relative ``[text](path)`` / ``[text](path#anchor)``
+   target in a tracked markdown file must exist on disk. External links
+   (``http(s)://``, ``mailto:``) are skipped; anchors are checked for file
+   existence only. A stale link in ARCHITECTURE.md/README.md fails the
+   build instead of rotting silently.
+
+2. **Docstring check** — every module under ``src/repro/serve`` and
+   ``src/repro/core`` must open with a module docstring (ast-parsed, so a
+   leading comment does not count). These modules document their ownership
+   boundaries and invariants in the docstring; a new module without one is
+   a review failure the tooling should catch, not a human.
+
+Usage:  python tools/docs_check.py   (exit 1 on any failure)
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — markdown inline links; images share the syntax via ![..]
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+DOCSTRING_ROOTS = ("src/repro/serve", "src/repro/core")
+
+
+def _markdown_files():
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs
+                   if d not in (".git", "__pycache__", "results", ".github")]
+        for f in files:
+            if f.endswith(".md"):
+                yield os.path.join(root, f)
+
+
+def check_links() -> list:
+    errors = []
+    for md in _markdown_files():
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks routinely contain [x](y)-shaped non-links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            resolved = os.path.normpath(os.path.join(os.path.dirname(md),
+                                                     path))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(md, REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_docstrings() -> list:
+    errors = []
+    for rel in DOCSTRING_ROOTS:
+        root = os.path.join(REPO, rel)
+        for dirpath, dirs, files in os.walk(root):
+            dirs[:] = [d for d in dirs if d != "__pycache__"]
+            for f in sorted(files):
+                if not f.endswith(".py") or f == "__init__.py":
+                    continue
+                path = os.path.join(dirpath, f)
+                with open(path, encoding="utf-8") as fh:
+                    tree = ast.parse(fh.read(), filename=path)
+                if ast.get_docstring(tree) is None:
+                    errors.append(f"{os.path.relpath(path, REPO)}: missing "
+                                  "module docstring (ownership boundaries + "
+                                  "invariants belong there)")
+    return errors
+
+
+def main() -> None:
+    errors = check_links() + check_docstrings()
+    if errors:
+        for e in errors:
+            print(f"DOCS-CHECK-ERROR: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    n_md = len(list(_markdown_files()))
+    print(f"docs-check OK: {n_md} markdown files link-clean, "
+          f"serve/core modules all carry docstrings")
+
+
+if __name__ == "__main__":
+    main()
