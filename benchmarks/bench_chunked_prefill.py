@@ -112,7 +112,7 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", token_budget: int = 12,
                           ("chunked", dict(chunked_prefill=True,
                                            token_budget=token_budget))):
         # warmup on a throwaway engine: the jit'd step regions are shared
-        # across engines (engine._REGION_CACHE), so the measured engine is
+        # across engines (executor._REGION_CACHE), so the measured engine is
         # steady-state warm but its counters cover only the measured mix
         warm = Engine(cfg, params, **kw, **mode_kw)
         _drive(warm, _mix(cfg, np.random.default_rng(0), tag=1))

@@ -71,7 +71,7 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
     need_pages = n_req * 2
     kw = dict(n_slots=n_slots, max_seq=max_seq, page_tokens=page_tokens)
 
-    # warmup: engines share the jit'd step regions (engine._REGION_CACHE), so
+    # warmup: engines share the jit'd step regions (executor._REGION_CACHE), so
     # a throwaway pass pays all tracing once — otherwise the first measured
     # engine eats the compiles and every cross-engine wall ratio is skewed
     _run(cfg, params, mix, n_pages=need_pages, tiered=False, **kw)

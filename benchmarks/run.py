@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
   §2.1    bench_prefix_cache  shared-prefix KV cache (radix + COW pages) —
                               prefill-token reduction + TTFT vs chunked →
                               BENCH_serve.json ``prefix_cache`` section
+  §2      bench_tensor_parallel  tp ∈ {1,2,4} paged serving over forced host
+                              devices — streams asserted bit-identical →
+                              BENCH_serve.json ``tensor_parallel`` section
   (validate_bench checks the BENCH_serve.json schema after the benches)
 """
 from __future__ import annotations
@@ -28,13 +31,14 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_autodma, bench_chunked_prefill,
                             bench_complexity, bench_interconnect, bench_isa,
-                            bench_parallel, bench_prefix_cache, bench_tiering,
+                            bench_parallel, bench_prefix_cache,
+                            bench_tensor_parallel, bench_tiering,
                             bench_tiling, roofline_report, validate_bench)
     failures = []
     for mod in (bench_tiling, bench_parallel, bench_complexity,
                 bench_autodma, bench_interconnect, bench_isa,
                 roofline_report, bench_tiering, bench_chunked_prefill,
-                bench_prefix_cache):
+                bench_prefix_cache, bench_tensor_parallel):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()

@@ -41,6 +41,12 @@ SCHEMAS = {
         "prefix_len": _NUM, "prefill_token_reduction": _NUM,
         "ttft_speedup": _NUM, "baseline": dict, "prefix": dict,
     },
+    "tensor_parallel": {
+        "arch": str, "n_kv": _NUM, "page_tokens": _NUM, "n_pages": _NUM,
+        "n_slots": _NUM, "token_budget": _NUM, "requests": _NUM,
+        "identical_streams": _NUM,           # 1 = tp=2/4 streams == tp=1
+        "tp1": dict, "tp2": dict, "tp4": dict,
+    },
 }
 # keys every per-engine sub-dict must carry with numeric values
 ENGINE_NUM_KEYS = {
@@ -51,6 +57,8 @@ ENGINE_NUM_KEYS = {
                         "prefills", "decode_tokens"),
     "prefix_cache": ("ttft_mean_s", "ttft_p99_s", "prefills",
                      "prefill_chunk_tokens", "decode_tokens"),
+    "tensor_parallel": ("devices", "wall_s", "tok_per_s", "decode_steps",
+                        "decode_tokens"),
 }
 
 
@@ -75,7 +83,7 @@ def _check(errors, path, obj, schema):
 
 
 def validate(path: str, require=("tiering", "chunked_prefill",
-                                 "prefix_cache")):
+                                 "prefix_cache", "tensor_parallel")):
     """Returns a list of error strings (empty = valid)."""
     errors = []
     try:
@@ -109,7 +117,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("path", nargs="?", default="BENCH_serve.json")
     ap.add_argument("--require", nargs="+",
-                    default=["tiering", "chunked_prefill", "prefix_cache"])
+                    default=["tiering", "chunked_prefill", "prefix_cache",
+                             "tensor_parallel"])
     args = ap.parse_args()
     errors = validate(args.path, require=tuple(args.require))
     if errors:

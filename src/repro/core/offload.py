@@ -108,7 +108,7 @@ def target(mesh=None, **kw) -> Callable:
 
 
 # --------------------------------------------------------------------------
-# Mailbox — host↔device request FIFO (used by serve/engine.py)
+# Mailbox — host↔device request FIFO (used by serve/scheduler.py)
 # --------------------------------------------------------------------------
 class Mailbox:
     """Thread-safe bounded FIFO with blocking get — the paper's HW mailbox."""

@@ -19,6 +19,14 @@ and are masked by the per-sequence length, so they never contribute.
 
 Validated in interpret mode against ref.decode_attention over ragged lengths,
 GQA group counts, and page sizes (tests/test_kernels.py).
+
+Tensor parallelism: the kernel is **head-slice clean** — its grid iterates
+(B·K, pages) and no computation crosses kv heads, so the serving executor
+(serve/executor.py) calls it under ``shard_map`` with ``k_pages``/``v_pages``
+holding only the shard's kv-head slice and ``q`` the matching query-head
+block (head h = k·G + g is kv-head-major). The page table and lengths stay
+replicated; per-head outputs are exact regardless of how heads are split, so
+tp=N results concatenate bit-identically to tp=1.
 """
 from __future__ import annotations
 

@@ -23,6 +23,12 @@ natural shape and the grid stays (K, pages), not (B·K, pages).
 
 Validated in interpret mode against the dense oracle over chunk sizes 1/3/
 budget and page-boundary-crossing starts (tests/test_kernels.py).
+
+Tensor parallelism: like the decode kernel, the grid's kv-head dimension
+(K) carries no cross-head computation, so serve/executor.py shard_maps the
+chunk step with the page pools sliced along kv heads and the chunk queries
+sliced to the matching head block — per-shard outputs concatenate
+bit-identically to the unsharded call (page table and ``start`` replicated).
 """
 from __future__ import annotations
 

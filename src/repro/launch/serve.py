@@ -28,6 +28,16 @@ may pin (LRU-evicted on demand).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --prefix-cache --shared-prefix-len 32 --requests 12
+
+``--tp N`` shards the paged serving path over N devices (tensor parallelism:
+KV pages and the paged-attention head walk shard along the kv-head axis;
+page tables and the allocator stay host-side and replicated — see
+serve/executor.py). Greedy streams are bit-identical to --tp 1. On a CPU
+container, force host devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --chunked-prefill --tp 2 --requests 8
 """
 from __future__ import annotations
 
@@ -39,7 +49,8 @@ import numpy as np
 
 from repro import configs
 from repro.models import blocks, transformer
-from repro.serve.engine import Engine, Request
+from repro.serve.cache import CacheConfig
+from repro.serve.engine import Engine, EngineConfig, Request
 
 
 def main():
@@ -81,21 +92,28 @@ def main():
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="prepend a shared system-prompt prefix of this many "
                          "tokens to every request (demonstrates prefix reuse)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard KV pages + paged "
+                         "attention over this many devices (kv-head axis; "
+                         "implies --paged; streams bit-identical to --tp 1)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
     params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
     params, _ = blocks.split_params(params_t)
-    eng = Engine(cfg, params, n_slots=args.slots, max_seq=args.max_seq,
-                 paged=args.paged, page_tokens=args.page_tokens,
-                 n_pages=args.pages, tiered=args.tiered,
-                 host_budget_bytes=(args.host_budget_mb * 1024 * 1024
-                                    if args.host_budget_mb else None),
-                 preempt_quantum=args.preempt_quantum,
-                 chunked_prefill=args.chunked_prefill,
-                 token_budget=args.token_budget,
-                 prefix_cache=args.prefix_cache,
-                 prefix_cache_pages=args.prefix_cache_pages)
+    # the driver builds the declarative config directly (the Engine flag
+    # kwargs still work but are the deprecated path)
+    eng = Engine(cfg, params, config=EngineConfig(
+        n_slots=args.slots, max_seq=args.max_seq,
+        chunked=args.chunked_prefill, token_budget=args.token_budget,
+        preempt_quantum=args.preempt_quantum, tp=args.tp,
+        cache=CacheConfig(
+            paged=args.paged or args.tp > 1, page_tokens=args.page_tokens,
+            n_pages=args.pages, tiered=args.tiered,
+            host_budget_bytes=(args.host_budget_mb * 1024 * 1024
+                               if args.host_budget_mb else None),
+            prefix=args.prefix_cache,
+            prefix_pages=args.prefix_cache_pages)))
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix_len)
@@ -111,16 +129,19 @@ def main():
     total_new = sum(len(r.tokens_out) for r in done)
     occ = np.mean(eng.stats["batch_occupancy"]) if eng.stats["batch_occupancy"] else 0
     chunked = args.chunked_prefill or args.prefix_cache
-    mode = "tiered" if args.tiered else ("paged" if args.paged else "dense")
+    paged = args.paged or args.tp > 1
+    mode = "tiered" if args.tiered else ("paged" if paged else "dense")
     if chunked:
         mode = "chunked+" + mode if args.tiered else "chunked"
     if args.prefix_cache:
         mode = "prefix+" + mode
+    if args.tp > 1:
+        mode = f"tp{args.tp}+" + mode
     print(f"[serve:{mode}] {len(done)} requests, {total_new} tokens in "
           f"{wall:.2f}s ({total_new / wall:.1f} tok/s), "
           f"decode steps {eng.stats['decode_steps']}, "
           f"mean batch occupancy {occ:.2f}")
-    if args.paged or args.tiered or chunked:
+    if paged or args.tiered or chunked:
         a = eng.pool.alloc
         print(f"[serve:{mode}] pool {a.n_pages} pages × {a.page_tokens} tok "
               f"({eng.pool.footprint_bytes()} B), free {a.free_pages}, "

@@ -147,3 +147,27 @@ def tree_shardings(axes_tree, shape_tree=None, mesh: Optional[Mesh] = None):
 def stack_axes(axes: Tuple[Optional[str], ...], n_lead: int = 1) -> Tuple[Optional[str], ...]:
     """Prepend 'layers' axes for scan-stacked params."""
     return ("layers",) * n_lead + tuple(axes)
+
+
+# -- serving tensor parallelism (serve/executor.py) --------------------------
+TP_AXIS = "tp"
+
+
+def tp_mesh(tp: int, axis: str = TP_AXIS) -> Mesh:
+    """A 1-D tensor-parallel mesh over the first ``tp`` local devices.
+
+    The serving executor shards KV pages (and the paged-attention head walk)
+    over this axis while keeping page tables, the allocator, and all weights
+    replicated — see serve/executor.py. On a CPU container, force multiple
+    host devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    *before* jax initialises.
+    """
+    devs = jax.devices()
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if len(devs) < tp:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices but only {len(devs)} are visible "
+            "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{tp} before importing jax)")
+    return Mesh(np.asarray(devs[:tp]), (axis,))

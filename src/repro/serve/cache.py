@@ -1,0 +1,173 @@
+"""CacheManager: the one cache surface the scheduler programs against.
+
+HEROv2's host-side lesson (via Cheshire) is that accelerators scale when the
+platform defines one clean plug-in boundary instead of a per-device snowflake
+API. The serving analogue: the scheduler (serve/scheduler.py) must not know
+whether KV pages live in a flat HBM pool, above a host-DRAM swap tier, or
+behind a shared-prefix radix index — it programs the :class:`CacheManager`
+protocol, and the stack behind it is *composed*, layer by layer:
+
+    PrefixCachingPool            (serve/cache.py   — radix reuse + COW refs)
+      └─ TieredCachePool         (serve/tiering.py — host-DRAM swap tier)
+           └─ PagedCachePool     (serve/kvcache.py — vmm pages + reservations)
+
+Each layer is a :class:`repro.serve.kvcache.CacheLayer`: it implements only
+what it changes and delegates the rest downward, so any composition of the
+three presents the same surface (conformance-tested across all stacks in
+tests/test_cache_manager.py). :func:`build_cache_manager` assembles the stack
+from a declarative :class:`CacheConfig` — this replaces the feature-flag
+combinatorics that used to live in ``Engine.__init__``.
+
+Ownership boundaries & invariants:
+
+  * This module owns **stack composition only** — which layers exist and in
+    what order. Page accounting stays in kvcache.py, tier movement in
+    tiering.py, prefix lookup in prefix_cache.py, policy in scheduler.py.
+  * Every stack exposes ``prefix`` (the PrefixCache or None) so the
+    scheduler's reuse policy is one attribute check, never an isinstance.
+  * Layer order is fixed (prefix over tiered over paged): the prefix layer
+    must see the *tier-aware* pool so adopted pages survive swap-out, and
+    the tiered layer must see raw page accounting to budget DMA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.models import transformer
+from repro.serve.kvcache import CacheLayer, PagedCachePool
+from repro.serve.prefix_cache import PrefixCache, PrefixMatch
+from repro.serve.tiering import TieredCachePool
+
+
+@runtime_checkable
+class CacheManager(Protocol):
+    """The paged serving-cache surface the scheduler programs against.
+
+    Implementations: :class:`repro.serve.kvcache.PagedCachePool` (flat),
+    :class:`repro.serve.tiering.TieredCachePool` (adds swap — the swap ops
+    themselves are tier-specific and guarded by the scheduler's ``tiered``
+    policy flag, not part of this protocol), :class:`PrefixCachingPool`
+    (adds ``match``/``insert``). All methods must uphold the reservation
+    invariants documented in serve/kvcache.py — above all
+    **never-fails-mid-decode**: ``ensure``/``cow_unshare`` on a sequence
+    holding a decode reservation cannot raise.
+    """
+
+    # identity / geometry
+    prefix: Optional[PrefixCache]
+
+    def pages_for(self, n_tokens: int) -> int: ...
+    def padded_len(self, n_tokens: int) -> int: ...
+
+    # admission + reservations
+    def admissible_ever(self, prompt_len: int, max_new: int) -> bool: ...
+    def can_admit(self, prompt_len: int, max_new: int) -> bool: ...
+    def admit(self, seq_id: int, prompt_len: int, max_new: int) -> int: ...
+    def can_admit_prefill(self, prompt_len: int, max_new: int,
+                          n_shared_pages: int = 0,
+                          match_len: int = 0) -> bool: ...
+    def admit_prefill(self, seq_id: int, prompt_len: int,
+                      shared_pages: Optional[List[int]] = None,
+                      match_len: int = 0) -> int: ...
+    def reserve_extra(self, seq_id: int, n: int = 1) -> bool: ...
+    def can_reserve_decode(self, seq_id: int, prompt_len: int,
+                           max_new: int) -> bool: ...
+    def reserve_decode(self, seq_id: int, prompt_len: int,
+                       max_new: int) -> bool: ...
+    def has_decode_reservation(self, seq_id: int, prompt_len: int,
+                               max_new: int) -> bool: ...
+
+    # residency
+    def ensure(self, slot: int, n_tokens: int) -> None: ...
+    def cow_unshare(self, slot: int, pos: int) -> bool: ...
+    def release(self, slot: int) -> None: ...
+
+    # device views + accounting
+    def write_prefill(self, slot, caches, length: int) -> None: ...
+    def device_page_tables(self) -> np.ndarray: ...
+    def page_table_row(self, slot: int) -> np.ndarray: ...
+    def token_bytes(self) -> int: ...
+    def footprint_bytes(self) -> int: ...
+    def used_bytes(self) -> int: ...
+
+
+class PrefixCachingPool(CacheLayer):
+    """Shared-prefix reuse layer: a radix prompt index over any paged stack.
+
+    Owns the :class:`PrefixCache` (lookup structure + LRU eviction) and
+    presents it through the pool surface — ``match`` before admission,
+    ``insert`` at prefill completion, ``evict_cached`` under page pressure.
+    The underlying pool (flat or tiered) is untouched: the cache holds page
+    *references* (vmm retain), never pages, so every no-leak property of the
+    wrapped stack survives composition.
+    """
+
+    def __init__(self, inner, max_pages: int):
+        super().__init__(inner)
+        self.prefix = PrefixCache(inner.alloc, inner.page_tokens,
+                                  max_pages=max_pages)
+
+    def match(self, prompt: np.ndarray) -> PrefixMatch:
+        """Longest cached prefix of ``prompt`` (pages remain cache-owned
+        until the admitting sequence adopts them)."""
+        return self.prefix.match(prompt)
+
+    def insert(self, seq_id: int, prompt: np.ndarray,
+               first_token: int) -> int:
+        """Index a completed prefill; returns pages newly cached."""
+        return self.prefix.insert(self, seq_id, prompt, first_token)
+
+    def evict_cached(self, n_pages: int = 1,
+                     require_free: bool = False) -> int:
+        """Release up to ``n_pages`` cache references (LRU leaves first)."""
+        return self.prefix.evict_lru(n_pages, require_free=require_free)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Declarative description of one cache stack (bottom to top).
+
+    ``paged`` selects the page-pool bottom layer (implied by any layer
+    above); ``tiered`` adds the host-DRAM swap tier; ``prefix`` adds the
+    radix reuse layer. ``n_pages=None`` sizes the pool at parity with the
+    dense engine's HBM footprint for the same slots × max_seq."""
+    paged: bool = False
+    page_tokens: int = 16
+    n_pages: Optional[int] = None
+    tiered: bool = False
+    host_budget_bytes: Optional[int] = None
+    prefix: bool = False
+    prefix_pages: Optional[int] = None
+
+    def resolved_pages(self, n_slots: int, max_seq: int) -> int:
+        if self.n_pages is not None:
+            return self.n_pages
+        # parity budget with the dense pool's HBM footprint (floor: never
+        # exceed n_slots × max_seq tokens of physical pages)
+        return max(1, (n_slots * max_seq) // self.page_tokens)
+
+    @property
+    def any_paged(self) -> bool:
+        return self.paged or self.tiered or self.prefix
+
+
+def build_cache_manager(cfg: transformer.ModelConfig, cache: CacheConfig,
+                        n_slots: int, max_seq: int) -> CacheManager:
+    """Compose the cache stack described by ``cache`` (bottom-up)."""
+    n_pages = cache.resolved_pages(n_slots, max_seq)
+    pool: CacheManager = PagedCachePool(
+        cfg, max_batch=n_slots, max_seq=max_seq, n_pages=n_pages,
+        page_tokens=cache.page_tokens)
+    if cache.tiered:
+        pool = TieredCachePool(inner=pool,
+                               host_budget_bytes=cache.host_budget_bytes)
+    if cache.prefix:
+        # the cap bounds how many hot pages the cache may pin; admission
+        # evicts LRU entries when it needs them back
+        max_pages = (cache.prefix_pages if cache.prefix_pages is not None
+                     else max(1, n_pages // 2))
+        pool = PrefixCachingPool(pool, max_pages=max_pages)
+    return pool

@@ -1,837 +1,223 @@
-"""Serving engine: mailbox-batched requests → prefill → batched decode.
+"""Serving engine façade: scheduler ∘ cache-manager ∘ executor wiring.
 
-HEROv2 §2.3's offload machinery shapes this directly: requests land in a
-**Mailbox** (the hardware mailbox), the engine's step loop (the *offload
-manager*) drains it, batches compatible requests, and dispatches compiled
-TargetRegions (prefill_step / decode_step). Offloading is coarse-grained by
-design — one decode step over all active slots per dispatch, never per-token
-per-request host round-trips.
+HEROv2 scales by composing clean layers behind one offload interface; the
+engine mirrors that — it is now a *thin façade* over three owned layers:
 
-Continuous batching: fixed decode slots; finished sequences free their slot
-which the next mailbox drain refills (prefill into that slot's cache rows).
-Stats mirror hero_perf counters: queue latency, batch occupancy, steps.
+  * **Scheduler** (serve/scheduler.py) — pure policy: mailbox drain,
+    admission, token-budget packing, preemption/promotion. Owns all request
+    state and stats.
+  * **CacheManager** (serve/cache.py) — the composed KV stack:
+    PagedCachePool, optionally under a host-DRAM swap tier
+    (serve/tiering.py) and a shared-prefix radix layer. Built declaratively
+    from :class:`CacheConfig` — no feature-flag combinatorics here.
+  * **Executor** (serve/executor.py) — the compiled model steps, device-side
+    token sampling, and the tensor-parallel (``tp``) device mesh.
 
-Chunked prefill (``chunked_prefill=True``, implies paged) fuses prefill and
-decode into one **token-budgeted** step loop — the serving-layer analogue of
-HEROv2's tiled offload: instead of one monolithic prefill whose latency
-stalls every decoding stream, each iteration packs ``token_budget`` tokens
-with decode tokens first (one per stream) and fills the remainder with
-prompt *chunks* from mid-prefill residents, fair-shared in admission order.
-Admission is partial-prefill-aware: only the prompt's pages are reserved up
-front (``admit_prefill``); the decode worst case is topped up at *promotion*
-(``reserve_decode``), after the prompt completes and its first token has
-already streamed. A preempted half-prefilled request resumes at its chunk
-offset — never re-prefilled (tiered swap keeps the written KV prefix).
+New configuration path::
 
-Shared-prefix KV caching (``prefix_cache=True``, implies chunked) adds the
-radix prompt index (serve/prefix_cache.py) in front of admission: a new
-request adopts the ref-counted pages of its longest cached prefix and starts
-prefilling at the match offset; an exact full-prompt hit skips prefill
-entirely. Divergent writes COW-fork shared pages first (the fork page is
-pre-reserved, so the never-fails-mid-decode guarantee survives sharing).
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.cache import CacheConfig
+    eng = Engine(cfg, params, config=EngineConfig(
+        n_slots=4, max_seq=256, chunked=True, token_budget=32, tp=2,
+        cache=CacheConfig(paged=True, tiered=True, prefix=True)))
 
-Ownership boundaries & invariants:
+The historical boolean flags (``paged=/tiered=/chunked_prefill=/
+prefix_cache=``) still work and construct the equivalent layered stack, but
+emit a ``DeprecationWarning`` naming the config path above.
 
-  * This module owns **scheduling state only** — the mailbox, the four
-    request sets (``prefilling`` → ``prefilled_wait`` → ``active``, plus the
-    tiered pool's cold set), victim selection, and the token-budget packing.
-    Page accounting belongs to serve/kvcache.py, page identity/refcounts to
-    core/vmm.py, tier movement to serve/tiering.py, prefix lookup to
-    serve/prefix_cache.py.
-  * **Bit-identical streams**: scheduling decisions (chunking, preemption,
-    promotion order, prefix reuse) may change *when* tokens are computed,
-    never *which* tokens a greedy request streams
-    (tests/test_scheduler_properties.py).
-  * A request is in exactly one of: mailbox, prefilling, prefilled_wait,
-    active, cold (tiered), or finished; every admitted request eventually
-    finishes (the deadlock breakers guarantee rotation terminates).
-  * Engine stats never lie about totals: decode_tokens + prefill_chunk
-    tokens per iteration never exceed the budget, and accounting closes at
-    drain (no page, reservation, or slot leaks).
+Ownership: this module owns nothing but the wiring — every invariant lives
+in the layer that enforces it (see each module's docstring).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.models import transformer
+from repro.serve.cache import CacheConfig, build_cache_manager
+from repro.serve.executor import Executor
+from repro.serve.kvcache import CachePool
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401 (Request
+#                                is re-exported — the public submit() type)
 
-from repro.core.offload import Mailbox, TargetRegion
-from repro.models import blocks, transformer
-from repro.serve import paged_step
-from repro.serve.kvcache import CachePool, PagedCachePool
-from repro.serve.prefix_cache import PrefixCache, PrefixMatch
-from repro.serve.tiering import TieredCachePool
-from repro.train import step as steps
+_DEPRECATION = (
+    "Engine(paged=/tiered=/chunked_prefill=/prefix_cache=) feature flags are "
+    "deprecated; pass config=EngineConfig(cache=CacheConfig(...)) instead "
+    "(see repro.serve.engine.EngineConfig / repro.serve.cache.CacheConfig)")
 
-
-@dataclasses.dataclass
-class Request:
-    seq_id: int
-    prompt: np.ndarray          # [L] int32
-    max_new: int = 16
-    t_submit: float = 0.0
-    t_first: float = 0.0        # wall time of the first emitted token (TTFT)
-    prefill_pos: int = 0        # prompt tokens whose KV has been written
-    tokens_out: Optional[List[int]] = None
-    t_tokens: Optional[List[float]] = None   # wall time of each emitted token
-    done: bool = False
+_LEGACY_DEFAULTS = dict(
+    n_slots=4, max_seq=256, greedy=True, paged=False, page_tokens=16,
+    n_pages=None, tiered=False, host_budget_bytes=None, preempt_quantum=1,
+    chunked_prefill=False, token_budget=None, prefix_cache=False,
+    prefix_cache_pages=None)
 
 
-# Step functions are pure in (cfg, page_tokens); sharing their TargetRegions
-# across Engine instances shares the jit cache — property tests and benches
-# construct many engines over the same config, and retracing the model per
-# engine dominated their wall time.
-_REGION_CACHE: Dict[Tuple, TargetRegion] = {}
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Declarative engine configuration (the post-flag config path).
 
+    ``chunked`` selects the unified token-budgeted step loop (implies a
+    paged cache); ``tp`` shards the executor's paged attention over that
+    many devices (kv-head axis — see serve/executor.py). ``cache`` composes
+    the KV stack bottom-up."""
+    n_slots: int = 4
+    max_seq: int = 256
+    greedy: bool = True
+    chunked: bool = False
+    token_budget: Optional[int] = None
+    preempt_quantum: int = 1
+    tp: int = 1
+    cache: CacheConfig = CacheConfig()
 
-def _cached_region(name: str, key: Tuple, make: Callable) -> TargetRegion:
-    try:
-        full_key = (name,) + key
-        hash(full_key)
-    except TypeError:
-        return TargetRegion(make(), name=name)
-    reg = _REGION_CACHE.get(full_key)
-    if reg is None:
-        reg = TargetRegion(make(), name=name)
-        _REGION_CACHE[full_key] = reg
-    return reg
+    @property
+    def paged(self) -> bool:
+        return self.cache.any_paged or self.chunked or self.tp > 1
+
+    def normalized(self) -> "EngineConfig":
+        """Resolve implied layers: chunked/tp imply paged; a prefix layer
+        implies chunked (insertion happens at chunk completion)."""
+        cache = self.cache
+        chunked = self.chunked or cache.prefix
+        if (chunked or self.tp > 1) and not cache.any_paged:
+            cache = dataclasses.replace(cache, paged=True)
+        return dataclasses.replace(self, chunked=chunked, cache=cache)
 
 
 class Engine:
-    """Continuous-batching engine with three cache regimes and two step loops.
+    """Continuous-batching engine: a façade wiring the three serving layers.
 
-    * dense (default): fixed decode slots over [n_slots, K, max_seq, hd]
-      caches — admission is slot-limited.
-    * paged (``paged=True``): a PagedCachePool over vmm.PagedAllocator —
-      sequences own page lists, the decode TargetRegion dispatches the
-      page-table flash-decode kernel, and the mailbox drain admits by *page
-      availability* (reservation-based, refusing instead of crashing when
-      the pool is exhausted).
-    * tiered (``tiered=True``, implies paged): a TieredCachePool — the paged
-      hot tier over a host-DRAM swap tier (hero_memcpy DMA). Admission is
-      two-level: when the mailbox has a waiting request and the hot tier is
-      exhausted, the LRU resident (by last-decoded step, then oldest
-      admission) is preempted — its pages swap out to host, its request is
-      requeued, and it resumes later via an async prefetch started right
-      after a decode step, whose host→dev DMA overlaps the next admission
-      pass. Only total-capacity exhaustion refuses.
-    * chunked (``chunked_prefill=True``, implies paged; composes with
-      tiered): the unified token-budgeted step loop — see module docstring.
+    All scheduling state (``active``/``prefilling``/``prefilled_wait``,
+    ``stats``…) lives on the scheduler; the cache stack is reachable as
+    ``engine.pool`` and the compiled-step layer as ``engine.executor``. The
+    legacy constructor flags map onto :class:`EngineConfig` one-to-one and
+    warn (see module docstring).
     """
 
-    def __init__(self, cfg: transformer.ModelConfig, params, n_slots: int = 4,
-                 max_seq: int = 256, greedy: bool = True, paged: bool = False,
-                 page_tokens: int = 16, n_pages: Optional[int] = None,
-                 tiered: bool = False,
+    def __init__(self, cfg: transformer.ModelConfig, params,
+                 n_slots: int = 4, max_seq: int = 256, greedy: bool = True,
+                 paged: bool = False, page_tokens: int = 16,
+                 n_pages: Optional[int] = None, tiered: bool = False,
                  host_budget_bytes: Optional[int] = None,
-                 preempt_quantum: int = 1,
-                 chunked_prefill: bool = False,
+                 preempt_quantum: int = 1, chunked_prefill: bool = False,
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
-                 prefix_cache_pages: Optional[int] = None):
+                 prefix_cache_pages: Optional[int] = None,
+                 config: Optional[EngineConfig] = None):
+        if config is not None:
+            # config is the whole truth: a leftover legacy kwarg next to it
+            # would be silently ignored — refuse instead of misconfiguring
+            stray = {k: v for k, v in dict(
+                n_slots=n_slots, max_seq=max_seq, greedy=greedy, paged=paged,
+                page_tokens=page_tokens, n_pages=n_pages, tiered=tiered,
+                host_budget_bytes=host_budget_bytes,
+                preempt_quantum=preempt_quantum,
+                chunked_prefill=chunked_prefill, token_budget=token_budget,
+                prefix_cache=prefix_cache,
+                prefix_cache_pages=prefix_cache_pages).items()
+                if v != _LEGACY_DEFAULTS[k]}
+            if stray:
+                raise ValueError(
+                    f"Engine: config= was given together with legacy "
+                    f"kwargs {sorted(stray)} — fold them into EngineConfig/"
+                    "CacheConfig instead (they would be ignored)")
+        else:
+            if paged or tiered or chunked_prefill or prefix_cache:
+                warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
+            config = EngineConfig(
+                n_slots=n_slots, max_seq=max_seq, greedy=greedy,
+                chunked=chunked_prefill, token_budget=token_budget,
+                preempt_quantum=preempt_quantum,
+                cache=CacheConfig(
+                    paged=paged, page_tokens=page_tokens, n_pages=n_pages,
+                    tiered=tiered, host_budget_bytes=host_budget_bytes,
+                    prefix=prefix_cache, prefix_pages=prefix_cache_pages))
+        config = config.normalized()
         self.cfg = cfg
         self.params = params
-        self.chunked = chunked_prefill or prefix_cache
-        self.paged = paged or tiered or self.chunked
-        self.tiered = tiered
-        self.mailbox = Mailbox(depth=256)
-        self.active: Dict[int, Request] = {}       # slot -> decoding request
-        self.prefilling: Dict[int, Request] = {}   # slot -> mid-prompt request
-        self.prefilled_wait: Dict[int, Request] = {}  # awaiting promotion
-        self.greedy = greedy
-        self.stats = {"decode_steps": 0, "prefills": 0, "batch_occupancy": [],
-                      "admission_refusals": 0, "preemptions": 0,
-                      "preempted_mid_prefill": 0, "evictions_reprefill": 0,
-                      "swap_out_count": 0, "swap_in_count": 0,
-                      "swap_out_bytes": 0, "swap_in_bytes": 0,
-                      "prefill_chunks": 0, "prefill_chunk_tokens": 0,
-                      "decode_tokens": 0, "cow_forks": 0,
-                      "prefix_hits": 0, "prefix_full_hits": 0,
-                      "prefix_shared_tokens": 0,
-                      "queue_lat_s": [], "ttft_s": [], "iter_log": []}
-        self.prefix: Optional[PrefixCache] = None
-        if self.paged:
-            if n_pages is None:
-                # parity budget with the dense pool's HBM footprint (floor:
-                # never exceed n_slots × max_seq tokens of physical pages)
-                n_pages = max(1, (n_slots * max_seq) // page_tokens)
-            if tiered:
-                self.pool = TieredCachePool(
-                    cfg, max_batch=n_slots, max_seq=max_seq, n_pages=n_pages,
-                    page_tokens=page_tokens,
-                    host_budget_bytes=host_budget_bytes)
-            else:
-                self.pool = PagedCachePool(cfg, max_batch=n_slots,
-                                           max_seq=max_seq, n_pages=n_pages,
-                                           page_tokens=page_tokens)
-            self._admit_stalled = False
-            self._pending_swapin = None            # (Request, PendingSwapIn)
-            self._last_decoded = np.zeros(n_slots, np.int64)
-            self._admitted_at = np.zeros(n_slots, np.int64)
-            self._resident_since = np.zeros(n_slots, np.int64)
-            self._chunks_done = np.zeros(n_slots, np.int64)
-            self._admit_clock = 0
-            self.preempt_quantum = max(1, preempt_quantum)
-            self._decode = _cached_region(
-                "paged_decode", (cfg, page_tokens),
-                lambda: paged_step.make_paged_decode_step(cfg, page_tokens))
-            self._prefill_dense = _cached_region(
-                "paged_prefill", (cfg,),
-                lambda: steps.make_prefill_step(cfg))
-            if self.chunked:
-                if token_budget is None:
-                    token_budget = n_slots + 4 * page_tokens
-                if token_budget <= n_slots:
-                    raise ValueError(
-                        f"token_budget ({token_budget}) must exceed n_slots "
-                        f"({n_slots}): decode tokens are packed first, so a "
-                        "smaller budget could never schedule a prefill chunk")
-                self.token_budget = int(token_budget)
-                self._prefill_chunk = _cached_region(
-                    "paged_prefill_chunk", (cfg, page_tokens),
-                    lambda: paged_step.make_paged_prefill_chunk_step(
-                        cfg, page_tokens))
-                if prefix_cache:
-                    # the cap bounds how many hot pages the cache may pin;
-                    # admission evicts LRU entries when it needs them back
-                    self.prefix = PrefixCache(
-                        self.pool.alloc, page_tokens,
-                        max_pages=(prefix_cache_pages
-                                   if prefix_cache_pages is not None
-                                   else max(1, n_pages // 2)))
+        self.config = config
+        self.executor = Executor(
+            cfg, params, paged=config.paged, chunked=config.chunked,
+            page_tokens=config.cache.page_tokens, tp=config.tp)
+        if config.paged:
+            pool = build_cache_manager(cfg, config.cache, config.n_slots,
+                                       config.max_seq)
+            self.executor.shard_pool(pool)
         else:
-            self.pool = CachePool(cfg, n_slots, max_seq)
-            self._decode = TargetRegion(steps.make_decode_step(cfg), name="decode")
-            self._prefill_single = TargetRegion(self._prefill_one, name="prefill")
+            pool = CachePool(cfg, config.n_slots, config.max_seq)
+        self.scheduler = Scheduler(
+            cfg, pool, self.executor, n_slots=config.n_slots,
+            greedy=config.greedy, paged=config.paged,
+            tiered=config.cache.tiered, chunked=config.chunked,
+            token_budget=config.token_budget,
+            preempt_quantum=config.preempt_quantum)
 
-    # -- host API -------------------------------------------------------------
+    # -- host API (delegates to the scheduler) -----------------------------
     def submit(self, req: Request) -> bool:
-        req.t_submit = time.perf_counter()
-        req.t_first = 0.0
-        req.prefill_pos = 0
-        req.tokens_out = []
-        req.t_tokens = []
-        return self.mailbox.put(req)
+        return self.scheduler.submit(req)
 
     @property
     def idle(self) -> bool:
-        """True when nothing is resident, queued, or in flight."""
-        return (not self.active and not self.prefilling
-                and not self.prefilled_wait and len(self.mailbox) == 0
-                and getattr(self, "_pending_swapin", None) is None)
+        return self.scheduler.idle
 
     def step(self) -> List[Request]:
-        """One engine iteration. Chunked mode: the unified token-budgeted
-        step. Otherwise: one admission pass + (if anything is resident) one
-        decode dispatch. Returns the requests that finished this iteration."""
-        if self.chunked:
-            return self._step_chunked()
-        self._admit_paged() if self.paged else self._admit()
-        if not self.active:
-            return []
-        return self._decode_step_paged() if self.paged else self._decode_step()
+        return self.scheduler.step()
 
     def run(self, max_steps: int = 1000) -> List[Request]:
-        finished: List[Request] = []
-        for _ in range(max_steps):
-            if self.idle:
-                break
-            finished.extend(self.step())
-        return finished
+        return self.scheduler.run(max_steps)
 
-    # -- internals --------------------------------------------------------
-    def _emit(self, req: Request, tok: int) -> None:
-        req.tokens_out.append(tok)
-        now = time.perf_counter()
-        if req.t_first == 0.0:
-            req.t_first = now
-            self.stats["ttft_s"].append(now - req.t_submit)
-        req.t_tokens.append(now)
-
-    def _prefill_one(self, params, tokens, caches, slot, length):
-        """Prefill one request's rows into the pool caches at `slot`."""
-        logits, new_caches, _ = transformer.forward(
-            params, tokens, self.cfg, caches=caches,
-            cache_pos=jnp.zeros((), jnp.int32), mode="prefill")
-        # write back only this slot's rows (axis 1 = batch in stacked caches)
-        def merge(old, new):
-            return jax.lax.dynamic_update_slice_in_dim(
-                old, jax.lax.dynamic_slice_in_dim(new, slot, 1, axis=1)
-                .astype(old.dtype), slot, axis=1)
-        merged = jax.tree_util.tree_map(merge, caches, new_caches)
-        return logits[:, length - 1], merged
-
-    def _admit(self):
-        while True:
-            free = int(np.sum(self.pool.seq_ids < 0))
-            if free == 0:
-                break
-            reqs = self.mailbox.drain(1)
-            if not reqs:
-                break
-            req = reqs[0]
-            slot = self.pool.alloc_slot(req.seq_id)
-            L = len(req.prompt)
-            toks = np.zeros((self.pool.n_slots, L), np.int32)
-            toks[slot] = req.prompt
-            logits_last, self.pool.caches = self._prefill_single(
-                self.params, jnp.asarray(toks), self.pool.caches,
-                slot, L)
-            self._emit(req, int(jnp.argmax(logits_last[slot])))
-            req.prefill_pos = L
-            self.pool.lengths[slot] = L + 1
-            self.active[slot] = req
-            self.stats["queue_lat_s"].append(
-                time.perf_counter() - req.t_submit)
-            self.stats["prefills"] += 1
-
-    def _decode_step(self) -> List[Request]:
-        B = self.pool.n_slots
-        toks = np.zeros((B, 1), np.int32)
-        for slot, req in self.active.items():
-            toks[slot, 0] = req.tokens_out[-1]
-        # single shared cache_pos: slots decode at their own lengths; we use
-        # per-slot validity masks inside attention, so pass max length
-        pos = int(self.pool.lengths.max()) - 1
-        logits, self.pool.caches = self._decode(
-            self.params, jnp.asarray(toks), self.pool.caches,
-            jnp.asarray(pos, jnp.int32))
-        self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += len(self.active)
-        self.stats["batch_occupancy"].append(len(self.active) / B)
-        finished = []
-        for slot in list(self.active):
-            req = self.active[slot]
-            self._emit(req, int(jnp.argmax(logits[slot, -1])))
-            self.pool.lengths[slot] += 1
-            if len(req.tokens_out) >= req.max_new or \
-               self.pool.lengths[slot] >= self.pool.max_seq - 1:
-                req.done = True
-                finished.append(req)
-                del self.active[slot]
-                self.pool.free_slot(slot)
-        return finished
-
-    # -- paged internals ---------------------------------------------------
-    def _activate(self, slot: int, req: Request, first_admit: bool):
-        self._admit_clock += 1
-        self._admitted_at[slot] = self._admit_clock
-        self._last_decoded[slot] = self.stats["decode_steps"]
-        self._resident_since[slot] = self.stats["decode_steps"]
-        self._chunks_done[slot] = 0
-        if self.chunked and req.prefill_pos < len(req.prompt):
-            self.prefilling[slot] = req
-        elif self.chunked and not self.pool.has_decode_reservation(
-                req.seq_id, len(req.prompt), req.max_new):
-            self.prefilled_wait[slot] = req
-        else:
-            self.active[slot] = req
-        if first_admit:
-            self.stats["queue_lat_s"].append(
-                time.perf_counter() - req.t_submit)
-
-    def _pick_victim(self, exclude: Optional[int] = None) -> Optional[int]:
-        """LRU preemption victim: least-recently-decoded resident, oldest
-        admission breaking ties (all residents decode together, so the
-        tie-break usually decides). A decoding resident is exempt until it
-        has decoded ``preempt_quantum`` steps in its current residency, and a
-        mid-prefill resident until it has landed one chunk — every admitted
-        sequence makes progress before it can be evicted again, which is
-        what guarantees the rotation terminates."""
-        candidates = dict(self.active)
-        if self.chunked:
-            candidates.update(self.prefilled_wait)
-            candidates.update(self.prefilling)
-        best, best_key = None, None
-        for slot in candidates:
-            if slot == exclude:
-                continue
-            if slot in self.active and \
-               self.stats["decode_steps"] - self._resident_since[slot] \
-               < self.preempt_quantum:
-                continue
-            if slot in self.prefilling and self._chunks_done[slot] == 0:
-                continue
-            if not self.pool.can_swap_out(slot):
-                continue
-            key = (self._last_decoded[slot], self._admitted_at[slot])
-            if best_key is None or key < best_key:
-                best, best_key = slot, key
-        return best
-
-    def _preempt_until(self, can_fit, exclude: Optional[int] = None) -> bool:
-        """Evict LRU residents to host DRAM until ``can_fit()`` passes.
-        Returns False (leaving partial evictions in place — their capacity
-        stays freed) when no eligible victim remains."""
-        while not can_fit():
-            victim = self._pick_victim(exclude)
-            if victim is None:
-                return False
-            vreq = self.active.pop(victim, None)
-            if vreq is None:
-                vreq = self.prefilling.pop(victim, None)
-                if vreq is not None:
-                    self.stats["preempted_mid_prefill"] += 1
-                else:
-                    vreq = self.prefilled_wait.pop(victim)
-            self.pool.swap_out(victim)
-            # back of the queue: the waiting request goes first, the victim
-            # resumes in FIFO turn (front-requeue only if the mailbox is
-            # full — never lose a request)
-            if not self.mailbox.put(vreq):
-                self.mailbox.requeue(vreq)
-            self.stats["preemptions"] += 1
-            self._sync_swap_stats()
-        return True
-
-    def _sync_swap_stats(self):
-        self.stats["swap_out_count"] = self.pool.swap_out_count
-        self.stats["swap_in_count"] = self.pool.swap_in_count
-        self.stats["swap_out_bytes"] = self.pool.swap_out_bytes
-        self.stats["swap_in_bytes"] = self.pool.swap_in_bytes
-
-    def _finish_pending_swapin(self):
-        if self._pending_swapin is None:
-            return
-        req, token = self._pending_swapin
-        self._pending_swapin = None
-        slot = self.pool.swap_in_finish(token)
-        self._activate(slot, req, first_admit=False)
-        self._sync_swap_stats()
-
-    def _admit_paged(self):
-        """Admit by page availability: the drain stops at the first request
-        the pool cannot take (requeued at the front, FIFO preserved).
-
-        Untiered, a refusal *stalls* admission until a release frees
-        capacity — otherwise every decode step would drain/refuse/requeue the
-        same head request, inflating the refusal stat and churning the
-        mailbox lock. Tiered, a refusal instead preempts the LRU resident
-        (pages swap out to host DRAM) and the stall clears every pass:
-        decode steps expire residency quanta, so a retry can make progress —
-        only total-capacity exhaustion leaves the head waiting.
-
-        Chunked, admission reserves only the *prompt* pages (partial-prefill-
-        aware): the request enters ``self.prefilling`` and the step loop
-        slices its prompt into token-budgeted chunks; no prefill is
-        dispatched here."""
-        if self.tiered:
-            if not self.active:
-                # no decode step will run to land the prefetch — finish it
-                # here so the run loop always makes progress
-                self._finish_pending_swapin()
-            self._admit_stalled = False
-        if getattr(self, "_admit_stalled", False):
-            return
-        while True:
-            reqs = self.mailbox.drain(1)
-            if not reqs:
-                break
-            req = reqs[0]
-            if self.tiered and self.pool.is_cold(req.seq_id):
-                # resume path: restore the preempted sequence's pages from
-                # host DRAM (no re-prefill — its KV and tokens_out survive;
-                # a half-prefilled request resumes at its chunk offset)
-                if not self.pool.can_resume(req.seq_id) and \
-                   not self._preempt_until(
-                        lambda: self.pool.can_resume(req.seq_id)):
-                    self.mailbox.requeue(req)
-                    self.stats["admission_refusals"] += 1
-                    self._admit_stalled = True
-                    break
-                slot = self.pool.swap_in(req.seq_id)
-                self._activate(slot, req, first_admit=False)
-                self._sync_swap_stats()
-                continue
-            L = len(req.prompt)
-            if not self.pool.admissible_ever(L, req.max_new):
-                # could never fit even on an idle pool: reject outright so it
-                # doesn't head-of-line-block the drain forever
-                self.stats["rejected"] = self.stats.get("rejected", 0) + 1
-                continue
-            if self.chunked:
-                while True:
-                    # longest-cached-prefix lookup: the request adopts the
-                    # match's ref-counted pages and prefills only the
-                    # unshared suffix (re-matched after every eviction —
-                    # an evicted match page may have been freed)
-                    match = self._prefix_match(req)
-                    if self.pool.can_admit_prefill(
-                            L, req.max_new, len(match.pages), match.length):
-                        break
-                    # cache eviction can only fix a PAGE shortage; when the
-                    # refusal is slot-bound (or the request can never fit),
-                    # flushing the index would cost every future hit for
-                    # zero capacity — and only entries whose page actually
-                    # frees (refcount 1) are worth dropping
-                    if self.prefix is not None and \
-                            np.any(self.pool.seq_ids < 0) and \
-                            self.pool.admissible_ever(L, req.max_new) and \
-                            self.prefix.evict_lru(1, require_free=True):
-                        continue   # reclaimed a cache-pinned page: retry
-                    if self.tiered and self._preempt_until(
-                            lambda: self.pool.can_admit_prefill(
-                                L, req.max_new, len(match.pages),
-                                match.length)):
-                        continue
-                    self.mailbox.requeue(req)
-                    self.stats["admission_refusals"] += 1
-                    self._admit_stalled = True
-                    match = None
-                    break
-                if match is None:
-                    break
-                slot = self.pool.admit_prefill(req.seq_id, L,
-                                               shared_pages=match.pages,
-                                               match_len=match.length)
-                if match.length:
-                    req.prefill_pos = match.length
-                    self.pool.lengths[slot] = match.length
-                    self.stats["prefix_hits"] += 1
-                    self.stats["prefix_shared_tokens"] += match.length
-                if match.first_token is not None:
-                    self.stats["prefix_full_hits"] += 1
-                    # exact full-prompt hit: the cached greedy continuation
-                    # IS this request's first token — prefill is skipped
-                    # entirely and the request promotes straight to decode
-                    self._emit(req, match.first_token)
-                self._activate(slot, req, first_admit=True)
-                continue
-            if not self.pool.can_admit(L, req.max_new):
-                if not (self.tiered and self._preempt_until(
-                        lambda: self.pool.can_admit(L, req.max_new))):
-                    self.mailbox.requeue(req)
-                    self.stats["admission_refusals"] += 1
-                    self._admit_stalled = True
-                    break
-            slot = self.pool.admit(req.seq_id, L, req.max_new)
-            # dense B=1 prefill over the prompt, cache padded to a page
-            # multiple, then scattered into this sequence's pages
-            S_p = self.pool.padded_len(L)
-            caches = transformer.init_caches(self.cfg, 1, S_p)
-            toks = jnp.asarray(req.prompt[None, :].astype(np.int32))
-            logits_last, caches = self._prefill_dense(self.params, toks, caches)
-            self.pool.write_prefill(slot, caches, L)
-            self._emit(req, int(jnp.argmax(logits_last[0, -1])))
-            req.prefill_pos = L
-            self._activate(slot, req, first_admit=True)
-            self.stats["prefills"] += 1
-
-    def _prefix_match(self, req: Request) -> PrefixMatch:
-        """Prefix-cache lookup for a fresh request (no KV written yet). The
-        cached first token is honoured only on the greedy path — otherwise
-        the match is trimmed so at least one position is re-computed."""
-        if self.prefix is None or req.prefill_pos or req.tokens_out:
-            return PrefixMatch(length=0, pages=[])
-        m = self.prefix.match(req.prompt)
-        if m.first_token is not None and not self.greedy:
-            length = min(m.length, len(req.prompt) - 1)
-            m = PrefixMatch(length=length,
-                            pages=m.pages[:self.pool.pages_for(length)])
-        return m
-
-    def _decode_step_paged(self, slots: Optional[List[int]] = None
-                           ) -> List[Request]:
-        if self.tiered:
-            # land the prefetch started at the end of the previous step: its
-            # host→dev DMA has been overlapping the admission pass (and any
-            # prefill dispatches) in between; the resumed slot joins this
-            # decode batch
-            self._finish_pending_swapin()
-        if slots is None:
-            slots = sorted(self.active)
-        B = self.pool.max_batch
-        toks = np.zeros((B, 1), np.int32)
-        mask = np.zeros(B, bool)
-        for slot in slots:
-            req = self.active[slot]
-            toks[slot, 0] = req.tokens_out[-1]
-            mask[slot] = True
-            # a shared page at the write position is COW-forked before the
-            # divergent write (first decode after a full-prefix hit, or a
-            # donor decoding into its cache-shared tail page); the fork page
-            # was pre-reserved, so neither call below can fail
-            if self.prefix is not None and self.pool.cow_unshare(
-                    slot, int(self.pool.lengths[slot])):
-                self.stats["cow_forks"] += 1
-            # map the write position (lengths[slot]) before dispatch; the
-            # decode reservation guarantees this never fails
-            self.pool.ensure(slot, int(self.pool.lengths[slot]) + 1)
-        tables = jnp.asarray(self.pool.device_page_tables())
-        lengths = jnp.asarray(self.pool.lengths.astype(np.int32))
-        # mid-prefill / unpromoted slots are resident but must not decode
-        active = jnp.asarray(mask)
-        logits, self.pool.pages = self._decode(
-            self.params, jnp.asarray(toks), self.pool.pages, tables, lengths,
-            active)
-        self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += len(slots)
-        self.stats["batch_occupancy"].append(len(slots) / B)
-        for slot in slots:
-            self._last_decoded[slot] = self.stats["decode_steps"]
-        used = self.pool.used_bytes()
-        self.stats["peak_used_bytes"] = max(
-            self.stats.get("peak_used_bytes", 0), used)
-        in_system = len(self.active) + len(self.prefilling) + \
-            len(self.prefilled_wait)
-        if self.tiered:
-            # an in-flight prefetch stays in cold_seqs() until it lands, so
-            # the cold count already covers it — no separate pending term
-            in_system += len(self.pool.cold_seqs())
-            self.stats["peak_host_bytes"] = max(
-                self.stats.get("peak_host_bytes", 0),
-                self.pool.host_used_bytes())
-        self.stats["peak_in_system"] = max(
-            self.stats.get("peak_in_system", 0), in_system)
-        finished = []
-        for slot in slots:
-            req = self.active[slot]
-            self._emit(req, int(jnp.argmax(logits[slot])))
-            self.pool.lengths[slot] += 1
-            # paged lengths count KV rows (dense counts rows + the pending
-            # token), hence the -2: both paths stop at the same stream length
-            if len(req.tokens_out) >= req.max_new or \
-               self.pool.lengths[slot] >= self.pool.max_seq - 2:
-                req.done = True
-                finished.append(req)
-                del self.active[slot]
-                self.pool.release(slot)
-                self._admit_stalled = False       # capacity freed: retry admits
-        if self.tiered:
-            # double-buffer: with this step's releases applied, start the
-            # head-of-queue resume's host→dev DMAs now; they overlap the
-            # upcoming admission pass and land at the top of the next step
-            self._start_prefetch()
-        return finished
-
-    def _start_prefetch(self):
-        """If the mailbox head is a preempted (cold) sequence the hot tier
-        can take right now, start its host→dev page DMAs; they are finished
-        (waited + scattered) at the top of the next decode step, so the
-        transfer overlaps the admission pass in between (AutoDMA's
-        load/execute phasing, lifted to the serving level)."""
-        if self._pending_swapin is not None or not self.pool.cold_seqs():
-            return
-        head = self.mailbox.drain(1)
-        if not head:
-            return
-        req = head[0]
-        if self.pool.is_cold(req.seq_id) and self.pool.can_resume(req.seq_id):
-            self._pending_swapin = (req, self.pool.swap_in_start(req.seq_id))
-        else:
-            self.mailbox.requeue(req)
-
-    # -- chunked prefill: the unified token-budgeted step ------------------
-    def _step_chunked(self) -> List[Request]:
-        """One unified engine iteration (continuous batching with chunked
-        prefill):
-
-          1. land any in-flight swap-in prefetch (tiered),
-          2. admission pass — prompt-only page reservations,
-          3. promote prefilled waiters whose decode worst case now fits,
-          4. pack the token budget: one decode token per decoding stream
-             first, then fair-share the remainder over mid-prefill residents
-             as prompt chunks,
-          5. dispatch the chunks, then one decode step over the streams.
-
-        A request whose whole prompt fits in the leftover budget is admitted,
-        prefilled, and streams its first token within this single iteration —
-        it never queues behind another request's whole prefill."""
-        if self.tiered:
-            self._finish_pending_swapin()
-        self._admit_paged()
-        self._promote_waiters()
-        decode_slots = sorted(self.active)
-        mid_prefill = sorted(int(r.seq_id) for r in self.prefilling.values())
-        chunks = self._pack_chunks(self.token_budget - len(decode_slots))
-        for slot, req, start, size in chunks:
-            self._run_chunk(slot, req, start, size)
-        finished = self._decode_step_paged(decode_slots) if decode_slots \
-            else []
-        self.stats["iter_log"].append({
-            "decode_tokens": len(decode_slots),
-            "prefill_tokens": int(sum(c[3] for c in chunks)),
-            "chunks": [(int(r.seq_id), int(start), int(size))
-                       for _, r, start, size in chunks],
-            "mid_prefill": mid_prefill,
-        })
-        return finished
-
-    def _pack_chunks(self, budget_left: int
-                     ) -> List[Tuple[int, Request, int, int]]:
-        """Fair-share the post-decode budget over mid-prefill residents in
-        admission order: whenever the remainder covers them all, every one
-        makes progress, and the shortest remaining prompt finishes first
-        within its share — a short request admitted this iteration starts
-        streaming this iteration instead of queueing behind a long prefill."""
-        if budget_left <= 0 or not self.prefilling:
-            return []
-        order = sorted(self.prefilling, key=lambda s: self._admitted_at[s])
-        remaining = {s: len(self.prefilling[s].prompt)
-                     - self.prefilling[s].prefill_pos for s in order}
-        share = dict.fromkeys(order, 0)
-        left = budget_left
-        while left > 0:
-            live = [s for s in order if share[s] < remaining[s]]
-            if not live:
-                break
-            quantum = max(1, left // len(live))
-            for s in live:
-                take = min(quantum, remaining[s] - share[s], left)
-                share[s] += take
-                left -= take
-                if left == 0:
-                    break
-        return [(s, self.prefilling[s], self.prefilling[s].prefill_pos,
-                 share[s]) for s in order if share[s] > 0]
-
-    def _run_chunk(self, slot: int, req: Request, start: int, size: int):
-        """Dispatch one prompt chunk ``[start, start+size)``: its KV lands in
-        the slot's already-reserved pages; on prompt completion the first
-        token streams immediately (from the chunk's last-position logits) and
-        promotion to the decode set is attempted."""
-        if self.prefix is not None and self.pool.cow_unshare(slot, start):
-            # the first chunk after a mid-page prefix match diverges inside
-            # the shared partially-filled page: fork it before the write
-            self.stats["cow_forks"] += 1
-        table_row = jnp.asarray(self.pool.page_table_row(slot))
-        toks = jnp.asarray(
-            req.prompt[start:start + size][None, :].astype(np.int32))
-        logits_last, self.pool.pages = self._prefill_chunk(
-            self.params, toks, self.pool.pages, table_row,
-            jnp.asarray(start, jnp.int32))
-        req.prefill_pos = start + size
-        self.pool.lengths[slot] = req.prefill_pos
-        self._chunks_done[slot] += 1
-        self.stats["prefill_chunks"] += 1
-        self.stats["prefill_chunk_tokens"] += size
-        if req.prefill_pos >= len(req.prompt):
-            tok = int(jnp.argmax(logits_last[0]))
-            self._emit(req, tok)
-            del self.prefilling[slot]
-            self.stats["prefills"] += 1
-            if self.prefix is not None and self.greedy:
-                # index the completed prompt: its pages become claimable by
-                # later arrivals, its greedy first token makes an exact
-                # re-arrival skip prefill entirely
-                self.prefix.insert(self.pool, req.seq_id, req.prompt, tok)
-            if self.pool.reserve_decode(req.seq_id, len(req.prompt),
-                                        req.max_new):
-                self.active[slot] = req
-            else:
-                self.prefilled_wait[slot] = req
-
-    def _promote_waiters(self):
-        """FIFO promotion of prefilled waiters into the decode set: top the
-        reservation up to the decode worst case. Tiered, a blocked head may
-        preempt LRU residents. When nothing is decoding or prefilling (so no
-        release can ever arrive) the youngest waiter is evicted and
-        re-prefills later — the oldest always eventually promotes
-        (``admissible_ever`` bounds its worst case by the pool size)."""
-        while True:
-            order = sorted(self.prefilled_wait,
-                           key=lambda s: self._admitted_at[s])
-            if not order:
-                return
-            head = order[0]
-            req = self.prefilled_wait[head]
-            L = len(req.prompt)
-            ok = self.pool.reserve_decode(req.seq_id, L, req.max_new)
-            if not ok and self.prefix is not None:
-                # reclaim cache-pinned pages before escalating to preemption
-                # (require_free: dropping a still-adopted page frees nothing)
-                while not self.pool.can_reserve_decode(
-                        req.seq_id, L, req.max_new) and \
-                        self.prefix.evict_lru(1, require_free=True):
-                    pass
-                ok = self.pool.reserve_decode(req.seq_id, L, req.max_new)
-            if not ok and self.tiered:
-                ok = self._preempt_until(
-                    lambda: self.pool.can_reserve_decode(
-                        req.seq_id, L, req.max_new),
-                    exclude=head) and \
-                    self.pool.reserve_decode(req.seq_id, L, req.max_new)
-            if not ok and not self.active and not self.prefilling and \
-                    len(order) > 1:
-                self._evict_reprefill(order[-1])
-                continue
-            if not ok:
-                return
-            del self.prefilled_wait[head]
-            self.active[head] = req
-
-    def _evict_reprefill(self, slot: int):
-        """Promotion-deadlock breaker (untiered, or tiered with the host
-        budget exhausted): drop the youngest waiter's KV and requeue it — it
-        re-prefills from scratch later. Greedy streams are deterministic per
-        request, so the recomputed prefix is bit-identical; the already-
-        emitted first token is retracted and re-derived."""
-        req = self.prefilled_wait.pop(slot)
-        self.pool.release(slot)
-        req.prefill_pos = 0
-        if req.tokens_out:
-            req.tokens_out.pop()
-            req.t_tokens.pop()
-        if req.t_first:
-            # the first token was retracted with its emission: drop its TTFT
-            # sample too, so the stat reflects the token the user will get
-            try:
-                self.stats["ttft_s"].remove(req.t_first - req.t_submit)
-            except ValueError:
-                pass
-            req.t_first = 0.0
-        self.mailbox.requeue(req)
-        self.stats["evictions_reprefill"] += 1
-        self._admit_stalled = False
-
-    # -- hero_perf-style counter summary ----------------------------------
     def stats_summary(self) -> Dict[str, Any]:
-        """Engine counters in report form: occupancy, swap traffic,
-        preemptions, chunked-prefill token split, queue-latency percentiles
-        (submit → admission) and TTFT percentiles (submit → first token).
-        Every aggregate is guarded for the empty-engine case — a fresh or
-        idle engine reports zeros, never a numpy error."""
-        occ = self.stats.get("batch_occupancy") or []
-        lat = sorted(self.stats.get("queue_lat_s") or [])
-        ttft = sorted(self.stats.get("ttft_s") or [])
-        out = {
-            "decode_steps": self.stats.get("decode_steps", 0),
-            "prefills": self.stats.get("prefills", 0),
-            "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
-            "admission_refusals": self.stats.get("admission_refusals", 0),
-            "preemptions": self.stats.get("preemptions", 0),
-            "preempted_mid_prefill": self.stats.get("preempted_mid_prefill", 0),
-            "evictions_reprefill": self.stats.get("evictions_reprefill", 0),
-            "swap_out_count": self.stats.get("swap_out_count", 0),
-            "swap_in_count": self.stats.get("swap_in_count", 0),
-            "swap_out_bytes": self.stats.get("swap_out_bytes", 0),
-            "swap_in_bytes": self.stats.get("swap_in_bytes", 0),
-            "prefill_chunks": self.stats.get("prefill_chunks", 0),
-            "prefill_chunk_tokens": self.stats.get("prefill_chunk_tokens", 0),
-            "decode_tokens": self.stats.get("decode_tokens", 0),
-            "cow_forks": self.stats.get("cow_forks", 0),
-            "prefix_hits": self.stats.get("prefix_hits", 0),
-            "prefix_full_hits": self.stats.get("prefix_full_hits", 0),
-            "prefix_shared_tokens": self.stats.get("prefix_shared_tokens", 0),
-            "peak_used_bytes": self.stats.get("peak_used_bytes", 0),
-            "peak_host_bytes": self.stats.get("peak_host_bytes", 0),
-            "peak_in_system": self.stats.get("peak_in_system", 0),
-        }
-        if self.chunked:
-            iters = self.stats.get("iter_log") or []
-            out["token_budget"] = self.token_budget
-            out["max_iter_tokens"] = max(
-                (e["decode_tokens"] + e["prefill_tokens"] for e in iters),
-                default=0)
-        if self.prefix is not None:
-            out.update(self.prefix.stats())
-        for p in (50, 90, 99):
-            out[f"queue_lat_p{p}_s"] = (
-                float(np.percentile(lat, p)) if lat else 0.0)
-            out[f"ttft_p{p}_s"] = (
-                float(np.percentile(ttft, p)) if ttft else 0.0)
-        return out
+        return self.scheduler.stats_summary()
+
+    # -- introspection shims (tests, benches, drivers) ---------------------
+    @property
+    def pool(self):
+        return self.scheduler.pool
+
+    @property
+    def prefix(self):
+        return self.scheduler.prefix
+
+    @property
+    def mailbox(self):
+        return self.scheduler.mailbox
+
+    @property
+    def stats(self):
+        return self.scheduler.stats
+
+    @property
+    def active(self):
+        return self.scheduler.active
+
+    @property
+    def prefilling(self):
+        return self.scheduler.prefilling
+
+    @property
+    def prefilled_wait(self):
+        return self.scheduler.prefilled_wait
+
+    @property
+    def greedy(self):
+        return self.scheduler.greedy
+
+    @property
+    def paged(self):
+        return self.scheduler.paged
+
+    @property
+    def tiered(self):
+        return self.scheduler.tiered
+
+    @property
+    def chunked(self):
+        return self.scheduler.chunked
+
+    @property
+    def token_budget(self):
+        return self.scheduler.token_budget
+
+    @property
+    def preempt_quantum(self):
+        return self.scheduler.preempt_quantum

@@ -20,8 +20,9 @@ Ownership boundaries & invariants:
   * This module owns the **device-resident page pool arrays** and the
     host-side slot state (seq_ids/lengths) — the mapping between request
     identity and physical KV rows. Scheduling (who admits, who decodes)
-    belongs to serve/engine.py; page *identity* and refcounts belong to
-    core/vmm.py; cross-tier movement to serve/tiering.py.
+    belongs to serve/scheduler.py; page *identity* and refcounts belong to
+    core/vmm.py; cross-tier movement to serve/tiering.py; stack composition
+    (the CacheManager protocol the scheduler sees) to serve/cache.py.
   * **Never-fails-mid-decode**: every admitted sequence's reservation covers
     its worst-case page growth (including the copy-on-write fork of a shared
     partial page), so ``ensure``/``cow_unshare`` on a resident sequence
@@ -118,6 +119,42 @@ def paged_pool(cfg: transformer.ModelConfig, hbm_budget_bytes: int,
 _PAGEABLE = ("gqa", "global", "shared")
 
 
+class CacheLayer:
+    """Composable cache-manager layer: generic delegation to ``inner``.
+
+    The serving cache stack is built by *wrapping* — PagedCachePool at the
+    bottom, TieredCachePool (serve/tiering.py) adding host-DRAM swap above
+    it, PrefixCachingPool (serve/cache.py) adding radix prompt reuse above
+    that. Every layer only implements what it *changes*; everything else
+    falls through ``__getattr__`` to the layer below, so the scheduler sees
+    one uniform :class:`repro.serve.cache.CacheManager` surface no matter
+    how the stack is composed (this replaces ~30 hand-written delegation
+    methods the tiered pool used to carry).
+
+    ``pages`` is the one attribute that needs an explicit property pair:
+    the engine *assigns* it after every device step (``pool.pages = new``),
+    and a bare ``__setattr__`` would shadow the innermost pool's arrays with
+    a copy on the wrapper instead of updating them.
+    """
+
+    def __init__(self, inner):
+        object.__setattr__(self, "inner", inner)
+
+    def __getattr__(self, name):
+        inner = self.__dict__.get("inner")
+        if inner is None or name.startswith("__"):
+            raise AttributeError(name)
+        return getattr(inner, name)
+
+    @property
+    def pages(self):
+        return self.inner.pages
+
+    @pages.setter
+    def pages(self, v):
+        self.inner.pages = v
+
+
 class PagedCachePool:
     """Paged serving pool: sequences own page lists over a physical page pool.
 
@@ -139,6 +176,10 @@ class PagedCachePool:
     Only full-attention caches (gqa/global/shared) are pageable; window/MLA/
     SSM caches are constant-size or compressed and stay on the dense path.
     """
+
+    # the bottom of every cache stack has no prefix index; the scheduler
+    # reads this uniformly (PrefixCachingPool overrides it with a real one)
+    prefix = None
 
     def __init__(self, cfg: transformer.ModelConfig, max_batch: int,
                  max_seq: int, n_pages: int, page_tokens: int = 16,

@@ -20,6 +20,21 @@ Per-sequence RoPE positions come from ``lengths`` (each slot rotates at its
 own length), which is exact for ragged batches; the dense engine's shared
 ``cache_pos`` is the max over slots, so the two paths agree whenever slot
 lengths coincide (the regression test's request mix).
+
+Tensor parallelism (``tp_axis`` set): the step bodies are written to run
+under ``shard_map`` over a ``tp`` mesh axis (serve/executor.py builds the
+wrapper under ``parallel.sharding.use_mesh``). KV pages are sharded along
+the **kv-head axis** (axis 2 of every [count, P, K, pt, hd] pool leaf);
+page tables, lengths, tokens, and all weights stay replicated. Each shard
+computes the full QKV projections (replicated math — bit-identical across
+shards), slices its own contiguous kv-head block (q heads follow, since
+head ``h = k·G + g`` groups query heads per kv head), scatters and attends
+only its local page slice, and a single ``all_gather`` of the per-head
+partial outputs rebuilds the full head dimension before the (replicated)
+output projection. No cross-shard *reduction* ever happens — the gather is
+a pure concatenation — so tp=N greedy streams are bit-identical to tp=1
+(asserted in tests/test_scheduler_properties.py and
+benchmarks/bench_tensor_parallel.py).
 """
 from __future__ import annotations
 
@@ -88,13 +103,30 @@ def _scatter_token(pool: jax.Array, tok: jax.Array, page_table: jax.Array,
     return pool
 
 
+def _tp_head_slice(q, k, v, pages, tp_axis: str):
+    """This shard's contiguous head block of replicated q/k/v projections.
+
+    ``pages["k"]`` already carries the *local* kv-head count (shard_map hands
+    each shard its pool slice), so the slice sizes are static; only the
+    offset (``axis_index``) is traced. q heads follow the kv split because
+    head ``h = k·G + g`` lays query heads out kv-head-major."""
+    K_local = pages["k"].shape[1]
+    G = q.shape[2] // k.shape[2]
+    idx = jax.lax.axis_index(tp_axis)
+    q = jax.lax.dynamic_slice_in_dim(q, idx * K_local * G, K_local * G, 2)
+    k = jax.lax.dynamic_slice_in_dim(k, idx * K_local, K_local, 2)
+    v = jax.lax.dynamic_slice_in_dim(v, idx * K_local, K_local, 2)
+    return q, k, v
+
+
 def _paged_gqa_layer(p, x, pages, page_table, lengths, active,
                      cfg: transformer.ModelConfig, acfg, page_tokens: int,
-                     interpret: bool):
+                     interpret: bool, tp_axis=None):
     """One decode-mode attention layer over the paged cache.
 
-    x: [B, 1, d]; pages: {"k","v"} [P, K, pt, hd] (this unit's pool slice).
-    Returns (y [B, 1, d], updated pages).
+    x: [B, 1, d]; pages: {"k","v"} [P, K, pt, hd] (this unit's pool slice —
+    the *local* kv-head shard when ``tp_axis`` is set and the caller runs
+    under shard_map). Returns (y [B, 1, d], updated pages).
     """
     B = x.shape[0]
     H, K, hd = acfg.n_heads, acfg.n_kv, acfg.head_dim
@@ -110,6 +142,8 @@ def _paged_gqa_layer(p, x, pages, page_table, lengths, active,
         positions = lengths.astype(jnp.int32)[:, None]          # [B, 1]
         q = blocks.apply_rope(q, positions, acfg.rope_theta)
         k = blocks.apply_rope(k, positions, acfg.rope_theta)
+    if tp_axis is not None:
+        q, k, v = _tp_head_slice(q, k, v, pages, tp_axis)
     k_pool = _scatter_token(pages["k"], k[:, 0], page_table, lengths, active,
                             page_tokens)
     v_pool = _scatter_token(pages["v"], v[:, 0], page_table, lengths, active,
@@ -119,13 +153,17 @@ def _paged_gqa_layer(p, x, pages, page_table, lengths, active,
     kv_len = jnp.where(active, lengths + 1, 0).astype(jnp.int32)
     att = paged_flash_decode(q[:, 0].astype(jnp.float32),
                              k_pool, v_pool, page_table, kv_len,
-                             interpret=interpret)               # [B, H, hd]
+                             interpret=interpret)         # [B, H_local, hd]
+    if tp_axis is not None:
+        # the single tp collective: concatenate per-head partials (each head
+        # was computed whole on exactly one shard — no reduction, bit-exact)
+        att = jax.lax.all_gather(att, tp_axis, axis=1, tiled=True)
     y = att.reshape(B, 1, H * hd).astype(x.dtype) @ p["wo"]
     return y, {"k": k_pool, "v": v_pool}
 
 
 def make_paged_decode_step(cfg: transformer.ModelConfig, page_tokens: int,
-                           interpret: bool = True):
+                           interpret: bool = True, tp_axis=None):
     """Returns decode_step(params, tokens, pages, page_table, lengths, active)
     -> (logits [B, vocab], new pages).
 
@@ -133,6 +171,11 @@ def make_paged_decode_step(cfg: transformer.ModelConfig, page_tokens: int,
     PagedCachePool.pages pytree; page_table: [B, max_pages] int32;
     lengths: [B] int32 valid KV rows (the new token's write position);
     active: [B] bool slot-occupancy mask.
+
+    With ``tp_axis`` set, the returned function must be called under
+    ``shard_map`` over that mesh axis with pages sharded on their kv-head
+    axis and everything else replicated — serve/executor.py owns that
+    wrapping (see the module docstring for the layout).
     """
 
     def decode_step(params, tokens, pages, page_table, lengths, active):
@@ -162,7 +205,8 @@ def make_paged_decode_step(cfg: transformer.ModelConfig, page_tokens: int,
                     mixer_p = shared_p["mixer"] if mixer == "shared" else p["mixer"]
                     y, npg = _paged_gqa_layer(
                         mixer_p, h, unit_pg[i], page_table, lengths, active,
-                        cfg, cfg.attn_cfg(mixer), page_tokens, interpret)
+                        cfg, cfg.attn_cfg(mixer), page_tokens, interpret,
+                        tp_axis)
                     if cfg.sandwich_norm:
                         y = transformer._norm_apply(p["ln1_post"], y, cfg)
                     x = x + y
@@ -190,14 +234,15 @@ def make_paged_decode_step(cfg: transformer.ModelConfig, page_tokens: int,
 
 def _paged_gqa_prefill_layer(p, x, pages, page_table, start,
                              cfg: transformer.ModelConfig, acfg,
-                             page_tokens: int, interpret: bool):
+                             page_tokens: int, interpret: bool, tp_axis=None):
     """One prefill-chunk attention layer over the paged cache.
 
     x: [1, C, d] chunk hidden states at global positions start..start+C-1;
-    pages: {"k","v"} [P, K, pt, hd] (this unit's pool slice); page_table:
-    [max_pages] (one sequence's row). Writes the chunk's K/V into its pages,
-    then attends the chunk queries against the paged prefix with the
-    cross-chunk causal mask. Returns (y [1, C, d], updated pages).
+    pages: {"k","v"} [P, K, pt, hd] (this unit's pool slice — the local
+    kv-head shard under ``tp_axis``); page_table: [max_pages] (one
+    sequence's row). Writes the chunk's K/V into its pages, then attends
+    the chunk queries against the paged prefix with the cross-chunk causal
+    mask. Returns (y [1, C, d], updated pages).
     """
     C = x.shape[1]
     H, K, hd = acfg.n_heads, acfg.n_kv, acfg.head_dim
@@ -213,17 +258,22 @@ def _paged_gqa_prefill_layer(p, x, pages, page_table, start,
         positions = (start + jnp.arange(C, dtype=jnp.int32))[None, :]
         q = blocks.apply_rope(q, positions, acfg.rope_theta)
         k = blocks.apply_rope(k, positions, acfg.rope_theta)
+    if tp_axis is not None:
+        q, k, v = _tp_head_slice(q, k, v, pages, tp_axis)
     k_pool = scatter_chunk(pages["k"], k[0], page_table, start, page_tokens)
     v_pool = scatter_chunk(pages["v"], v[0], page_table, start, page_tokens)
     att = paged_flash_prefill(q[0].astype(jnp.float32), k_pool, v_pool,
                               page_table, start,
-                              interpret=interpret)               # [C, H, hd]
+                              interpret=interpret)         # [C, H_local, hd]
+    if tp_axis is not None:
+        att = jax.lax.all_gather(att, tp_axis, axis=1, tiled=True)
     y = att.reshape(1, C, H * hd).astype(x.dtype) @ p["wo"]
     return y, {"k": k_pool, "v": v_pool}
 
 
 def make_paged_prefill_chunk_step(cfg: transformer.ModelConfig,
-                                  page_tokens: int, interpret: bool = True):
+                                  page_tokens: int, interpret: bool = True,
+                                  tp_axis=None):
     """Returns prefill_chunk(params, tokens, pages, page_table, start)
     -> (last_logits [1, vocab], new pages) — the chunked-prefill TargetRegion.
 
@@ -262,7 +312,8 @@ def make_paged_prefill_chunk_step(cfg: transformer.ModelConfig,
                     mixer_p = shared_p["mixer"] if mixer == "shared" else p["mixer"]
                     y, npg = _paged_gqa_prefill_layer(
                         mixer_p, h, unit_pg[i], page_table, start,
-                        cfg, cfg.attn_cfg(mixer), page_tokens, interpret)
+                        cfg, cfg.attn_cfg(mixer), page_tokens, interpret,
+                        tp_axis)
                     if cfg.sandwich_norm:
                         y = transformer._norm_apply(p["ln1_post"], y, cfg)
                     x = x + y

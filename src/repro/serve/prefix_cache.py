@@ -31,9 +31,10 @@ Ownership boundaries & invariants:
   * ``held_pages`` is bounded by ``max_pages``; overflow evicts
     least-recently-matched leaves bottom-up, so an interior page is never
     evicted while a descendant still extends it.
-  * Insertion only happens for *completed* prefills (serve/engine.py calls
-    :meth:`insert` when a prompt's last chunk lands), so every advertised
-    page holds fully written KV rows for its token span.
+  * Insertion only happens for *completed* prefills (the scheduler calls
+    :meth:`insert` through serve/cache.PrefixCachingPool when a prompt's
+    last chunk lands), so every advertised page holds fully written KV rows
+    for its token span.
 """
 from __future__ import annotations
 

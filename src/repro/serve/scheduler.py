@@ -1,0 +1,788 @@
+"""Serving scheduler: pure policy over a CacheManager and an Executor.
+
+The top of the three-layer decomposition (HEROv2's offload manager, grown
+up): requests land in a **Mailbox** (the hardware mailbox), and each
+``step()`` drains it, decides *which* sequences admit, chunk, promote,
+preempt, or decode, and dispatches the executor's compiled TargetRegions.
+This module owns **scheduling state only** — the mailbox, the request sets
+(``prefilling`` → ``prefilled_wait`` → ``active``, plus the tiered pool's
+cold set), victim selection, and the token-budget packing. Page accounting
+belongs to serve/kvcache.py, stack composition to serve/cache.py, tier
+movement to serve/tiering.py, prefix lookup to serve/prefix_cache.py, and
+everything device-shaped (compiled steps, sampling, the tp mesh) to
+serve/executor.py.
+
+Continuous batching with chunked prefill (``chunked=True``) fuses prefill
+and decode into one **token-budgeted** step loop: each iteration packs one
+decode token per stream first and fair-shares the remainder over
+mid-prefill residents as prompt chunks in admission order. Admission is
+partial-prefill-aware (prompt pages only; the decode worst case tops up at
+promotion); a preempted half-prefilled request resumes at its chunk offset.
+Shared-prefix caching rides in front of admission when the cache stack has
+a prefix layer.
+
+Token movement discipline: dispatches return device-resident sampled ids;
+the scheduler queues them with their completion logic and materialises the
+whole iteration's ids in ONE ``Executor.fetch_token_ids`` transfer at the
+end of the step — value-dependent effects (stream emission, prefix
+insertion, decode promotion, slot release) run in dispatch order once the
+host values land.
+
+Invariants (tests/test_scheduler_properties.py):
+
+  * **Bit-identical streams**: scheduling decisions (chunking, preemption,
+    promotion order, prefix reuse, tensor parallelism) may change *when*
+    tokens are computed, never *which* tokens a greedy request streams.
+  * A request is in exactly one of: mailbox, prefilling, prefilled_wait,
+    active, cold (tiered), or finished; every admitted request eventually
+    finishes (the deadlock breakers guarantee rotation terminates).
+  * Stats never lie about totals: decode + prefill-chunk tokens per
+    iteration never exceed the budget, and accounting closes at drain (no
+    page, reservation, or slot leaks).
+  * Exactly one host transfer of token ids per chunked-mode iteration (and
+    at most one per dispatch phase on the legacy dense/monolithic paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import Mailbox
+from repro.models import transformer
+from repro.serve.executor import Executor
+from repro.serve.prefix_cache import PrefixMatch
+
+
+@dataclasses.dataclass
+class Request:
+    seq_id: int
+    prompt: np.ndarray          # [L] int32
+    max_new: int = 16
+    t_submit: float = 0.0
+    t_first: float = 0.0        # wall time of the first emitted token (TTFT)
+    prefill_pos: int = 0        # prompt tokens whose KV has been written
+    tokens_out: Optional[List[int]] = None
+    t_tokens: Optional[List[float]] = None   # wall time of each emitted token
+    done: bool = False
+
+
+class Scheduler:
+    """Mailbox-batched continuous scheduling over one cache stack.
+
+    ``pool`` is a :class:`repro.serve.cache.CacheManager` stack (paged
+    family) or a dense :class:`repro.serve.kvcache.CachePool`; ``executor``
+    dispatches the compiled steps. The feature *policy* flags (``paged``,
+    ``tiered``, ``chunked``) mirror the stack composition — the Engine
+    façade derives them from its config so the two can never disagree.
+    """
+
+    def __init__(self, cfg: transformer.ModelConfig, pool, executor: Executor,
+                 *, n_slots: int, greedy: bool = True, paged: bool = False,
+                 tiered: bool = False, chunked: bool = False,
+                 token_budget: Optional[int] = None,
+                 preempt_quantum: int = 1):
+        self.cfg = cfg
+        self.pool = pool
+        self.executor = executor
+        self.greedy = greedy
+        self.paged = paged
+        self.tiered = tiered
+        self.chunked = chunked
+        self.prefix = getattr(pool, "prefix", None)
+        self.mailbox = Mailbox(depth=256)
+        self.active: Dict[int, Request] = {}       # slot -> decoding request
+        self.prefilling: Dict[int, Request] = {}   # slot -> mid-prompt req
+        self.prefilled_wait: Dict[int, Request] = {}  # awaiting promotion
+        self.stats = {"decode_steps": 0, "prefills": 0, "batch_occupancy": [],
+                      "admission_refusals": 0, "preemptions": 0,
+                      "preempted_mid_prefill": 0, "evictions_reprefill": 0,
+                      "swap_out_count": 0, "swap_in_count": 0,
+                      "swap_out_bytes": 0, "swap_in_bytes": 0,
+                      "prefill_chunks": 0, "prefill_chunk_tokens": 0,
+                      "decode_tokens": 0, "cow_forks": 0,
+                      "prefix_hits": 0, "prefix_full_hits": 0,
+                      "prefix_shared_tokens": 0,
+                      "queue_lat_s": [], "ttft_s": [], "iter_log": []}
+        self._fetch_queue: List[Tuple[Any, Callable]] = []
+        self._finished: List[Request] = []
+        if self.paged:
+            self._admit_stalled = False
+            self._pending_swapin = None            # (Request, PendingSwapIn)
+            self._last_decoded = np.zeros(n_slots, np.int64)
+            self._admitted_at = np.zeros(n_slots, np.int64)
+            self._resident_since = np.zeros(n_slots, np.int64)
+            self._chunks_done = np.zeros(n_slots, np.int64)
+            self._admit_clock = 0
+            self.preempt_quantum = max(1, preempt_quantum)
+            if self.chunked:
+                if token_budget is None:
+                    token_budget = n_slots + 4 * pool.page_tokens
+                if token_budget <= n_slots:
+                    raise ValueError(
+                        f"token_budget ({token_budget}) must exceed n_slots "
+                        f"({n_slots}): decode tokens are packed first, so a "
+                        "smaller budget could never schedule a prefill chunk")
+                self.token_budget = int(token_budget)
+
+    # -- host API ----------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        req.t_submit = time.perf_counter()
+        req.t_first = 0.0
+        req.prefill_pos = 0
+        req.tokens_out = []
+        req.t_tokens = []
+        return self.mailbox.put(req)
+
+    @property
+    def idle(self) -> bool:
+        """True when nothing is resident, queued, or in flight."""
+        return (not self.active and not self.prefilling
+                and not self.prefilled_wait and len(self.mailbox) == 0
+                and getattr(self, "_pending_swapin", None) is None)
+
+    def step(self) -> List[Request]:
+        """One engine iteration. Chunked mode: the unified token-budgeted
+        step, flushed with exactly one host transfer of sampled ids.
+        Otherwise: one admission pass + (if anything is resident) one decode
+        dispatch, each phase flushed once. Returns the requests that
+        finished this iteration."""
+        self._finished = []
+        decoded = False
+        if self.chunked:
+            decoded = self._step_chunked()
+            self._flush_tokens()
+        elif self.paged:
+            self._admit_paged()
+            self._flush_tokens()
+            if self.active:
+                self._dispatch_decode_paged()
+                self._flush_tokens()
+                decoded = True
+        else:
+            self._admit()
+            self._flush_tokens()
+            if self.active:
+                self._dispatch_decode_dense()
+                self._flush_tokens()
+        if self.tiered and decoded:
+            # double-buffer: with this step's releases applied, start the
+            # head-of-queue resume's host→dev DMAs now; they overlap the
+            # upcoming admission pass and land at the top of the next step
+            self._start_prefetch()
+        return self._finished
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            finished.extend(self.step())
+        return finished
+
+    # -- deferred token materialisation ------------------------------------
+    def _queue_fetch(self, ids_dev, consumer: Callable) -> None:
+        self._fetch_queue.append((ids_dev, consumer))
+
+    def _flush_tokens(self) -> None:
+        """Materialise every queued id array in one device→host transfer and
+        run the value-dependent completions in dispatch order."""
+        if not self._fetch_queue:
+            return
+        queue, self._fetch_queue = self._fetch_queue, []
+        vals = self.executor.fetch_token_ids([a for a, _ in queue])
+        for (_, consumer), v in zip(queue, vals):
+            consumer(v)
+
+    def _emit(self, req: Request, tok: int) -> None:
+        req.tokens_out.append(tok)
+        now = time.perf_counter()
+        if req.t_first == 0.0:
+            req.t_first = now
+            self.stats["ttft_s"].append(now - req.t_submit)
+        req.t_tokens.append(now)
+
+    # -- dense path --------------------------------------------------------
+    def _admit(self):
+        while True:
+            free = int(np.sum(self.pool.seq_ids < 0))
+            if free == 0:
+                break
+            reqs = self.mailbox.drain(1)
+            if not reqs:
+                break
+            req = reqs[0]
+            slot = self.pool.alloc_slot(req.seq_id)
+            L = len(req.prompt)
+            toks = np.zeros((self.pool.n_slots, L), np.int32)
+            toks[slot] = req.prompt
+            tok_dev, self.pool.caches = self.executor.prefill_slot(
+                jnp.asarray(toks), self.pool.caches, slot, L)
+            self._queue_fetch(
+                tok_dev, lambda v, req=req: self._emit(req, int(v[0])))
+            req.prefill_pos = L
+            self.pool.lengths[slot] = L + 1
+            self.active[slot] = req
+            self.stats["queue_lat_s"].append(
+                time.perf_counter() - req.t_submit)
+            self.stats["prefills"] += 1
+
+    def _dispatch_decode_dense(self):
+        B = self.pool.n_slots
+        toks = np.zeros((B, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.tokens_out[-1]
+        # single shared cache_pos: slots decode at their own lengths; we use
+        # per-slot validity masks inside attention, so pass max length
+        pos = int(self.pool.lengths.max()) - 1
+        ids_dev, self.pool.caches = self.executor.decode_dense(
+            jnp.asarray(toks), self.pool.caches, jnp.asarray(pos, jnp.int32))
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(self.active)
+        self.stats["batch_occupancy"].append(len(self.active) / B)
+        slots = list(self.active)
+        self._queue_fetch(
+            ids_dev, lambda v, slots=slots: self._finish_decode_dense(slots, v))
+
+    def _finish_decode_dense(self, slots: List[int], vals: np.ndarray):
+        for slot in slots:
+            req = self.active[slot]
+            self._emit(req, int(vals[slot]))
+            self.pool.lengths[slot] += 1
+            if len(req.tokens_out) >= req.max_new or \
+               self.pool.lengths[slot] >= self.pool.max_seq - 1:
+                req.done = True
+                self._finished.append(req)
+                del self.active[slot]
+                self.pool.free_slot(slot)
+
+    # -- paged scheduling state --------------------------------------------
+    def _activate(self, slot: int, req: Request, first_admit: bool):
+        self._admit_clock += 1
+        self._admitted_at[slot] = self._admit_clock
+        self._last_decoded[slot] = self.stats["decode_steps"]
+        self._resident_since[slot] = self.stats["decode_steps"]
+        self._chunks_done[slot] = 0
+        if self.chunked and req.prefill_pos < len(req.prompt):
+            self.prefilling[slot] = req
+        elif self.chunked and not self.pool.has_decode_reservation(
+                req.seq_id, len(req.prompt), req.max_new):
+            self.prefilled_wait[slot] = req
+        else:
+            self.active[slot] = req
+        if first_admit:
+            self.stats["queue_lat_s"].append(
+                time.perf_counter() - req.t_submit)
+
+    def _pick_victim(self, exclude: Optional[int] = None) -> Optional[int]:
+        """LRU preemption victim: least-recently-decoded resident, oldest
+        admission breaking ties (all residents decode together, so the
+        tie-break usually decides). A decoding resident is exempt until it
+        has decoded ``preempt_quantum`` steps in its current residency, and a
+        mid-prefill resident until it has landed one chunk — every admitted
+        sequence makes progress before it can be evicted again, which is
+        what guarantees the rotation terminates."""
+        candidates = dict(self.active)
+        if self.chunked:
+            candidates.update(self.prefilled_wait)
+            candidates.update(self.prefilling)
+        best, best_key = None, None
+        for slot in candidates:
+            if slot == exclude:
+                continue
+            if slot in self.active and \
+               self.stats["decode_steps"] - self._resident_since[slot] \
+               < self.preempt_quantum:
+                continue
+            if slot in self.prefilling and self._chunks_done[slot] == 0:
+                continue
+            if not self.pool.can_swap_out(slot):
+                continue
+            key = (self._last_decoded[slot], self._admitted_at[slot])
+            if best_key is None or key < best_key:
+                best, best_key = slot, key
+        return best
+
+    def _preempt_until(self, can_fit, exclude: Optional[int] = None) -> bool:
+        """Evict LRU residents to host DRAM until ``can_fit()`` passes.
+        Returns False (leaving partial evictions in place — their capacity
+        stays freed) when no eligible victim remains."""
+        while not can_fit():
+            victim = self._pick_victim(exclude)
+            if victim is None:
+                return False
+            vreq = self.active.pop(victim, None)
+            if vreq is None:
+                vreq = self.prefilling.pop(victim, None)
+                if vreq is not None:
+                    self.stats["preempted_mid_prefill"] += 1
+                else:
+                    vreq = self.prefilled_wait.pop(victim)
+            self.pool.swap_out(victim)
+            # back of the queue: the waiting request goes first, the victim
+            # resumes in FIFO turn (front-requeue only if the mailbox is
+            # full — never lose a request)
+            if not self.mailbox.put(vreq):
+                self.mailbox.requeue(vreq)
+            self.stats["preemptions"] += 1
+            self._sync_swap_stats()
+        return True
+
+    def _sync_swap_stats(self):
+        self.stats["swap_out_count"] = self.pool.swap_out_count
+        self.stats["swap_in_count"] = self.pool.swap_in_count
+        self.stats["swap_out_bytes"] = self.pool.swap_out_bytes
+        self.stats["swap_in_bytes"] = self.pool.swap_in_bytes
+
+    def _finish_pending_swapin(self):
+        if self._pending_swapin is None:
+            return
+        req, token = self._pending_swapin
+        self._pending_swapin = None
+        slot = self.pool.swap_in_finish(token)
+        self._activate(slot, req, first_admit=False)
+        self._sync_swap_stats()
+
+    def _admit_paged(self):
+        """Admit by page availability: the drain stops at the first request
+        the pool cannot take (requeued at the front, FIFO preserved).
+
+        Untiered, a refusal *stalls* admission until a release frees
+        capacity — otherwise every decode step would drain/refuse/requeue the
+        same head request, inflating the refusal stat and churning the
+        mailbox lock. Tiered, a refusal instead preempts the LRU resident
+        (pages swap out to host DRAM) and the stall clears every pass:
+        decode steps expire residency quanta, so a retry can make progress —
+        only total-capacity exhaustion leaves the head waiting.
+
+        Chunked, admission reserves only the *prompt* pages (partial-prefill-
+        aware): the request enters ``self.prefilling`` and the step loop
+        slices its prompt into token-budgeted chunks; no prefill is
+        dispatched here."""
+        if self.tiered:
+            if not self.active:
+                # no decode step will run to land the prefetch — finish it
+                # here so the run loop always makes progress
+                self._finish_pending_swapin()
+            self._admit_stalled = False
+        if getattr(self, "_admit_stalled", False):
+            return
+        while True:
+            reqs = self.mailbox.drain(1)
+            if not reqs:
+                break
+            req = reqs[0]
+            if self.tiered and self.pool.is_cold(req.seq_id):
+                # resume path: restore the preempted sequence's pages from
+                # host DRAM (no re-prefill — its KV and tokens_out survive;
+                # a half-prefilled request resumes at its chunk offset)
+                if not self.pool.can_resume(req.seq_id) and \
+                   not self._preempt_until(
+                        lambda: self.pool.can_resume(req.seq_id)):
+                    self.mailbox.requeue(req)
+                    self.stats["admission_refusals"] += 1
+                    self._admit_stalled = True
+                    break
+                slot = self.pool.swap_in(req.seq_id)
+                self._activate(slot, req, first_admit=False)
+                self._sync_swap_stats()
+                continue
+            L = len(req.prompt)
+            if not self.pool.admissible_ever(L, req.max_new):
+                # could never fit even on an idle pool: reject outright so it
+                # doesn't head-of-line-block the drain forever
+                self.stats["rejected"] = self.stats.get("rejected", 0) + 1
+                continue
+            if self.chunked:
+                while True:
+                    # longest-cached-prefix lookup: the request adopts the
+                    # match's ref-counted pages and prefills only the
+                    # unshared suffix (re-matched after every eviction —
+                    # an evicted match page may have been freed)
+                    match = self._prefix_match(req)
+                    if self.pool.can_admit_prefill(
+                            L, req.max_new, len(match.pages), match.length):
+                        break
+                    # cache eviction can only fix a PAGE shortage; when the
+                    # refusal is slot-bound (or the request can never fit),
+                    # flushing the index would cost every future hit for
+                    # zero capacity — and only entries whose page actually
+                    # frees (refcount 1) are worth dropping
+                    if self.prefix is not None and \
+                            np.any(self.pool.seq_ids < 0) and \
+                            self.pool.admissible_ever(L, req.max_new) and \
+                            self.pool.evict_cached(1, require_free=True):
+                        continue   # reclaimed a cache-pinned page: retry
+                    if self.tiered and self._preempt_until(
+                            lambda: self.pool.can_admit_prefill(
+                                L, req.max_new, len(match.pages),
+                                match.length)):
+                        continue
+                    self.mailbox.requeue(req)
+                    self.stats["admission_refusals"] += 1
+                    self._admit_stalled = True
+                    match = None
+                    break
+                if match is None:
+                    break
+                slot = self.pool.admit_prefill(req.seq_id, L,
+                                               shared_pages=match.pages,
+                                               match_len=match.length)
+                if match.length:
+                    req.prefill_pos = match.length
+                    self.pool.lengths[slot] = match.length
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_shared_tokens"] += match.length
+                if match.first_token is not None:
+                    self.stats["prefix_full_hits"] += 1
+                    # exact full-prompt hit: the cached greedy continuation
+                    # IS this request's first token — prefill is skipped
+                    # entirely and the request promotes straight to decode
+                    self._emit(req, match.first_token)
+                self._activate(slot, req, first_admit=True)
+                continue
+            if not self.pool.can_admit(L, req.max_new):
+                if not (self.tiered and self._preempt_until(
+                        lambda: self.pool.can_admit(L, req.max_new))):
+                    self.mailbox.requeue(req)
+                    self.stats["admission_refusals"] += 1
+                    self._admit_stalled = True
+                    break
+            slot = self.pool.admit(req.seq_id, L, req.max_new)
+            # dense B=1 prefill over the prompt, cache padded to a page
+            # multiple, then scattered into this sequence's pages
+            S_p = self.pool.padded_len(L)
+            caches = transformer.init_caches(self.cfg, 1, S_p)
+            toks = jnp.asarray(req.prompt[None, :].astype(np.int32))
+            tok_dev, caches = self.executor.prefill_dense(toks, caches)
+            self.pool.write_prefill(slot, caches, L)
+            self._queue_fetch(
+                tok_dev, lambda v, req=req: self._emit(req, int(v[0])))
+            req.prefill_pos = L
+            self._activate(slot, req, first_admit=True)
+            self.stats["prefills"] += 1
+
+    def _prefix_match(self, req: Request) -> PrefixMatch:
+        """Prefix-cache lookup for a fresh request (no KV written yet). The
+        cached first token is honoured only on the greedy path — otherwise
+        the match is trimmed so at least one position is re-computed."""
+        if self.prefix is None or req.prefill_pos or req.tokens_out:
+            return PrefixMatch(length=0, pages=[])
+        m = self.pool.match(req.prompt)
+        if m.first_token is not None and not self.greedy:
+            length = min(m.length, len(req.prompt) - 1)
+            m = PrefixMatch(length=length,
+                            pages=m.pages[:self.pool.pages_for(length)])
+        return m
+
+    def _dispatch_decode_paged(self, slots: Optional[List[int]] = None):
+        if self.tiered:
+            # land the prefetch started at the end of the previous step: its
+            # host→dev DMA has been overlapping the admission pass (and any
+            # prefill dispatches) in between; the resumed slot joins this
+            # decode batch
+            self._finish_pending_swapin()
+        if slots is None:
+            slots = sorted(self.active)
+        B = self.pool.max_batch
+        toks = np.zeros((B, 1), np.int32)
+        mask = np.zeros(B, bool)
+        for slot in slots:
+            req = self.active[slot]
+            toks[slot, 0] = req.tokens_out[-1]
+            mask[slot] = True
+            # a shared page at the write position is COW-forked before the
+            # divergent write (first decode after a full-prefix hit, or a
+            # donor decoding into its cache-shared tail page); the fork page
+            # was pre-reserved, so neither call below can fail
+            if self.prefix is not None and self.pool.cow_unshare(
+                    slot, int(self.pool.lengths[slot])):
+                self.stats["cow_forks"] += 1
+            # map the write position (lengths[slot]) before dispatch; the
+            # decode reservation guarantees this never fails
+            self.pool.ensure(slot, int(self.pool.lengths[slot]) + 1)
+        tables = jnp.asarray(self.pool.device_page_tables())
+        lengths = jnp.asarray(self.pool.lengths.astype(np.int32))
+        # mid-prefill / unpromoted slots are resident but must not decode
+        active = jnp.asarray(mask)
+        ids_dev, self.pool.pages = self.executor.decode_paged(
+            jnp.asarray(toks), self.pool.pages, tables, lengths, active)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(slots)
+        self.stats["batch_occupancy"].append(len(slots) / B)
+        for slot in slots:
+            self._last_decoded[slot] = self.stats["decode_steps"]
+        used = self.pool.used_bytes()
+        self.stats["peak_used_bytes"] = max(
+            self.stats.get("peak_used_bytes", 0), used)
+        in_system = len(self.active) + len(self.prefilling) + \
+            len(self.prefilled_wait)
+        if self.tiered:
+            # an in-flight prefetch stays in cold_seqs() until it lands, so
+            # the cold count already covers it — no separate pending term
+            in_system += len(self.pool.cold_seqs())
+            self.stats["peak_host_bytes"] = max(
+                self.stats.get("peak_host_bytes", 0),
+                self.pool.host_used_bytes())
+        self.stats["peak_in_system"] = max(
+            self.stats.get("peak_in_system", 0), in_system)
+        self._queue_fetch(
+            ids_dev,
+            lambda v, slots=list(slots): self._finish_decode_paged(slots, v))
+
+    def _finish_decode_paged(self, slots: List[int], vals: np.ndarray):
+        for slot in slots:
+            req = self.active[slot]
+            self._emit(req, int(vals[slot]))
+            self.pool.lengths[slot] += 1
+            # paged lengths count KV rows (dense counts rows + the pending
+            # token), hence the -2: both paths stop at the same stream length
+            if len(req.tokens_out) >= req.max_new or \
+               self.pool.lengths[slot] >= self.pool.max_seq - 2:
+                req.done = True
+                self._finished.append(req)
+                del self.active[slot]
+                self.pool.release(slot)
+                self._admit_stalled = False       # capacity freed: retry admits
+
+    def _start_prefetch(self):
+        """If the mailbox head is a preempted (cold) sequence the hot tier
+        can take right now, start its host→dev page DMAs; they are finished
+        (waited + scattered) at the top of the next decode step, so the
+        transfer overlaps the admission pass in between (AutoDMA's
+        load/execute phasing, lifted to the serving level)."""
+        if self._pending_swapin is not None or not self.pool.cold_seqs():
+            return
+        head = self.mailbox.drain(1)
+        if not head:
+            return
+        req = head[0]
+        if self.pool.is_cold(req.seq_id) and self.pool.can_resume(req.seq_id):
+            self._pending_swapin = (req, self.pool.swap_in_start(req.seq_id))
+        else:
+            self.mailbox.requeue(req)
+
+    # -- chunked prefill: the unified token-budgeted step ------------------
+    def _step_chunked(self) -> bool:
+        """One unified engine iteration (continuous batching with chunked
+        prefill):
+
+          1. land any in-flight swap-in prefetch (tiered),
+          2. admission pass — prompt-only page reservations,
+          3. promote prefilled waiters whose decode worst case now fits,
+          4. pack the token budget: one decode token per decoding stream
+             first, then fair-share the remainder over mid-prefill residents
+             as prompt chunks,
+          5. dispatch the chunks, then one decode step over the streams.
+
+        A request whose whole prompt fits in the leftover budget is admitted,
+        prefilled, and streams its first token within this single iteration —
+        it never queues behind another request's whole prefill. Returns True
+        iff a decode step was dispatched."""
+        if self.tiered:
+            self._finish_pending_swapin()
+        self._admit_paged()
+        self._promote_waiters()
+        decode_slots = sorted(self.active)
+        mid_prefill = sorted(int(r.seq_id) for r in self.prefilling.values())
+        chunks = self._pack_chunks(self.token_budget - len(decode_slots))
+        for slot, req, start, size in chunks:
+            self._run_chunk(slot, req, start, size)
+        if decode_slots:
+            self._dispatch_decode_paged(decode_slots)
+        self.stats["iter_log"].append({
+            "decode_tokens": len(decode_slots),
+            "prefill_tokens": int(sum(c[3] for c in chunks)),
+            "chunks": [(int(r.seq_id), int(start), int(size))
+                       for _, r, start, size in chunks],
+            "mid_prefill": mid_prefill,
+        })
+        return bool(decode_slots)
+
+    def _pack_chunks(self, budget_left: int
+                     ) -> List[Tuple[int, Request, int, int]]:
+        """Fair-share the post-decode budget over mid-prefill residents in
+        admission order: whenever the remainder covers them all, every one
+        makes progress, and the shortest remaining prompt finishes first
+        within its share — a short request admitted this iteration starts
+        streaming this iteration instead of queueing behind a long prefill."""
+        if budget_left <= 0 or not self.prefilling:
+            return []
+        order = sorted(self.prefilling, key=lambda s: self._admitted_at[s])
+        remaining = {s: len(self.prefilling[s].prompt)
+                     - self.prefilling[s].prefill_pos for s in order}
+        share = dict.fromkeys(order, 0)
+        left = budget_left
+        while left > 0:
+            live = [s for s in order if share[s] < remaining[s]]
+            if not live:
+                break
+            quantum = max(1, left // len(live))
+            for s in live:
+                take = min(quantum, remaining[s] - share[s], left)
+                share[s] += take
+                left -= take
+                if left == 0:
+                    break
+        return [(s, self.prefilling[s], self.prefilling[s].prefill_pos,
+                 share[s]) for s in order if share[s] > 0]
+
+    def _run_chunk(self, slot: int, req: Request, start: int, size: int):
+        """Dispatch one prompt chunk ``[start, start+size)``: its KV lands in
+        the slot's already-reserved pages; when the chunk completes the
+        prompt, its sampled first token is queued for this iteration's flush
+        (emission + prefix insertion + promotion run once the value lands)."""
+        if self.prefix is not None and self.pool.cow_unshare(slot, start):
+            # the first chunk after a mid-page prefix match diverges inside
+            # the shared partially-filled page: fork it before the write
+            self.stats["cow_forks"] += 1
+        table_row = jnp.asarray(self.pool.page_table_row(slot))
+        toks = jnp.asarray(
+            req.prompt[start:start + size][None, :].astype(np.int32))
+        tok_dev, self.pool.pages = self.executor.prefill_chunk(
+            toks, self.pool.pages, table_row, jnp.asarray(start, jnp.int32))
+        req.prefill_pos = start + size
+        self.pool.lengths[slot] = req.prefill_pos
+        self._chunks_done[slot] += 1
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_chunk_tokens"] += size
+        if req.prefill_pos >= len(req.prompt):
+            self._queue_fetch(
+                tok_dev,
+                lambda v, slot=slot, req=req:
+                    self._finish_chunk_prefill(slot, req, int(v[0])))
+
+    def _finish_chunk_prefill(self, slot: int, req: Request, tok: int):
+        """Prompt completed: stream the first token, index the prompt in the
+        prefix cache, and attempt promotion to the decode set."""
+        self._emit(req, tok)
+        del self.prefilling[slot]
+        self.stats["prefills"] += 1
+        if self.prefix is not None and self.greedy:
+            # index the completed prompt: its pages become claimable by
+            # later arrivals, its greedy first token makes an exact
+            # re-arrival skip prefill entirely
+            self.pool.insert(req.seq_id, req.prompt, tok)
+        if self.pool.reserve_decode(req.seq_id, len(req.prompt),
+                                    req.max_new):
+            self.active[slot] = req
+        else:
+            self.prefilled_wait[slot] = req
+
+    def _promote_waiters(self):
+        """FIFO promotion of prefilled waiters into the decode set: top the
+        reservation up to the decode worst case. Tiered, a blocked head may
+        preempt LRU residents. When nothing is decoding or prefilling (so no
+        release can ever arrive) the youngest waiter is evicted and
+        re-prefills later — the oldest always eventually promotes
+        (``admissible_ever`` bounds its worst case by the pool size)."""
+        while True:
+            order = sorted(self.prefilled_wait,
+                           key=lambda s: self._admitted_at[s])
+            if not order:
+                return
+            head = order[0]
+            req = self.prefilled_wait[head]
+            L = len(req.prompt)
+            ok = self.pool.reserve_decode(req.seq_id, L, req.max_new)
+            if not ok and self.prefix is not None:
+                # reclaim cache-pinned pages before escalating to preemption
+                # (require_free: dropping a still-adopted page frees nothing)
+                while not self.pool.can_reserve_decode(
+                        req.seq_id, L, req.max_new) and \
+                        self.pool.evict_cached(1, require_free=True):
+                    pass
+                ok = self.pool.reserve_decode(req.seq_id, L, req.max_new)
+            if not ok and self.tiered:
+                ok = self._preempt_until(
+                    lambda: self.pool.can_reserve_decode(
+                        req.seq_id, L, req.max_new),
+                    exclude=head) and \
+                    self.pool.reserve_decode(req.seq_id, L, req.max_new)
+            if not ok and not self.active and not self.prefilling and \
+                    len(order) > 1:
+                self._evict_reprefill(order[-1])
+                continue
+            if not ok:
+                return
+            del self.prefilled_wait[head]
+            self.active[head] = req
+
+    def _evict_reprefill(self, slot: int):
+        """Promotion-deadlock breaker (untiered, or tiered with the host
+        budget exhausted): drop the youngest waiter's KV and requeue it — it
+        re-prefills from scratch later. Greedy streams are deterministic per
+        request, so the recomputed prefix is bit-identical; the already-
+        emitted first token is retracted and re-derived."""
+        req = self.prefilled_wait.pop(slot)
+        self.pool.release(slot)
+        req.prefill_pos = 0
+        if req.tokens_out:
+            req.tokens_out.pop()
+            req.t_tokens.pop()
+        if req.t_first:
+            # the first token was retracted with its emission: drop its TTFT
+            # sample too, so the stat reflects the token the user will get
+            try:
+                self.stats["ttft_s"].remove(req.t_first - req.t_submit)
+            except ValueError:
+                pass
+            req.t_first = 0.0
+        self.mailbox.requeue(req)
+        self.stats["evictions_reprefill"] += 1
+        self._admit_stalled = False
+
+    # -- hero_perf-style counter summary ----------------------------------
+    def stats_summary(self) -> Dict[str, Any]:
+        """Engine counters in report form: occupancy, swap traffic,
+        preemptions, chunked-prefill token split, host-transfer counts,
+        queue-latency percentiles (submit → admission) and TTFT percentiles
+        (submit → first token). Every aggregate is guarded for the
+        empty-engine case — a fresh or idle engine reports zeros, never a
+        numpy error."""
+        occ = self.stats.get("batch_occupancy") or []
+        lat = sorted(self.stats.get("queue_lat_s") or [])
+        ttft = sorted(self.stats.get("ttft_s") or [])
+        out = {
+            "decode_steps": self.stats.get("decode_steps", 0),
+            "prefills": self.stats.get("prefills", 0),
+            "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
+            "admission_refusals": self.stats.get("admission_refusals", 0),
+            "preemptions": self.stats.get("preemptions", 0),
+            "preempted_mid_prefill": self.stats.get("preempted_mid_prefill", 0),
+            "evictions_reprefill": self.stats.get("evictions_reprefill", 0),
+            "swap_out_count": self.stats.get("swap_out_count", 0),
+            "swap_in_count": self.stats.get("swap_in_count", 0),
+            "swap_out_bytes": self.stats.get("swap_out_bytes", 0),
+            "swap_in_bytes": self.stats.get("swap_in_bytes", 0),
+            "prefill_chunks": self.stats.get("prefill_chunks", 0),
+            "prefill_chunk_tokens": self.stats.get("prefill_chunk_tokens", 0),
+            "decode_tokens": self.stats.get("decode_tokens", 0),
+            "cow_forks": self.stats.get("cow_forks", 0),
+            "prefix_hits": self.stats.get("prefix_hits", 0),
+            "prefix_full_hits": self.stats.get("prefix_full_hits", 0),
+            "prefix_shared_tokens": self.stats.get("prefix_shared_tokens", 0),
+            "peak_used_bytes": self.stats.get("peak_used_bytes", 0),
+            "peak_host_bytes": self.stats.get("peak_host_bytes", 0),
+            "peak_in_system": self.stats.get("peak_in_system", 0),
+            "token_fetches": self.executor.stats.get("token_fetches", 0),
+            "tokens_fetched": self.executor.stats.get("tokens_fetched", 0),
+            "tp": self.executor.tp,
+        }
+        if self.chunked:
+            iters = self.stats.get("iter_log") or []
+            out["token_budget"] = self.token_budget
+            out["max_iter_tokens"] = max(
+                (e["decode_tokens"] + e["prefill_tokens"] for e in iters),
+                default=0)
+        if self.prefix is not None:
+            out.update(self.prefix.stats())
+        for p in (50, 90, 99):
+            out[f"queue_lat_p{p}_s"] = (
+                float(np.percentile(lat, p)) if lat else 0.0)
+            out[f"ttft_p{p}_s"] = (
+                float(np.percentile(ttft, p)) if ttft else 0.0)
+        return out

@@ -25,7 +25,7 @@ tests/test_paged_kvcache.py):
   * This module owns **cross-tier residency** — which sequences live in host
     DRAM, their swap records, and the DMA traffic. Hot-tier page accounting
     stays in the wrapped PagedCachePool; eviction *policy* (victim choice)
-    stays in serve/engine.py.
+    stays in serve/scheduler.py.
   * A sequence is resident in exactly one tier; hot pages never
     double-allocate; releasing everything restores both the page pool and
     the L3 arena.
@@ -49,6 +49,7 @@ import numpy as np
 from repro.core import dma, heromem, vmm
 from repro.models import transformer
 from repro.serve import paged_step
+from repro.serve import kvcache
 from repro.serve.kvcache import PagedCachePool
 
 
@@ -79,28 +80,36 @@ class PendingSwapIn:
     handles: List[List[Dict[str, dma.TransferHandle]]]
 
 
-class TieredCachePool:
+class TieredCachePool(kvcache.CacheLayer):
     """Two-tier paged KV pool: HBM hot tier + host-DRAM cold tier.
 
-    Wraps a :class:`PagedCachePool` and adds page-granular swap. The engine
-    sees the hot pool's interface (admit/ensure/release/device_page_tables/
-    write_prefill) plus the swap ops; admission becomes two-level — a request
-    refused by the hot tier may still enter the system by preempting a
-    resident sequence into host DRAM (the engine's policy; this class only
-    enforces capacity on both tiers).
+    A :class:`repro.serve.kvcache.CacheLayer` over a :class:`PagedCachePool`:
+    the whole hot-pool interface (admission, reservations, ``ensure``,
+    ``release``, device views — including ``admissible_ever``, which is a
+    *hot-tier* question: a sequence must fit entirely in HBM while it
+    decodes, whatever the cold tier holds) falls through the generic layer
+    delegation; this class adds only what tiering *changes* — page-granular
+    swap and the cold-tier residency guards. Admission becomes two-level: a
+    request refused by the hot tier may still enter the system by preempting
+    a resident sequence into host DRAM (the scheduler's policy; this class
+    only enforces capacity on both tiers).
     """
 
-    def __init__(self, cfg: transformer.ModelConfig, max_batch: int,
-                 max_seq: int, n_pages: int, page_tokens: int = 16,
+    def __init__(self, cfg: Optional[transformer.ModelConfig] = None,
+                 max_batch: int = 0, max_seq: int = 0, n_pages: int = 0,
+                 page_tokens: int = 16,
                  host_budget_bytes: Optional[int] = None, dtype=None,
-                 hero: Optional[heromem.HeroMemory] = None):
-        self.hot = PagedCachePool(cfg, max_batch=max_batch, max_seq=max_seq,
-                                  n_pages=n_pages, page_tokens=page_tokens,
-                                  dtype=dtype)
+                 hero: Optional[heromem.HeroMemory] = None,
+                 inner: Optional[PagedCachePool] = None):
+        if inner is None:
+            inner = PagedCachePool(cfg, max_batch=max_batch, max_seq=max_seq,
+                                   n_pages=n_pages, page_tokens=page_tokens,
+                                   dtype=dtype)
+        super().__init__(inner)
         if host_budget_bytes is None:
             # default: an 8×-the-hot-pool cold tier (the o1heap pow2
             # rounding makes the budget conservative, so size generously)
-            host_budget_bytes = 8 * n_pages * self.hot.alloc.page_bytes
+            host_budget_bytes = 8 * inner.alloc.n_pages * inner.alloc.page_bytes
         self.hero = hero or heromem.HeroMemory(l3_bytes=host_budget_bytes)
         self._cold: Dict[int, ColdSeq] = {}
         self.swap_out_count = 0
@@ -108,68 +117,17 @@ class TieredCachePool:
         self.swap_out_bytes = 0
         self.swap_in_bytes = 0
 
-    # -- hot-pool delegation (the engine's existing paged interface) -------
     @property
-    def cfg(self):
-        return self.hot.cfg
+    def hot(self) -> PagedCachePool:
+        """The wrapped hot-tier pool (historical name for ``inner``)."""
+        return self.inner
 
-    @property
-    def max_batch(self):
-        return self.hot.max_batch
-
-    @property
-    def max_seq(self):
-        return self.hot.max_seq
-
-    @property
-    def page_tokens(self):
-        return self.hot.page_tokens
-
-    @property
-    def alloc(self):
-        return self.hot.alloc
-
-    @property
-    def pages(self):
-        return self.hot.pages
-
-    @pages.setter
-    def pages(self, v):
-        self.hot.pages = v
-
-    @property
-    def seq_ids(self):
-        return self.hot.seq_ids
-
-    @property
-    def lengths(self):
-        return self.hot.lengths
-
-    def pages_for(self, n_tokens: int) -> int:
-        return self.hot.pages_for(n_tokens)
-
-    def padded_len(self, n_tokens: int) -> int:
-        return self.hot.padded_len(n_tokens)
-
-    def admissible_ever(self, prompt_len: int, max_new: int) -> bool:
-        # per-request feasibility is a *hot-tier* question: a sequence must
-        # fit entirely in HBM while it decodes, whatever the cold tier holds
-        return self.hot.admissible_ever(prompt_len, max_new)
-
-    def can_admit(self, prompt_len: int, max_new: int) -> bool:
-        return self.hot.can_admit(prompt_len, max_new)
-
+    # -- cold-tier admission guards ----------------------------------------
     def admit(self, seq_id: int, prompt_len: int, max_new: int) -> int:
         if seq_id in self._cold:
             raise ValueError(f"tiered KV: seq_id {seq_id} is resident in the "
                              "cold tier (resume it, don't re-admit)")
         return self.hot.admit(seq_id, prompt_len, max_new)
-
-    # chunked prefill: partial-prefill-aware admission + promotion gate
-    def can_admit_prefill(self, prompt_len: int, max_new: int,
-                          n_shared_pages: int = 0, match_len: int = 0) -> bool:
-        return self.hot.can_admit_prefill(prompt_len, max_new,
-                                          n_shared_pages, match_len)
 
     def admit_prefill(self, seq_id: int, prompt_len: int,
                       shared_pages: Optional[List[int]] = None,
@@ -180,48 +138,6 @@ class TieredCachePool:
         return self.hot.admit_prefill(seq_id, prompt_len,
                                       shared_pages=shared_pages,
                                       match_len=match_len)
-
-    def reserve_extra(self, seq_id: int, n: int = 1) -> bool:
-        return self.hot.reserve_extra(seq_id, n)
-
-    def cow_unshare(self, slot: int, pos: int) -> bool:
-        return self.hot.cow_unshare(slot, pos)
-
-    def can_reserve_decode(self, seq_id: int, prompt_len: int,
-                           max_new: int) -> bool:
-        return self.hot.can_reserve_decode(seq_id, prompt_len, max_new)
-
-    def reserve_decode(self, seq_id: int, prompt_len: int,
-                       max_new: int) -> bool:
-        return self.hot.reserve_decode(seq_id, prompt_len, max_new)
-
-    def has_decode_reservation(self, seq_id: int, prompt_len: int,
-                               max_new: int) -> bool:
-        return self.hot.has_decode_reservation(seq_id, prompt_len, max_new)
-
-    def ensure(self, slot: int, n_tokens: int) -> None:
-        self.hot.ensure(slot, n_tokens)
-
-    def release(self, slot: int) -> None:
-        self.hot.release(slot)
-
-    def write_prefill(self, slot: int, caches, length: int) -> None:
-        self.hot.write_prefill(slot, caches, length)
-
-    def device_page_tables(self) -> np.ndarray:
-        return self.hot.device_page_tables()
-
-    def page_table_row(self, slot: int) -> np.ndarray:
-        return self.hot.page_table_row(slot)
-
-    def token_bytes(self) -> int:
-        return self.hot.token_bytes()
-
-    def footprint_bytes(self) -> int:
-        return self.hot.footprint_bytes()
-
-    def used_bytes(self) -> int:
-        return self.hot.used_bytes()
 
     # -- cold-tier state ---------------------------------------------------
     def is_cold(self, seq_id: int) -> bool:

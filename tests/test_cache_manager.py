@@ -1,0 +1,249 @@
+"""CacheManager conformance suite: one protocol, three stack compositions.
+
+The scheduler programs against repro.serve.cache.CacheManager; these tests
+pin the surface and its core accounting invariants for every composition a
+config can build — flat paged, tiered, and tiered+prefix — so a future
+layer (or a refactor of an existing one) can't drift from the contract:
+
+  * the protocol surface is present and reaches the right layer (generic
+    CacheLayer delegation, including the ``pages`` assignment path),
+  * random admit/reserve/ensure/release op sequences never leak pages,
+    reservations, or slots, and the allocator audit holds throughout,
+  * prefix refcounts close: after every sequence releases, the only
+    remaining references are the cache's (exactly one per cached page), and
+    clearing the cache restores the whole pool,
+  * the Engine flag shims still construct the equivalent layered stack (and
+    deprecation-warn, naming the config path).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serve import cache as cache_mod
+from repro.serve.cache import (CacheConfig, CacheManager, PrefixCachingPool,
+                               build_cache_manager)
+from repro.serve.kvcache import CacheLayer, PagedCachePool
+from repro.serve.tiering import TieredCachePool
+
+_CFG = configs.get_smoke_config("qwen2-0.5b")
+
+STACKS = {
+    "paged": CacheConfig(paged=True, page_tokens=4, n_pages=10),
+    "tiered": CacheConfig(tiered=True, page_tokens=4, n_pages=10,
+                          host_budget_bytes=1 << 16),
+    "tiered_prefix": CacheConfig(tiered=True, prefix=True, prefix_pages=4,
+                                 page_tokens=4, n_pages=10,
+                                 host_budget_bytes=1 << 16),
+}
+
+
+def _build(name, n_slots=3, max_seq=16):
+    return build_cache_manager(_CFG, STACKS[name], n_slots=n_slots,
+                               max_seq=max_seq)
+
+
+def _bottom(pool):
+    while isinstance(pool, CacheLayer):
+        pool = pool.inner
+    return pool
+
+
+# -- protocol surface --------------------------------------------------------
+@pytest.mark.parametrize("name", list(STACKS))
+def test_protocol_conformance(name):
+    pool = _build(name)
+    assert isinstance(pool, CacheManager)
+    # shared identity reaches the innermost pool through every layer
+    bottom = _bottom(pool)
+    assert isinstance(bottom, PagedCachePool)
+    assert pool.alloc is bottom.alloc
+    assert pool.seq_ids is bottom.seq_ids
+    assert pool.lengths is bottom.lengths
+    assert pool.cfg is bottom.cfg
+    assert pool.page_tokens == 4 and pool.max_batch == 3
+    # prefix is uniformly readable: a PrefixCache on the prefix stack, None
+    # elsewhere (the scheduler's one-attribute policy check)
+    if name == "tiered_prefix":
+        assert pool.prefix is not None
+    else:
+        assert pool.prefix is None
+
+
+def test_stack_composition_order():
+    pool = _build("tiered_prefix")
+    assert isinstance(pool, PrefixCachingPool)
+    assert isinstance(pool.inner, TieredCachePool)
+    assert isinstance(pool.inner.inner, PagedCachePool)
+    # legacy alias on the tiered layer still names the hot pool
+    assert pool.inner.hot is pool.inner.inner
+
+
+@pytest.mark.parametrize("name", list(STACKS))
+def test_pages_assignment_reaches_bottom(name):
+    """``pool.pages = v`` must update the innermost pool's arrays (the
+    engine assigns after every device step) — a plain attribute on a
+    wrapper would silently fork the cache state."""
+    pool = _build(name)
+    new = pool.pages                   # same pytree object round-trips
+    pool.pages = new
+    assert _bottom(pool).pages is new
+    assert "pages" not in vars(pool) or isinstance(pool, PagedCachePool)
+
+
+# -- no-leak random-op property ----------------------------------------------
+def _active_slots(pool):
+    return [s for s in range(pool.max_batch) if pool.seq_ids[s] >= 0]
+
+
+def _check_closed(pool, name):
+    """Drained-stack invariant: everything released, nothing leaked."""
+    assert pool.alloc._seq_pages == {}
+    assert (np.asarray(pool.seq_ids) == -1).all()
+    assert pool._reserved == {}        # delegates to the innermost pool
+    pool.alloc.audit()
+    if pool.prefix is None:
+        assert pool.alloc.free_pages == pool.alloc.n_pages
+    else:
+        cached = pool.prefix.cached_pages()
+        assert len(cached) == len(set(cached)) == pool.prefix.held_pages
+        assert all(pool.alloc.refcount(p) == 1 for p in cached)
+        assert pool.alloc.free_pages == pool.alloc.n_pages - len(cached)
+        pool.prefix.clear()
+        assert pool.prefix.held_pages == 0
+        assert pool.alloc.free_pages == pool.alloc.n_pages
+        pool.alloc.audit()
+
+
+@pytest.mark.parametrize("name", list(STACKS))
+def test_random_ops_never_leak(name):
+    """Seeded random admit_prefill/reserve_decode/ensure/insert/release mix:
+    page accounting closes at drain for every stack composition."""
+    rng = np.random.default_rng(7)
+    for case in range(3):
+        pool = _build(name)
+        sid, live, lens = 100 * case, {}, {}
+        for _ in range(60):
+            op = int(rng.integers(0, 5))
+            acts = _active_slots(pool)
+            if op == 0:                                    # admit (prefill)
+                L, new = int(rng.integers(1, 12)), int(rng.integers(0, 5))
+                if pool.can_admit_prefill(L, new):
+                    slot = pool.admit_prefill(sid, L)
+                    live[slot] = (sid, L, new)
+                    pool.lengths[slot] = L
+                    sid += 1
+            elif op == 1 and acts:                          # promote
+                slot = acts[int(rng.integers(0, len(acts)))]
+                if slot in live:
+                    s, L, new = live[slot]
+                    pool.reserve_decode(s, L, new)
+            elif op == 2 and acts:                          # grow
+                slot = acts[int(rng.integers(0, len(acts)))]
+                if slot in live:
+                    s, L, new = live[slot]
+                    if pool.has_decode_reservation(s, L, new):
+                        tgt = min(int(pool.lengths[slot]) + 1,
+                                  min(L + max(new, 1), pool.max_seq))
+                        if tgt > int(pool.lengths[slot]):
+                            pool.ensure(slot, tgt)          # must never fail
+                            pool.lengths[slot] = tgt
+            elif op == 3 and acts and pool.prefix is not None:  # index
+                slot = acts[int(rng.integers(0, len(acts)))]
+                if slot in live:
+                    s, L, _ = live[slot]
+                    prompt = lens.setdefault(
+                        s, rng.integers(0, _CFG.vocab, L).astype(np.int32))
+                    pool.insert(s, prompt, int(rng.integers(0, _CFG.vocab)))
+            elif op == 4 and acts:                          # release
+                slot = acts[int(rng.integers(0, len(acts)))]
+                pool.release(slot)
+                live.pop(slot, None)
+            pool.alloc.audit()
+        for slot in _active_slots(pool):
+            pool.release(slot)
+        _check_closed(pool, name)
+
+
+def test_prefix_refcount_closure_under_eviction():
+    """Cache-held pages survive their donor's release; evicting the cache
+    reference frees them; a still-adopted page never frees early."""
+    pool = _build("tiered_prefix", n_slots=3, max_seq=16)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, _CFG.vocab, 8).astype(np.int32)   # 2 full pages
+    a = pool.admit_prefill(0, len(prompt))
+    pool.lengths[a] = len(prompt)
+    pool.insert(0, prompt, first_token=5)
+    held = pool.prefix.held_pages
+    assert held >= 2
+    m = pool.match(prompt)
+    assert m.length == len(prompt) and m.first_token == 5
+    # a second sequence adopts the cached pages
+    b = pool.admit_prefill(1, len(prompt), shared_pages=m.pages,
+                           match_len=m.length)
+    for p in m.pages:
+        assert pool.alloc.refcount(p) >= 2
+    pool.release(a)
+    # donor gone: cache + adopter still hold the pages
+    for p in m.pages:
+        assert pool.alloc.refcount(p) == 2
+    # require_free eviction must not free adopted pages
+    assert pool.evict_cached(10, require_free=True) == 0
+    pool.release(b)
+    _check_closed(pool, "tiered_prefix")
+
+
+# -- Engine back-compat shims -------------------------------------------------
+def test_engine_flag_shims_build_layered_stack():
+    """Engine(paged=True, tiered=True, chunked_prefill=True,
+    prefix_cache=True) still constructs the equivalent layered stack and
+    emits a DeprecationWarning naming the new config path."""
+    import jax
+    from repro.models import blocks, transformer
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    cfg = configs.get_smoke_config("qwen2-0.5b",
+                                   compute_dtype=jax.numpy.float32)
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        eng = Engine(cfg, params, n_slots=2, max_seq=32, page_tokens=8,
+                     n_pages=12, paged=True, tiered=True,
+                     chunked_prefill=True, token_budget=8,
+                     prefix_cache=True, prefix_cache_pages=4)
+    assert isinstance(eng.pool, PrefixCachingPool)
+    assert isinstance(eng.pool.inner, TieredCachePool)
+    assert isinstance(eng.pool.inner.inner, PagedCachePool)
+    assert eng.paged and eng.tiered and eng.chunked
+    assert eng.prefix is not None and eng.token_budget == 8
+    # the shimmed engine still serves end-to-end
+    rng = np.random.default_rng(0)
+    eng.submit(Request(seq_id=0, prompt=rng.integers(0, cfg.vocab, 9)
+                       .astype(np.int32), max_new=2))
+    done = eng.run(200)
+    assert len(done) == 1 and len(done[0].tokens_out) == 2
+
+    # the config path is warning-free and produces the same stack shape
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng2 = Engine(cfg, params, config=EngineConfig(
+            n_slots=2, max_seq=32, chunked=True, token_budget=8,
+            cache=CacheConfig(page_tokens=8, n_pages=12, tiered=True,
+                              prefix=True, prefix_pages=4)))
+    assert type(eng2.pool) is type(eng.pool)
+
+
+def test_engine_config_implications():
+    """EngineConfig.normalized resolves the implied layers the way the flag
+    shims did: prefix ⇒ chunked ⇒ paged, tp ⇒ paged."""
+    from repro.serve.engine import EngineConfig
+
+    c = EngineConfig(cache=CacheConfig(prefix=True)).normalized()
+    assert c.chunked and c.paged and c.cache.any_paged
+    c = EngineConfig(chunked=True).normalized()
+    assert c.paged and c.cache.any_paged
+    c = EngineConfig(tp=2).normalized()
+    assert c.paged and c.cache.any_paged
+    c = EngineConfig().normalized()
+    assert not c.paged and not c.chunked

@@ -65,7 +65,7 @@ def test_grad_accum_matches_plain():
 
 @pytest.mark.slow  # subprocess CLI end-to-end
 @pytest.mark.parametrize("mode", ["dense", "paged", "tiered", "chunked",
-                                  "prefix"])
+                                  "prefix", "tp"])
 def test_serve_driver_cli(mode):
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -84,6 +84,14 @@ def test_serve_driver_cli(mode):
         # a shared 8-token system prompt → the 2nd/3rd requests must hit
         cmd += ["--prefix-cache", "--page-tokens", "8", "--token-budget", "8",
                 "--shared-prefix-len", "8", "--prompt-len", "2"]
+    elif mode == "tp":
+        # the tensor-parallel path needs ≥2 devices: force host devices in
+        # the subprocess (the qwen2 smoke config has n_kv=2, so tp=2 works)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=2"
+                            ).strip()
+        cmd += ["--tp", "2", "--chunked-prefill", "--page-tokens", "8",
+                "--token-budget", "6"]
     r = subprocess.run(cmd, env=env, capture_output=True, text=True,
                        timeout=400)
     assert "3 requests" in r.stdout, r.stdout + r.stderr
@@ -95,6 +103,8 @@ def test_serve_driver_cli(mode):
         assert "token budget 6" in r.stdout and "prefill chunks" in r.stdout
     elif mode == "prefix":
         assert "prefix hits" in r.stdout and "shared tokens" in r.stdout
+    elif mode == "tp":
+        assert "serve:tp2+chunked" in r.stdout, r.stdout + r.stderr
 
 
 def test_validate_bench_schema_roundtrip(tmp_path):
@@ -130,6 +140,13 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                          "prefill_token_reduction": 6.5, "ttft_speedup": 12.0,
                          "baseline": engine_stub("prefix_cache"),
                          "prefix": engine_stub("prefix_cache")},
+        "tensor_parallel": {"arch": "qwen2-0.5b", "n_kv": 4,
+                            "page_tokens": 8, "n_pages": 24, "n_slots": 4,
+                            "token_budget": 14, "requests": 8,
+                            "identical_streams": 1,
+                            "tp1": engine_stub("tensor_parallel"),
+                            "tp2": engine_stub("tensor_parallel"),
+                            "tp4": engine_stub("tensor_parallel")},
     }
     p = tmp_path / "BENCH_serve.json"
     p.write_text(json.dumps(good))
@@ -151,4 +168,5 @@ def test_validate_bench_schema_roundtrip(tmp_path):
     repo_bench = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_serve.json")
     assert validate(repo_bench) == []
-    assert set(SCHEMAS) == {"tiering", "chunked_prefill", "prefix_cache"}
+    assert set(SCHEMAS) == {"tiering", "chunked_prefill", "prefix_cache",
+                            "tensor_parallel"}

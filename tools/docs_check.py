@@ -13,7 +13,10 @@ Two checks, both cheap enough for the push-blocking tier:
    ``src/repro/core`` must open with a module docstring (ast-parsed, so a
    leading comment does not count). These modules document their ownership
    boundaries and invariants in the docstring; a new module without one is
-   a review failure the tooling should catch, not a human.
+   a review failure the tooling should catch, not a human. The serving
+   decomposition's three layer modules (scheduler/cache/executor) are
+   *registered by name*: renaming or deleting one fails the gate instead of
+   silently shrinking its coverage.
 
 Usage:  python tools/docs_check.py   (exit 1 on any failure)
 """
@@ -31,6 +34,15 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
 
 DOCSTRING_ROOTS = ("src/repro/serve", "src/repro/core")
+
+# the scheduler/cache-manager/executor decomposition: these modules must
+# exist (and, being under a DOCSTRING_ROOT, carry ownership docstrings)
+REQUIRED_MODULES = (
+    "src/repro/serve/scheduler.py",
+    "src/repro/serve/executor.py",
+    "src/repro/serve/cache.py",
+    "src/repro/serve/engine.py",
+)
 
 
 def _markdown_files():
@@ -64,6 +76,10 @@ def check_links() -> list:
 
 def check_docstrings() -> list:
     errors = []
+    for rel in REQUIRED_MODULES:
+        if not os.path.exists(os.path.join(REPO, rel)):
+            errors.append(f"{rel}: required serving-layer module is missing "
+                          "(scheduler/cache/executor decomposition)")
     for rel in DOCSTRING_ROOTS:
         root = os.path.join(REPO, rel)
         for dirpath, dirs, files in os.walk(root):
