@@ -38,7 +38,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import numpy as np
 
-from benchmarks.common import save_bench, save_json
+from benchmarks.common import pctl, save_bench, save_json
 from repro import configs
 from repro.models import blocks, transformer
 from repro.serve.engine import Engine, Request
@@ -81,8 +81,8 @@ def _metrics(done, late_ids, stream_ids):
         gaps += [b - a for a, b in zip(t, t[1:])]
     return {
         "ttft_mean_s": float(np.mean(ttft)),
-        "ttft_p99_s": float(np.percentile(ttft, 99)),
-        "decode_stall_p99_s": float(np.percentile(gaps, 99)) if gaps else 0.0,
+        "ttft_p99_s": pctl(ttft, 99),
+        "decode_stall_p99_s": pctl(gaps, 99),
         "decode_stall_max_s": float(np.max(gaps)) if gaps else 0.0,
         "streams": {r.seq_id % 100: list(r.tokens_out) for r in done},
     }

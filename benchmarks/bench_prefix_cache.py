@@ -32,7 +32,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import numpy as np
 
-from benchmarks.common import save_bench, save_json
+from benchmarks.common import pctl, save_bench, save_json
 from repro import configs
 from repro.models import blocks, transformer
 from repro.serve.engine import Engine, Request
@@ -79,7 +79,7 @@ def _metrics(done):
     ttft = [r.t_first - r.t_submit for r in done]
     return {
         "ttft_mean_s": float(np.mean(ttft)),
-        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "ttft_p99_s": pctl(ttft, 99),
         "streams": {r.seq_id % 100: list(r.tokens_out) for r in done},
     }
 

@@ -62,6 +62,15 @@ def modeled_time_s(flops: float, traffic_bytes: float,
             "dma_share": dma / (compute + dma)}
 
 
+def pctl(samples, p: float) -> float:
+    """Percentile over raw samples. Delegates to serve/metrics.py's
+    numpy-compatible :func:`~repro.serve.metrics.quantile` — the repo's ONE
+    quantile implementation (the benches used to carry their own
+    ``np.percentile`` calls; regression-pinned in tests/test_metrics.py)."""
+    from repro.serve.metrics import quantile
+    return quantile(sorted(samples), p)
+
+
 def wall(fn, *args, iters=2):
     import jax
     jax.block_until_ready(fn(*args))

@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
   §2      bench_tensor_parallel  tp ∈ {1,2,4} paged serving over forced host
                               devices — streams asserted bit-identical →
                               BENCH_serve.json ``tensor_parallel`` section
+  §2.4    bench_slo           SLO policy vs admission collapse — load
+                              shedding + ITL target on the oversubscribed
+                              tiered mix → BENCH_serve.json ``slo`` section
   (validate_bench checks the BENCH_serve.json schema after the benches)
 """
 from __future__ import annotations
@@ -31,14 +34,14 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_autodma, bench_chunked_prefill,
                             bench_complexity, bench_interconnect, bench_isa,
-                            bench_parallel, bench_prefix_cache,
+                            bench_parallel, bench_prefix_cache, bench_slo,
                             bench_tensor_parallel, bench_tiering,
                             bench_tiling, roofline_report, validate_bench)
     failures = []
     for mod in (bench_tiling, bench_parallel, bench_complexity,
                 bench_autodma, bench_interconnect, bench_isa,
                 roofline_report, bench_tiering, bench_chunked_prefill,
-                bench_prefix_cache, bench_tensor_parallel):
+                bench_prefix_cache, bench_tensor_parallel, bench_slo):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()

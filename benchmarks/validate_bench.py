@@ -47,6 +47,16 @@ SCHEMAS = {
         "identical_streams": _NUM,           # 1 = tp=2/4 streams == tp=1
         "tp1": dict, "tp2": dict, "tp4": dict,
     },
+    "slo": {
+        "arch": str, "hot_pages": _NUM, "page_tokens": _NUM, "n_slots": _NUM,
+        "requests": _NUM, "interactive_requests": _NUM,
+        "itl_target_s": _NUM, "itl_uncontended_p50_s": _NUM,
+        "baseline_refusals": _NUM, "slo_refusals": _NUM,
+        "shed_total": _NUM, "shed_overload": _NUM, "shed_deadline": _NUM,
+        "baseline_itl_p99_s": _NUM, "slo_itl_p99_s": _NUM,
+        "identical_streams": _NUM,           # 1 = admitted streams == ref
+        "reference": dict, "baseline": dict, "slo": dict,
+    },
 }
 # keys every per-engine sub-dict must carry with numeric values
 ENGINE_NUM_KEYS = {
@@ -59,6 +69,8 @@ ENGINE_NUM_KEYS = {
                      "prefill_chunk_tokens", "decode_tokens"),
     "tensor_parallel": ("devices", "wall_s", "tok_per_s", "decode_steps",
                         "decode_tokens"),
+    "slo": ("completed", "tokens", "wall_s", "tok_per_s", "decode_steps",
+            "admission_refusals", "shed", "itl_p50_s", "itl_p99_s"),
 }
 
 
@@ -83,7 +95,7 @@ def _check(errors, path, obj, schema):
 
 
 def validate(path: str, require=("tiering", "chunked_prefill",
-                                 "prefix_cache", "tensor_parallel")):
+                                 "prefix_cache", "tensor_parallel", "slo")):
     """Returns a list of error strings (empty = valid)."""
     errors = []
     try:
@@ -118,7 +130,7 @@ def main():
     ap.add_argument("path", nargs="?", default="BENCH_serve.json")
     ap.add_argument("--require", nargs="+",
                     default=["tiering", "chunked_prefill", "prefix_cache",
-                             "tensor_parallel"])
+                             "tensor_parallel", "slo"])
     args = ap.parse_args()
     errors = validate(args.path, require=tuple(args.require))
     if errors:

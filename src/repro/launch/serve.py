@@ -38,10 +38,25 @@ container, force host devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --chunked-prefill --tp 2 --requests 8
+
+Observability + SLO policy (PR 6): ``--metrics-log N`` prints one
+structured-JSON metrics-bus snapshot line every N engine iterations
+(``[metrics] {...}`` — counters/gauges/windowed histograms; see
+serve/metrics.py). ``--max-in-system``/``--max-queue`` attach the SLO
+policy's admission gate and load shedding, ``--itl-target-ms`` its
+decode-latency budget shaping, and ``--priorities`` cycles submitted
+requests through that many priority classes (highest class first out of
+the mailbox; see serve/policy.py). Shed requests are reported with their
+typed verdicts at the end of the run.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --tiered --pages 8 --requests 16 --max-in-system 4 --max-queue 4 \
+      --priorities 2 --metrics-log 16
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -51,6 +66,7 @@ from repro import configs
 from repro.models import blocks, transformer
 from repro.serve.cache import CacheConfig
 from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.policy import PolicyConfig
 
 
 def main():
@@ -96,17 +112,40 @@ def main():
                     help="tensor-parallel degree: shard KV pages + paged "
                          "attention over this many devices (kv-head axis; "
                          "implies --paged; streams bit-identical to --tp 1)")
+    ap.add_argument("--metrics-log", type=int, default=0, metavar="N",
+                    help="print a [metrics] JSON snapshot line every N "
+                         "engine iterations (0 = off)")
+    ap.add_argument("--max-in-system", type=int, default=None,
+                    help="SLO policy: cap concurrently-resident requests "
+                         "(admission gate; see serve/policy.py)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="SLO policy: cap the waiting line; the lowest-"
+                         "priority tail beyond it is shed with a typed "
+                         "verdict")
+    ap.add_argument("--itl-target-ms", type=float, default=None,
+                    help="SLO policy: decode inter-token-latency p99 target; "
+                         "prefill's budget share is squeezed while over it")
+    ap.add_argument("--priorities", type=int, default=0,
+                    help="cycle submitted requests through this many "
+                         "priority classes (0 = all default class)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
     params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
     params, _ = blocks.split_params(params_t)
+    policy = None
+    if (args.max_in_system is not None or args.max_queue is not None
+            or args.itl_target_ms is not None):
+        policy = PolicyConfig(
+            max_in_system=args.max_in_system, max_queue=args.max_queue,
+            itl_target_s=(args.itl_target_ms / 1000.0
+                          if args.itl_target_ms is not None else None))
     # the driver builds the declarative config directly (the Engine flag
     # kwargs still work but are the deprecated path)
     eng = Engine(cfg, params, config=EngineConfig(
         n_slots=args.slots, max_seq=args.max_seq,
         chunked=args.chunked_prefill, token_budget=args.token_budget,
-        preempt_quantum=args.preempt_quantum, tp=args.tp,
+        preempt_quantum=args.preempt_quantum, tp=args.tp, policy=policy,
         cache=CacheConfig(
             paged=args.paged or args.tp > 1, page_tokens=args.page_tokens,
             n_pages=args.pages, tiered=args.tiered,
@@ -123,8 +162,19 @@ def main():
         eng.submit(Request(
             seq_id=i,
             prompt=np.concatenate([shared, suffix]).astype(np.int32),
-            max_new=args.max_new))
-    done = eng.run(max_steps=10000)
+            max_new=args.max_new,
+            priority=(i % args.priorities if args.priorities else 0)))
+    if args.metrics_log > 0:
+        # manual step loop so the snapshot cadence tracks engine iterations
+        done, it = [], 0
+        while not eng.idle and it < 10000:
+            done.extend(eng.step())
+            it += 1
+            if it % args.metrics_log == 0:
+                print(f"[metrics] {json.dumps(eng.metrics_snapshot())}",
+                      flush=True)
+    else:
+        done = eng.run(max_steps=10000)
     wall = time.time() - t0
     total_new = sum(len(r.tokens_out) for r in done)
     occ = np.mean(eng.stats["batch_occupancy"]) if eng.stats["batch_occupancy"] else 0
@@ -160,6 +210,15 @@ def main():
               f"{s['prefill_chunks']} ({s['prefill_chunk_tokens']} tok), "
               f"decode tokens {s['decode_tokens']}, ttft p50/p99 "
               f"{s['ttft_p50_s']:.3f}/{s['ttft_p99_s']:.3f} s")
+    if policy is not None:
+        s = eng.stats_summary()
+        by_code = {}
+        for r in eng.shed:
+            by_code[r.verdict.code] = by_code.get(r.verdict.code, 0) + 1
+        codes = ", ".join(f"{c}: {n}" for c, n in sorted(by_code.items()))
+        print(f"[serve:slo] shed {s['shed']} ({codes or 'none'}), "
+              f"itl p50/p99 "
+              f"{s['itl_p50_s'] * 1e3:.1f}/{s['itl_p99_s'] * 1e3:.1f} ms")
     if args.tiered:
         s = eng.stats_summary()
         print(f"[serve:tiered] preemptions {s['preemptions']}, swap out "

@@ -120,6 +120,17 @@ class PrefixCachingPool(CacheLayer):
         """Index a completed prefill; returns pages newly cached."""
         return self.prefix.insert(self, seq_id, prompt, first_token)
 
+    def publish_metrics(self, bus) -> None:
+        """Prefix-reuse pressure onto the engine metrics bus: held pages,
+        insertions/evictions, and the hit-rate gauge (hits over admissions —
+        the scheduler publishes the hit counters it owns; this layer owns
+        the index-side view)."""
+        self.inner.publish_metrics(bus)
+        s = self.prefix.stats()
+        bus.set("prefix_held_pages", s["prefix_held_pages"])
+        bus.set_total("prefix_insertions", s["prefix_insertions"])
+        bus.set_total("prefix_evicted_pages", s["prefix_evicted_pages"])
+
     def evict_cached(self, n_pages: int = 1,
                      require_free: bool = False) -> int:
         """Release up to ``n_pages`` cache references (LRU leaves first)."""

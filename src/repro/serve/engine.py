@@ -38,6 +38,8 @@ from repro.models import transformer
 from repro.serve.cache import CacheConfig, build_cache_manager
 from repro.serve.executor import Executor
 from repro.serve.kvcache import CachePool
+from repro.serve.metrics import MetricsBus
+from repro.serve.policy import PolicyConfig, SchedulerPolicy
 from repro.serve.scheduler import Request, Scheduler  # noqa: F401 (Request
 #                                is re-exported — the public submit() type)
 
@@ -60,7 +62,11 @@ class EngineConfig:
     ``chunked`` selects the unified token-budgeted step loop (implies a
     paged cache); ``tp`` shards the executor's paged attention over that
     many devices (kv-head axis — see serve/executor.py). ``cache`` composes
-    the KV stack bottom-up."""
+    the KV stack bottom-up. ``metrics`` enables the per-iteration
+    :class:`~repro.serve.metrics.MetricsBus` (observe-only; disabling it
+    leaves engine outputs bit-identical); ``policy`` attaches an SLO
+    :class:`~repro.serve.policy.SchedulerPolicy` built from the given
+    :class:`~repro.serve.policy.PolicyConfig` (None = policy-free FIFO)."""
     n_slots: int = 4
     max_seq: int = 256
     greedy: bool = True
@@ -69,6 +75,8 @@ class EngineConfig:
     preempt_quantum: int = 1
     tp: int = 1
     cache: CacheConfig = CacheConfig()
+    metrics: bool = True
+    policy: Optional[PolicyConfig] = None
 
     @property
     def paged(self) -> bool:
@@ -145,12 +153,18 @@ class Engine:
             self.executor.shard_pool(pool)
         else:
             pool = CachePool(cfg, config.n_slots, config.max_seq)
+        self.bus = MetricsBus(enabled=config.metrics)
+        self.executor.bind_metrics(self.bus)
+        policy = None
+        if config.policy is not None:
+            policy = SchedulerPolicy(config.policy, bus=self.bus)
         self.scheduler = Scheduler(
             cfg, pool, self.executor, n_slots=config.n_slots,
             greedy=config.greedy, paged=config.paged,
             tiered=config.cache.tiered, chunked=config.chunked,
             token_budget=config.token_budget,
-            preempt_quantum=config.preempt_quantum)
+            preempt_quantum=config.preempt_quantum,
+            metrics=self.bus, policy=policy)
 
     # -- host API (delegates to the scheduler) -----------------------------
     def submit(self, req: Request) -> bool:
@@ -168,6 +182,20 @@ class Engine:
 
     def stats_summary(self) -> Dict[str, Any]:
         return self.scheduler.stats_summary()
+
+    def metrics_snapshot(self, ps=(50, 90, 99)) -> Dict[str, Any]:
+        """Structured-JSON view of the metrics bus (``{}`` when disabled)."""
+        return self.bus.snapshot(ps)
+
+    @property
+    def metrics(self) -> MetricsBus:
+        return self.bus
+
+    @property
+    def shed(self) -> List[Request]:
+        """Requests the policy rejected, each carrying a typed
+        :class:`~repro.serve.policy.ShedVerdict` on ``.verdict``."""
+        return self.scheduler.shed
 
     # -- introspection shims (tests, benches, drivers) ---------------------
     @property

@@ -101,6 +101,7 @@ class Executor:
         self.tp = int(tp)
         self.interpret = interpret
         self.stats = {"token_fetches": 0, "tokens_fetched": 0}
+        self.bus = None     # MetricsBus, attached by the Engine facade
         if self.tp > 1 and not paged:
             raise ValueError("tensor parallelism requires the paged serving "
                              "path (dense slot caches are not head-sharded)")
@@ -237,6 +238,11 @@ class Executor:
         pool.pages = jax.tree_util.tree_map(
             lambda a: jax.device_put(a, ns), pool.pages)
 
+    def bind_metrics(self, bus) -> None:
+        """Attach the engine's MetricsBus; the executor mirrors its transfer
+        counters onto it (observe-only — dispatch behaviour is unchanged)."""
+        self.bus = bus
+
     # -- the one device→host transfer --------------------------------------
     def fetch_token_ids(self, arrays: Sequence[jax.Array]
                         ) -> List[np.ndarray]:
@@ -251,6 +257,9 @@ class Executor:
         self.stats["token_fetches"] += 1
         host = np.asarray(joined)
         self.stats["tokens_fetched"] += int(host.size)
+        if self.bus is not None:
+            self.bus.set_total("token_fetches", self.stats["token_fetches"])
+            self.bus.set_total("tokens_fetched", self.stats["tokens_fetched"])
         out, off = [], 0
         for f in flats:
             out.append(host[off:off + f.size])

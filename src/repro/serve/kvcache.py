@@ -491,3 +491,11 @@ class PagedCachePool:
 
     def used_bytes(self) -> int:
         return (self.alloc.n_pages - self.alloc.free_pages) * self.alloc.page_bytes
+
+    def publish_metrics(self, bus) -> None:
+        """Hot-tier page pressure onto the engine metrics bus (observe-only;
+        upper cache layers extend this and delegate down)."""
+        bus.set("free_pages", self.alloc.free_pages)
+        bus.set("used_pages", self.alloc.n_pages - self.alloc.free_pages)
+        bus.set("reservation_debt_pages", self._reservation_debt())
+        bus.set("used_bytes", self.used_bytes())

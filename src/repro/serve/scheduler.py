@@ -28,6 +28,21 @@ end of the step — value-dependent effects (stream emission, prefix
 insertion, decode promotion, slot release) run in dispatch order once the
 host values land.
 
+Observability + policy (PR 6): every iteration publishes its signals —
+queue depth, resident sets, token counters, TTFT/ITL/queue-latency
+histograms, plus whatever the cache stack and executor report — to the
+engine's :class:`repro.serve.metrics.MetricsBus` (observe-only; a disabled
+bus leaves streams bit-identical). An optional
+:class:`repro.serve.policy.SchedulerPolicy` consumes those signals in
+exactly three hook points: a mailbox reorder/shed pass at the top of each
+step (priority classes + aging, typed :class:`~repro.serve.policy.ShedVerdict`
+rejections recorded on ``self.shed``), an admission-concurrency gate inside
+the drain loop (a quiet "not yet" — no refusal stat, no pool churn), and a
+prefill-allowance clamp when packing chunks (ITL-target budget shaping,
+floored at one token per mid-prefill resident so fair-share survives).
+Policy never touches pages and never changes which tokens an admitted
+request streams.
+
 Invariants (tests/test_scheduler_properties.py):
 
   * **Bit-identical streams**: scheduling decisions (chunking, preemption,
@@ -54,6 +69,8 @@ import numpy as np
 from repro.core.offload import Mailbox
 from repro.models import transformer
 from repro.serve.executor import Executor
+from repro.serve.metrics import MetricsBus, percentiles
+from repro.serve.policy import SchedulerPolicy
 from repro.serve.prefix_cache import PrefixMatch
 
 
@@ -62,12 +79,15 @@ class Request:
     seq_id: int
     prompt: np.ndarray          # [L] int32
     max_new: int = 16
+    priority: int = 0           # SLO class (larger = more urgent; policy-read)
+    deadline_s: Optional[float] = None  # admission deadline after t_submit
     t_submit: float = 0.0
     t_first: float = 0.0        # wall time of the first emitted token (TTFT)
     prefill_pos: int = 0        # prompt tokens whose KV has been written
     tokens_out: Optional[List[int]] = None
     t_tokens: Optional[List[float]] = None   # wall time of each emitted token
     done: bool = False
+    verdict: Optional[object] = None    # ShedVerdict when policy rejected it
 
 
 class Scheduler:
@@ -84,7 +104,9 @@ class Scheduler:
                  *, n_slots: int, greedy: bool = True, paged: bool = False,
                  tiered: bool = False, chunked: bool = False,
                  token_budget: Optional[int] = None,
-                 preempt_quantum: int = 1):
+                 preempt_quantum: int = 1,
+                 metrics: Optional[MetricsBus] = None,
+                 policy: Optional[SchedulerPolicy] = None):
         self.cfg = cfg
         self.pool = pool
         self.executor = executor
@@ -92,6 +114,10 @@ class Scheduler:
         self.paged = paged
         self.tiered = tiered
         self.chunked = chunked
+        self.bus = metrics if metrics is not None else MetricsBus(enabled=False)
+        self.policy = policy
+        self.shed: List[Request] = []              # policy-rejected requests
+        self._ever_admitted: set = set()           # seq_ids that held pages
         self.prefix = getattr(pool, "prefix", None)
         self.mailbox = Mailbox(depth=256)
         self.active: Dict[int, Request] = {}       # slot -> decoding request
@@ -105,8 +131,10 @@ class Scheduler:
                       "prefill_chunks": 0, "prefill_chunk_tokens": 0,
                       "decode_tokens": 0, "cow_forks": 0,
                       "prefix_hits": 0, "prefix_full_hits": 0,
-                      "prefix_shared_tokens": 0,
-                      "queue_lat_s": [], "ttft_s": [], "iter_log": []}
+                      "prefix_shared_tokens": 0, "shed": 0,
+                      "admission_order": [],
+                      "queue_lat_s": [], "ttft_s": [], "itl_s": [],
+                      "iter_log": []}
         self._fetch_queue: List[Tuple[Any, Callable]] = []
         self._finished: List[Request] = []
         if self.paged:
@@ -135,6 +163,8 @@ class Scheduler:
         req.prefill_pos = 0
         req.tokens_out = []
         req.t_tokens = []
+        req.verdict = None
+        self.bus.inc("requests_submitted")
         return self.mailbox.put(req)
 
     @property
@@ -151,6 +181,7 @@ class Scheduler:
         dispatch, each phase flushed once. Returns the requests that
         finished this iteration."""
         self._finished = []
+        self._policy_pass()
         decoded = False
         if self.chunked:
             decoded = self._step_chunked()
@@ -173,6 +204,7 @@ class Scheduler:
             # head-of-queue resume's host→dev DMAs now; they overlap the
             # upcoming admission pass and land at the top of the next step
             self._start_prefetch()
+        self._publish_metrics()
         return self._finished
 
     def run(self, max_steps: int = 1000) -> List[Request]:
@@ -182,6 +214,92 @@ class Scheduler:
                 break
             finished.extend(self.step())
         return finished
+
+    # -- SLO policy hooks ---------------------------------------------------
+    def _in_system(self) -> int:
+        """Resident-request count the admission gate reasons about: hot
+        residents plus (tiered) the cold set — an in-flight prefetch stays
+        in ``cold_seqs()`` until it lands, so it is already covered."""
+        n = len(self.active) + len(self.prefilling) + len(self.prefilled_wait)
+        if self.tiered:
+            n += len(self.pool.cold_seqs())
+        return n
+
+    def _sheddable(self, req: Request) -> bool:
+        """Only requests that hold NO engine state may shed: never-admitted
+        mailbox entries. Cold residents (pages in the host tier) and
+        evict-reprefill returnees (emptied but once-admitted) must survive —
+        shedding them would strand accounting or retract emitted tokens."""
+        if req.seq_id in self._ever_admitted:
+            return False
+        if self.tiered and self.pool.is_cold(req.seq_id):
+            return False
+        return True
+
+    def _policy_pass(self) -> None:
+        """Reorder/shed the mailbox under the policy, once per step, BEFORE
+        any drain: the line the admission loop sees is already in effective-
+        priority order with the over-cap tail rejected. Clearing the
+        admission stall when the head changed (or anything shed) lets the
+        reordered head be tried instead of waiting out the old head's
+        refusal."""
+        if self.policy is None or len(self.mailbox) == 0:
+            return
+        pending = self.mailbox.drain(len(self.mailbox))
+        if not pending:
+            return
+        head_before = pending[0]
+        keep, shed = self.policy.plan(
+            pending, now=time.perf_counter(), in_system=self._in_system(),
+            sheddable=self._sheddable)
+        for req, verdict in shed:
+            req.verdict = verdict
+            req.done = True
+            self.shed.append(req)
+            self.stats["shed"] += 1
+        for req in reversed(keep):
+            self.mailbox.requeue(req)
+        if getattr(self, "_admit_stalled", False) and \
+                (shed or not keep or keep[0] is not head_before):
+            self._admit_stalled = False
+
+    def _note_first_admit(self, req: Request) -> None:
+        """First-admission bookkeeping shared by every admission path."""
+        self._ever_admitted.add(req.seq_id)
+        self.stats["admission_order"].append(int(req.seq_id))
+        lat = time.perf_counter() - req.t_submit
+        self.stats["queue_lat_s"].append(lat)
+        self.bus.observe("queue_lat_s", lat)
+        self.bus.inc("admissions")
+        if self.policy is not None:
+            self.policy.note_admitted(req)
+
+    def _publish_metrics(self) -> None:
+        """End-of-step bus publication: scheduler gauges + counter totals,
+        then whatever the cache stack reports (pages, tiers, prefix).
+        Observe-only — a disabled bus makes this a no-op."""
+        bus = self.bus
+        if not bus.enabled:
+            return
+        s = self.stats
+        bus.set("queue_depth", len(self.mailbox))
+        bus.set("active", len(self.active))
+        bus.set("prefilling", len(self.prefilling))
+        bus.set("prefilled_wait", len(self.prefilled_wait))
+        bus.set("in_system", self._in_system())
+        for k in ("decode_steps", "prefills", "decode_tokens",
+                  "prefill_chunks", "prefill_chunk_tokens",
+                  "admission_refusals", "preemptions",
+                  "preempted_mid_prefill", "evictions_reprefill",
+                  "cow_forks", "prefix_hits", "prefix_full_hits",
+                  "prefix_shared_tokens"):
+            bus.set_total(k, s.get(k, 0))
+        n_admitted = len(s.get("admission_order") or [])
+        if self.prefix is not None and n_admitted:
+            bus.set("prefix_hit_rate", s.get("prefix_hits", 0) / n_admitted)
+        publish = getattr(self.pool, "publish_metrics", None)
+        if publish is not None:
+            publish(bus)
 
     # -- deferred token materialisation ------------------------------------
     def _queue_fetch(self, ids_dev, consumer: Callable) -> None:
@@ -203,6 +321,11 @@ class Scheduler:
         if req.t_first == 0.0:
             req.t_first = now
             self.stats["ttft_s"].append(now - req.t_submit)
+            self.bus.observe("ttft_s", now - req.t_submit)
+        elif req.t_tokens:
+            gap = now - req.t_tokens[-1]
+            self.stats["itl_s"].append(gap)
+            self.bus.observe("itl_s", gap)
         req.t_tokens.append(now)
 
     # -- dense path --------------------------------------------------------
@@ -210,6 +333,9 @@ class Scheduler:
         while True:
             free = int(np.sum(self.pool.seq_ids < 0))
             if free == 0:
+                break
+            if self.policy is not None and \
+                    not self.policy.may_admit(len(self.active)):
                 break
             reqs = self.mailbox.drain(1)
             if not reqs:
@@ -226,8 +352,7 @@ class Scheduler:
             req.prefill_pos = L
             self.pool.lengths[slot] = L + 1
             self.active[slot] = req
-            self.stats["queue_lat_s"].append(
-                time.perf_counter() - req.t_submit)
+            self._note_first_admit(req)
             self.stats["prefills"] += 1
 
     def _dispatch_decode_dense(self):
@@ -274,8 +399,7 @@ class Scheduler:
         else:
             self.active[slot] = req
         if first_admit:
-            self.stats["queue_lat_s"].append(
-                time.perf_counter() - req.t_submit)
+            self._note_first_admit(req)
 
     def _pick_victim(self, exclude: Optional[int] = None) -> Optional[int]:
         """LRU preemption victim: least-recently-decoded resident, oldest
@@ -390,6 +514,13 @@ class Scheduler:
                 self._activate(slot, req, first_admit=False)
                 self._sync_swap_stats()
                 continue
+            if self.policy is not None and \
+                    not self.policy.may_admit(self._in_system()):
+                # concurrency gate: a quiet "not yet" — the head stays
+                # queued with no refusal stat and no pool churn (cold
+                # resumes above are exempt: they are already in-system)
+                self.mailbox.requeue(req)
+                break
             L = len(req.prompt)
             if not self.pool.admissible_ever(L, req.max_new):
                 # could never fit even on an idle pool: reject outright so it
@@ -588,7 +719,14 @@ class Scheduler:
         self._promote_waiters()
         decode_slots = sorted(self.active)
         mid_prefill = sorted(int(r.seq_id) for r in self.prefilling.values())
-        chunks = self._pack_chunks(self.token_budget - len(decode_slots))
+        budget_left = self.token_budget - len(decode_slots)
+        if self.policy is not None:
+            # ITL-target mix shaping: squeeze the prefill share down to its
+            # floor (one token per mid-prefill resident) when decode latency
+            # is over target — fair-share/no-starvation survives the clamp
+            budget_left = self.policy.prefill_allowance(
+                budget_left, len(self.prefilling))
+        chunks = self._pack_chunks(budget_left)
         for slot, req, start, size in chunks:
             self._run_chunk(slot, req, start, size)
         if decode_slots:
@@ -596,6 +734,7 @@ class Scheduler:
         self.stats["iter_log"].append({
             "decode_tokens": len(decode_slots),
             "prefill_tokens": int(sum(c[3] for c in chunks)),
+            "prefill_budget": int(max(0, budget_left)),
             "chunks": [(int(r.seq_id), int(start), int(size))
                        for _, r, start, size in chunks],
             "mid_prefill": mid_prefill,
@@ -739,13 +878,13 @@ class Scheduler:
     def stats_summary(self) -> Dict[str, Any]:
         """Engine counters in report form: occupancy, swap traffic,
         preemptions, chunked-prefill token split, host-transfer counts,
-        queue-latency percentiles (submit → admission) and TTFT percentiles
-        (submit → first token). Every aggregate is guarded for the
-        empty-engine case — a fresh or idle engine reports zeros, never a
-        numpy error."""
+        queue-latency percentiles (submit → admission), TTFT percentiles
+        (submit → first token), and inter-token-latency percentiles. Every
+        aggregate is guarded for the empty-engine case — a fresh or idle
+        engine reports zeros, never a numpy error (the percentile math is
+        serve/metrics.py's pure-Python :func:`~repro.serve.metrics.quantile`,
+        which encodes that hardening)."""
         occ = self.stats.get("batch_occupancy") or []
-        lat = sorted(self.stats.get("queue_lat_s") or [])
-        ttft = sorted(self.stats.get("ttft_s") or [])
         out = {
             "decode_steps": self.stats.get("decode_steps", 0),
             "prefills": self.stats.get("prefills", 0),
@@ -780,9 +919,11 @@ class Scheduler:
                 default=0)
         if self.prefix is not None:
             out.update(self.prefix.stats())
-        for p in (50, 90, 99):
-            out[f"queue_lat_p{p}_s"] = (
-                float(np.percentile(lat, p)) if lat else 0.0)
-            out[f"ttft_p{p}_s"] = (
-                float(np.percentile(ttft, p)) if ttft else 0.0)
+        out["shed"] = self.stats.get("shed", 0)
+        out.update(percentiles(self.stats.get("queue_lat_s") or [],
+                               prefix="queue_lat_", suffix="_s"))
+        out.update(percentiles(self.stats.get("ttft_s") or [],
+                               prefix="ttft_", suffix="_s"))
+        out.update(percentiles(self.stats.get("itl_s") or [],
+                               prefix="itl_", suffix="_s"))
         return out

@@ -149,6 +149,19 @@ class TieredCachePool(kvcache.CacheLayer):
     def host_used_bytes(self) -> int:
         return sum(r.nbytes for r in self._cold.values())
 
+    def publish_metrics(self, bus) -> None:
+        """Tier pressure + swap traffic onto the engine metrics bus. Swap
+        counters are published HERE (the layer that owns them), not by the
+        scheduler — one writer per counter keeps monotonicity enforceable."""
+        self.inner.publish_metrics(bus)
+        bus.set("cold_seqs", len(self._cold))
+        bus.set("host_used_bytes", self.host_used_bytes())
+        bus.set("host_free_bytes", self.host_free_bytes())
+        bus.set_total("swap_out_count", self.swap_out_count)
+        bus.set_total("swap_in_count", self.swap_in_count)
+        bus.set_total("swap_out_bytes", self.swap_out_bytes)
+        bus.set_total("swap_in_bytes", self.swap_in_bytes)
+
     def host_free_bytes(self) -> int:
         return self.hero.capacity(3)
 

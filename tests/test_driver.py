@@ -147,6 +147,15 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                             "tp1": engine_stub("tensor_parallel"),
                             "tp2": engine_stub("tensor_parallel"),
                             "tp4": engine_stub("tensor_parallel")},
+        "slo": {"arch": "qwen2-0.5b", "hot_pages": 4, "page_tokens": 8,
+                "n_slots": 2, "requests": 12, "interactive_requests": 4,
+                "itl_target_s": 0.02, "itl_uncontended_p50_s": 0.001,
+                "baseline_refusals": 29, "slo_refusals": 0,
+                "shed_total": 6, "shed_overload": 4, "shed_deadline": 2,
+                "baseline_itl_p99_s": 1.05, "slo_itl_p99_s": 0.002,
+                "identical_streams": 1,
+                "reference": engine_stub("slo"),
+                "baseline": engine_stub("slo"), "slo": engine_stub("slo")},
     }
     p = tmp_path / "BENCH_serve.json"
     p.write_text(json.dumps(good))
@@ -169,4 +178,4 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                               "BENCH_serve.json")
     assert validate(repo_bench) == []
     assert set(SCHEMAS) == {"tiering", "chunked_prefill", "prefix_cache",
-                            "tensor_parallel"}
+                            "tensor_parallel", "slo"}

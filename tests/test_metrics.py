@@ -1,0 +1,239 @@
+"""Metrics-bus unit tests (serve/metrics.py) + the percentile-consolidation
+regression pins.
+
+Covers the bus's contracts directly: histogram/quantile correctness against
+``numpy.percentile`` on known and random distributions, counter monotonicity
+(decrements and rollbacks raise at the write site), the zero-allocation
+idle-engine snapshot (the PR-3 empty-engine ``stats_summary()`` hardening,
+extended to the bus — pure-Python, no numpy import anywhere in the module),
+and the observe-only invariant: an engine with metrics disabled produces
+bit-identical token streams and counter stats to one with the bus on.
+
+The consolidation pins: ``Engine.stats_summary()`` and
+``benchmarks.common.pctl`` both delegate to :func:`repro.serve.metrics.quantile`
+now — their outputs are pinned against the ``np.percentile`` math they used
+to carry inline, so the refactor can never drift the reported numbers.
+"""
+import ast
+import inspect
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import blocks, transformer
+from repro.serve import metrics as M
+from repro.serve.cache import CacheConfig
+from repro.serve.engine import Engine, EngineConfig, Request
+
+_CFG = configs.get_smoke_config("qwen2-0.5b", compute_dtype=jnp.float32)
+_PARAMS = None
+
+
+def _params():
+    global _PARAMS
+    if _PARAMS is None:
+        params_t = transformer.init_model(jax.random.PRNGKey(0), _CFG)
+        _PARAMS, _ = blocks.split_params(params_t)
+    return _PARAMS
+
+
+# --------------------------------------------------------------------------
+# quantile math vs numpy
+# --------------------------------------------------------------------------
+def test_quantile_matches_numpy_on_known_and_random():
+    rng = np.random.default_rng(7)
+    cases = [
+        [1.0], [1.0, 2.0], [3.0, 1.0, 2.0],
+        list(range(100)),
+        list(rng.normal(size=31)),
+        list(rng.exponential(size=250)),
+        list(rng.integers(0, 10, size=64).astype(float)),
+    ]
+    for vals in cases:
+        s = sorted(vals)
+        for p in (0, 1, 25, 50, 75, 90, 99, 99.9, 100):
+            assert M.quantile(s, p) == pytest.approx(
+                float(np.percentile(vals, p)), rel=1e-12, abs=1e-12), \
+                f"quantile({p}) diverged from numpy on n={len(vals)}"
+
+
+def test_quantile_empty_and_bounds():
+    assert M.quantile([], 99) == 0.0          # empty-engine hardening
+    with pytest.raises(ValueError):
+        M.quantile([1.0, 2.0], 101)
+    with pytest.raises(ValueError):
+        M.quantile([1.0, 2.0], -1)
+
+
+def test_percentiles_report_form_keys():
+    out = M.percentiles([1.0, 2.0, 3.0], (50, 99, 99.9),
+                        prefix="ttft_", suffix="_s")
+    assert set(out) == {"ttft_p50_s", "ttft_p99_s", "ttft_p99.9_s"}
+    assert out["ttft_p50_s"] == pytest.approx(2.0)
+    assert M.percentiles([]) == {"p50": 0.0, "p90": 0.0, "p99": 0.0}
+
+
+def test_histogram_window_and_percentiles():
+    h = M.Histogram(window=8)
+    for v in range(100):                       # window keeps the last 8
+        h.observe(float(v))
+    assert h.count == 100 and len(h) == 8
+    assert h.total == pytest.approx(sum(range(100)))
+    window = list(range(92, 100))
+    for p in (0, 50, 99, 100):
+        assert h.percentile(p) == pytest.approx(
+            float(np.percentile(window, p)))
+    snap = h.snapshot((50, 99))
+    assert snap["count"] == 100 and snap["window_n"] == 8
+    assert snap["min"] == 92.0 and snap["max"] == 99.0
+    assert snap["p99"] == pytest.approx(float(np.percentile(window, 99)))
+
+
+# --------------------------------------------------------------------------
+# counter monotonicity
+# --------------------------------------------------------------------------
+def test_counter_monotone_across_iterations():
+    c = M.Counter()
+    for n in (1, 3, 0, 7):
+        c.inc(n)
+    assert c.value == 11
+    c.set_total(11)                            # idempotent reconcile is fine
+    c.set_total(15)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    with pytest.raises(ValueError):
+        c.set_total(14)                        # rollback surfaces at write
+    assert c.value == 15
+
+
+def test_bus_counter_monotonicity_through_sugar():
+    bus = M.MetricsBus()
+    bus.inc("toks", 5)
+    bus.set_total("toks", 9)
+    with pytest.raises(ValueError):
+        bus.set_total("toks", 2)
+    assert bus.counter("toks").value == 9
+
+
+# --------------------------------------------------------------------------
+# idle snapshot: zero allocation, no numpy
+# --------------------------------------------------------------------------
+def test_metrics_module_is_pure_python():
+    """The idle-snapshot guarantee rests on the module never touching
+    numpy — pin it at the import level (ast-parsed, comments don't count)."""
+    tree = ast.parse(inspect.getsource(M))
+    for node in ast.walk(tree):
+        names = []
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom):
+            names = [node.module or ""]
+        assert not any(n.split(".")[0] in ("numpy", "jax") for n in names), \
+            "serve/metrics.py must stay pure Python (idle snapshot contract)"
+
+
+def test_idle_bus_snapshot_plain_zeros():
+    bus = M.MetricsBus()
+    snap = bus.snapshot()
+    assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+    json.dumps(snap)                           # structured-JSON contract
+    bus.hist("ttft_s")                         # registered but empty
+    snap = bus.snapshot((50,))
+    assert snap["histograms"]["ttft_s"] == {
+        "count": 0, "sum": 0.0, "mean": 0.0, "window_n": 0,
+        "min": 0.0, "max": 0.0, "p50": 0.0}
+
+
+def test_idle_engine_snapshot_and_summary():
+    """Fresh engine, nothing submitted: metrics snapshot and stats summary
+    both report plain zeros (the PR-3 empty-engine hardening)."""
+    eng = Engine(_CFG, _params(), config=EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=12,
+        cache=CacheConfig(paged=True)))
+    s = eng.stats_summary()
+    for key in ("queue_lat_p50_s", "ttft_p99_s", "itl_p99_s"):
+        assert s[key] == 0.0
+    assert s["shed"] == 0
+    json.dumps(eng.metrics_snapshot())
+
+
+def test_disabled_bus_writes_are_noops():
+    bus = M.MetricsBus(enabled=False)
+    bus.inc("c", 5)
+    bus.set("g", 1.0)
+    bus.observe("h", 2.0)
+    assert bus.snapshot() == {}
+    assert not bus.counters and not bus.gauges and not bus.hists
+    assert bus.hist_percentile("h", 99) is None
+
+
+# --------------------------------------------------------------------------
+# metrics disabled => identical engine outputs
+# --------------------------------------------------------------------------
+def _run_workload(metrics: bool):
+    eng = Engine(_CFG, _params(), config=EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=12,
+        cache=CacheConfig(paged=True), metrics=metrics))
+    rng = np.random.default_rng(3)
+    for i in range(5):
+        eng.submit(Request(
+            seq_id=i,
+            prompt=rng.integers(0, _CFG.vocab, 6 + i).astype(np.int32),
+            max_new=4))
+    done = eng.run(max_steps=500)
+    assert eng.idle
+    streams = {r.seq_id: list(r.tokens_out) for r in done}
+    summary = eng.stats_summary()
+    return streams, summary
+
+
+def test_metrics_disabled_identical_outputs():
+    streams_on, sum_on = _run_workload(metrics=True)
+    streams_off, sum_off = _run_workload(metrics=False)
+    assert streams_on == streams_off, \
+        "the bus is observe-only: token streams must be bit-identical"
+    # every non-timing stat must match exactly; timing keys are wall-clock
+    timing = {k for k in sum_on if k.endswith("_s")}
+    for k in set(sum_on) | set(sum_off):
+        if k in timing:
+            continue
+        assert sum_on[k] == sum_off[k], f"stat {k!r} perturbed by the bus"
+
+
+# --------------------------------------------------------------------------
+# percentile consolidation regression pins
+# --------------------------------------------------------------------------
+def test_stats_summary_percentiles_pin_numpy():
+    """stats_summary()'s queue-lat/TTFT percentiles moved onto
+    serve/metrics.py — pin them against the np.percentile math the method
+    used to carry inline."""
+    eng = Engine(_CFG, _params(), config=EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=12,
+        cache=CacheConfig(paged=True)))
+    rng = np.random.default_rng(4)
+    for i in range(4):
+        eng.submit(Request(
+            seq_id=i, prompt=rng.integers(0, _CFG.vocab, 7).astype(np.int32),
+            max_new=3))
+    eng.run(max_steps=500)
+    s = eng.stats_summary()
+    for stat, prefix in (("queue_lat_s", "queue_lat_"), ("ttft_s", "ttft_"),
+                         ("itl_s", "itl_")):
+        samples = eng.stats[stat]
+        assert samples, f"workload must produce {stat} samples"
+        for p in (50, 90, 99):
+            assert s[f"{prefix}p{p}_s"] == pytest.approx(
+                float(np.percentile(samples, p)), rel=1e-12)
+
+
+def test_bench_pctl_pins_numpy():
+    from benchmarks.common import pctl
+    rng = np.random.default_rng(5)
+    vals = list(rng.exponential(size=41))
+    for p in (50, 99):
+        assert pctl(vals, p) == pytest.approx(
+            float(np.percentile(vals, p)), rel=1e-12)

@@ -30,6 +30,8 @@ from repro import configs
 from repro.models import blocks, transformer
 from repro.serve.cache import CacheConfig
 from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.kvcache import token_bytes
+from repro.serve.policy import PolicyConfig
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -461,6 +463,205 @@ def test_single_host_token_transfer_per_iteration():
     assert iters_with_tokens > 0
     # every token the engine ever emitted crossed in a batched fetch
     assert eng.executor.stats["tokens_fetched"] >= emitted
+
+
+# -- SLO policy layer (PR 6): priority, aging, shedding, shaping -------------
+def _drive_slo(eng, schedule, max_iters=8000):
+    """_drive for 5-tuple schedules: (arrival, prompt, max_new, priority,
+    deadline_s). Returns completed requests only — shed requests land on
+    ``eng.shed``, never in ``step()``'s return."""
+    pending = sorted(enumerate(schedule), key=lambda t: (t[1][0], t[0]))
+    done, it = [], 0
+    while True:
+        while pending and pending[0][1][0] <= it:
+            sid, (_, prompt, max_new, pri, dl) = pending.pop(0)
+            assert eng.submit(Request(seq_id=sid, prompt=prompt.copy(),
+                                      max_new=max_new, priority=pri,
+                                      deadline_s=dl))
+        if not pending and eng.idle:
+            return done
+        done.extend(eng.step())
+        it += 1
+        assert it <= max_iters, "scheduler failed to drain the workload"
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_policy_streams_and_budget_property():
+    """Under any priority/deadline mix (deadlines generous — nothing sheds),
+    the policy engine completes everything with greedy streams bit-identical
+    to the policy-free scheduler, the token budget is never exceeded, and
+    every scheduler invariant (fair share, accounting, leaks) still holds —
+    including when the ITL-target squeeze is active, whose floor of one
+    token per mid-prefill resident must preserve fair-share."""
+    @settings(max_examples=5, deadline=None, derandomize=True)
+    @given(
+        raw=st.lists(st.tuples(st.integers(0, 8),      # arrival iteration
+                               st.integers(1, 20),     # prompt length
+                               st.integers(1, 6),      # max_new
+                               st.integers(0, 2),      # priority class
+                               st.booleans()),         # carries a deadline?
+                     min_size=1, max_size=5),
+        n_slots=st.integers(2, 4),
+        budget_extra=st.integers(1, 14),
+        n_pages=st.integers(6, 16),
+        age_iters=st.integers(1, 6),
+        squeeze=st.booleans(),
+        seed=st.integers(0, 3),
+    )
+    def prop(raw, n_slots, budget_extra, n_pages, age_iters, squeeze, seed):
+        triples = _schedule_from([(a, L, mn) for a, L, mn, _, _ in raw],
+                                 seed, n_pages, 8, 64)
+        # generous deadlines never lapse in-test but exercise the EDF sort
+        sched = [(a, p, mn, pri, (1e6 if dl else None))
+                 for (a, p, mn), (_, _, _, pri, dl) in zip(triples, raw)]
+        kw = dict(n_slots=n_slots, max_seq=64, chunked=True,
+                  token_budget=n_slots + budget_extra,
+                  cache=CacheConfig(paged=True, page_tokens=8,
+                                    n_pages=n_pages))
+        free = Engine(_CFG, _params(), config=EngineConfig(**kw))
+        ref = {r.seq_id: list(r.tokens_out) for r in _drive_slo(free, sched)}
+        pol = Engine(_CFG, _params(), config=EngineConfig(
+            policy=PolicyConfig(
+                age_iters=age_iters,
+                # an unreachably low target forces the squeeze path on
+                itl_target_s=(1e-12 if squeeze else None)), **kw))
+        got = {r.seq_id: list(r.tokens_out) for r in _drive_slo(pol, sched)}
+        assert not pol.shed, "no caps + generous deadlines must shed nothing"
+        assert set(got) == set(ref) == set(range(len(sched)))
+        assert got == ref, "policy must never change which tokens an " \
+            "admitted greedy request streams"
+        _check_scheduler_invariants(pol, triples)
+    prop()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_policy_priority_admission_order_property():
+    """With aging effectively off and every request queued before the first
+    step, admissions must proceed in non-increasing priority: a high class
+    is never admitted after a lower one."""
+    @settings(max_examples=5, deadline=None, derandomize=True)
+    @given(pris=st.lists(st.integers(0, 3), min_size=3, max_size=6),
+           n_slots=st.integers(2, 3), seed=st.integers(0, 3))
+    def prop(pris, n_slots, seed):
+        rng = np.random.default_rng(seed)
+        sched = [(0, rng.integers(0, _CFG.vocab, 4).astype(np.int32),
+                  2, pri, None) for pri in pris]
+        eng = Engine(_CFG, _params(), config=EngineConfig(
+            n_slots=n_slots, max_seq=64, chunked=True,
+            token_budget=n_slots + 6,
+            cache=CacheConfig(paged=True, page_tokens=8, n_pages=16),
+            policy=PolicyConfig(age_iters=10_000)))
+        done = _drive_slo(eng, sched)
+        assert len(done) == len(pris) and not eng.shed
+        admitted_pri = [pris[sid] for sid in eng.stats["admission_order"]]
+        assert admitted_pri == sorted(admitted_pri, reverse=True), \
+            f"admissions out of priority order: {admitted_pri}"
+    prop()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_policy_aging_bounds_low_priority_wait_property():
+    """No starvation: a lone class-0 request under a sustained stream of
+    later-arriving high-class requests is overtaken only a bounded number
+    of times — aging lifts its effective class one step per ``age_iters``
+    passes, and FIFO tie-break (it was submitted first) wins from there.
+    The same workload with aging disabled admits it dead last, which is
+    what makes the bound meaningful."""
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(gap=st.integers(1, 3), age_iters=st.integers(1, 2),
+           seed=st.integers(0, 3))
+    def prop(gap, age_iters, seed):
+        rng = np.random.default_rng(seed)
+        n_high, n_slots = 15, 2
+        sched = [(0, rng.integers(0, _CFG.vocab, 4).astype(np.int32),
+                  3, 0, None)]
+        # front-load n_slots+1 high arrivals so the line is backed up from
+        # the first pass, then sustain one fresh arrival per iteration
+        sched += [(max(0, i - n_slots),
+                   rng.integers(0, _CFG.vocab, 4).astype(np.int32),
+                   3, gap, None) for i in range(n_high)]
+
+        def admission_order(age):
+            eng = Engine(_CFG, _params(), config=EngineConfig(
+                n_slots=n_slots, max_seq=64, chunked=True,
+                token_budget=n_slots + 6,
+                cache=CacheConfig(paged=True, page_tokens=8, n_pages=16),
+                policy=PolicyConfig(age_iters=age)))
+            done = _drive_slo(eng, sched)
+            assert len(done) == n_high + 1 and not eng.shed
+            return eng.stats["admission_order"]
+
+        # starvation witness: aging off -> every high class cuts the line
+        assert admission_order(10_000).index(0) == n_high
+        overtakes = admission_order(age_iters).index(0)
+        bound = n_slots * (age_iters * gap + 2)
+        assert overtakes <= min(bound, n_high - 1), \
+            f"low-priority request overtaken {overtakes}x (bound {bound})"
+    prop()
+
+
+def test_load_shedding_replays_tiered_oversubscription():
+    """Regression for the SLO bench's acceptance gate (bench_slo.py): the
+    tiering bench's oversubscribed mix (12 requests needing 24 concurrent
+    pages against a 4-page hot tier) behind the policy layer must shed
+    BEFORE the admission-collapse regime — zero pool refusals where the
+    policy-free baseline racks up >= 12 (the committed trajectory shows
+    29) — with typed verdicts, every interactive-class request completed,
+    admitted streams bit-identical to an uncontended reference, and the
+    allocator auditing clean at drain (shed requests never owned a page)."""
+    hot_pages, page_tokens, n_slots, max_seq = 4, 8, 2, 64
+    n_req = 3 * hot_pages
+    host_budget = 16 * (2 * n_req) * token_bytes(_CFG) * page_tokens
+    rng = np.random.default_rng(0)
+    pris = [1 if i % 3 == 0 else 0 for i in range(n_req)]
+    deadlines = [None] * n_req
+    for i in [i for i in range(n_req) if pris[i] == 0][-2:]:
+        deadlines[i] = 1e-6            # lapsed before the first policy pass
+    sched = [(0, rng.integers(0, _CFG.vocab, 6).astype(np.int32), 6,
+              pris[i], deadlines[i]) for i in range(n_req)]
+    kw = dict(n_slots=n_slots, max_seq=max_seq)
+
+    # uncontended reference: untiered pool that fits the whole workload
+    ref_eng = Engine(_CFG, _params(), config=EngineConfig(
+        cache=CacheConfig(paged=True, page_tokens=page_tokens,
+                          n_pages=2 * n_req), **kw))
+    ref = {r.seq_id: list(r.tokens_out) for r in _drive_slo(ref_eng, sched)}
+    assert set(ref) == set(range(n_req))
+
+    tiered_cache = CacheConfig(paged=True, tiered=True,
+                               page_tokens=page_tokens, n_pages=hot_pages,
+                               host_budget_bytes=host_budget)
+    # policy-free baseline: everything admits by preempting LRU residents
+    # and the pool refuses over and over while the population rotates
+    base_eng = Engine(_CFG, _params(), config=EngineConfig(
+        cache=tiered_cache, **kw))
+    _drive_slo(base_eng, sched)
+    assert base_eng.stats["admission_refusals"] >= n_req, \
+        "the baseline must exhibit the refusal pile-up shedding preempts"
+
+    pol_eng = Engine(_CFG, _params(), config=EngineConfig(
+        cache=tiered_cache,
+        policy=PolicyConfig(max_in_system=n_slots, max_queue=4), **kw))
+    done = _drive_slo(pol_eng, sched)
+    shed = pol_eng.shed
+    assert pol_eng.stats["admission_refusals"] == 0, \
+        "the gate must stop the drain before the pool ever refuses"
+    assert shed and len(shed) + len(done) == n_req
+    assert all(r.verdict is not None and
+               r.verdict.code in ("overload", "deadline") for r in shed)
+    assert sum(r.verdict.code == "deadline" for r in shed) == 2
+    assert pol_eng.stats["shed"] == len(shed)
+    done_ids = {r.seq_id for r in done}
+    assert all(i in done_ids for i in range(n_req) if pris[i] == 1), \
+        "every interactive-class request must complete"
+    for r in done:
+        assert list(r.tokens_out) == ref[r.seq_id], \
+            "admitted streams must be bit-identical to the reference"
+    # shed requests never owned a page, a reservation, or a slot
+    pol_eng.pool.alloc.audit()
+    assert pol_eng.pool.alloc.free_pages == hot_pages
+    assert not pol_eng.pool.cold_seqs()
+    assert pol_eng.idle
 
 
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")

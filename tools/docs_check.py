@@ -35,13 +35,16 @@ _EXTERNAL = ("http://", "https://", "mailto:")
 
 DOCSTRING_ROOTS = ("src/repro/serve", "src/repro/core")
 
-# the scheduler/cache-manager/executor decomposition: these modules must
-# exist (and, being under a DOCSTRING_ROOT, carry ownership docstrings)
+# the scheduler/cache-manager/executor decomposition plus the PR-6
+# observability/policy split: these modules must exist (and, being under a
+# DOCSTRING_ROOT, carry ownership docstrings)
 REQUIRED_MODULES = (
     "src/repro/serve/scheduler.py",
     "src/repro/serve/executor.py",
     "src/repro/serve/cache.py",
     "src/repro/serve/engine.py",
+    "src/repro/serve/metrics.py",
+    "src/repro/serve/policy.py",
 )
 
 
