@@ -22,6 +22,11 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
   §2.4    bench_slo           SLO policy vs admission collapse — load
                               shedding + ITL target on the oversubscribed
                               tiered mix → BENCH_serve.json ``slo`` section
+  §3      bench_trace         execution tracing + stall attribution on the
+                              tiered+tp mix — bucket closure, fake-clock
+                              determinism, Perfetto export →
+                              BENCH_serve.json ``trace`` section +
+                              BENCH_serve.trace.json
   (validate_bench checks the BENCH_serve.json schema after the benches)
 """
 from __future__ import annotations
@@ -36,12 +41,14 @@ def main() -> None:
                             bench_complexity, bench_interconnect, bench_isa,
                             bench_parallel, bench_prefix_cache, bench_slo,
                             bench_tensor_parallel, bench_tiering,
-                            bench_tiling, roofline_report, validate_bench)
+                            bench_tiling, bench_trace, roofline_report,
+                            validate_bench)
     failures = []
     for mod in (bench_tiling, bench_parallel, bench_complexity,
                 bench_autodma, bench_interconnect, bench_isa,
                 roofline_report, bench_tiering, bench_chunked_prefill,
-                bench_prefix_cache, bench_tensor_parallel, bench_slo):
+                bench_prefix_cache, bench_tensor_parallel, bench_slo,
+                bench_trace):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()

@@ -57,6 +57,16 @@ SCHEMAS = {
         "identical_streams": _NUM,           # 1 = admitted streams == ref
         "reference": dict, "baseline": dict, "slo": dict,
     },
+    "trace": {
+        "arch": str, "hot_pages": _NUM, "page_tokens": _NUM, "n_slots": _NUM,
+        "requests": _NUM, "tp": _NUM, "token_budget": _NUM,
+        "plain_wall_s": _NUM,
+        "identical_streams": _NUM,           # 1 = traced/fake-clock == plain
+        "deterministic_snapshot": _NUM,      # 1 = fake-clock twins identical
+        "closure_worst_err_pct": _NUM,       # buckets vs iteration wall
+        "trace_json": str,                   # exported Perfetto artifact
+        "traced": dict,
+    },
 }
 # keys every per-engine sub-dict must carry with numeric values
 ENGINE_NUM_KEYS = {
@@ -71,6 +81,10 @@ ENGINE_NUM_KEYS = {
                         "decode_tokens"),
     "slo": ("completed", "tokens", "wall_s", "tok_per_s", "decode_steps",
             "admission_refusals", "shed", "itl_p50_s", "itl_p99_s"),
+    "trace": ("completed", "tokens", "wall_s", "iterations", "events",
+              "dropped", "stall_pct_schedule", "stall_pct_fetch",
+              "stall_pct_dma", "stall_pct_other", "dma_windows",
+              "device_windows"),
 }
 
 
@@ -95,7 +109,8 @@ def _check(errors, path, obj, schema):
 
 
 def validate(path: str, require=("tiering", "chunked_prefill",
-                                 "prefix_cache", "tensor_parallel", "slo")):
+                                 "prefix_cache", "tensor_parallel", "slo",
+                                 "trace")):
     """Returns a list of error strings (empty = valid)."""
     errors = []
     try:
@@ -130,7 +145,7 @@ def main():
     ap.add_argument("path", nargs="?", default="BENCH_serve.json")
     ap.add_argument("--require", nargs="+",
                     default=["tiering", "chunked_prefill", "prefix_cache",
-                             "tensor_parallel", "slo"])
+                             "tensor_parallel", "slo", "trace"])
     args = ap.parse_args()
     errors = validate(args.path, require=tuple(args.require))
     if errors:

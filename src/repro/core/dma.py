@@ -19,7 +19,8 @@ Every function is usable under jit; the host-level ones also work eagerly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,17 +43,37 @@ class TransferHandle:
     ``wait()`` is idempotent (re-waiting a completed transfer is a no-op that
     returns the same value) and ``nbytes`` carries the transfer size for
     hero_perf-style traffic counters (the swap tier sums these).
+    ``t_start``/``t_done`` stamp issue and completion on the module transfer
+    clock (:func:`set_transfer_clock`): the serve-layer tracer renders the
+    async window between them on its dma track, so DMA/compute overlap is
+    *observed* from the handle, never guessed. Observational only — nothing
+    reads the stamps to make decisions.
     """
     value: object
     _id: int
     nbytes: int = 0
+    t_start: float = 0.0
+    t_done: float = 0.0
 
     def wait(self):
         jax.block_until_ready(self.value)
+        if self.t_done == 0.0:
+            self.t_done = _CLOCK[0]()
         return self.value
 
 
 _NEXT_ID = [0]
+
+# core must not import the serve layer, so the tracer's injected clock
+# reaches the handle stamps through this module-level slot instead
+_CLOCK: list = [time.perf_counter]
+
+
+def set_transfer_clock(clock: Optional[Callable[[], float]]) -> None:
+    """Route TransferHandle timestamps through ``clock`` (None restores
+    ``time.perf_counter``). Injected by the engine when it carries a
+    deterministic test clock; stamps are observational only."""
+    _CLOCK[0] = clock if clock is not None else time.perf_counter
 
 
 def _nbytes(v) -> int:
@@ -64,7 +85,7 @@ def _nbytes(v) -> int:
 
 def _handle(v) -> TransferHandle:
     _NEXT_ID[0] += 1
-    return TransferHandle(v, _NEXT_ID[0], _nbytes(v))
+    return TransferHandle(v, _NEXT_ID[0], _nbytes(v), t_start=_CLOCK[0]())
 
 
 def hero_memcpy_host2dev(dst_sharding, src) -> jax.Array:

@@ -52,6 +52,18 @@ typed verdicts at the end of the run.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --tiered --pages 8 --requests 16 --max-in-system 4 --max-queue 4 \
       --priorities 2 --metrics-log 16
+
+Execution tracing (PR 7): ``--trace out.json`` records a span timeline of
+the whole run (engine iterations and their schedule/policy/dispatch/fetch
+phases, per-request lifecycle tracks, async device windows and swap DMA
+transfers) and exports it as Chrome trace-event JSON — open the file in
+Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``. The run also
+prints a ``[serve:trace]`` stall-attribution line decomposing iteration
+wall time into schedule/fetch/dma/other. ``--trace-buffer N`` bounds the
+in-memory event ring (oldest events drop first).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --tiered --pages 8 --requests 16 --trace /tmp/serve.trace.json
 """
 from __future__ import annotations
 
@@ -128,6 +140,12 @@ def main():
     ap.add_argument("--priorities", type=int, default=0,
                     help="cycle submitted requests through this many "
                          "priority classes (0 = all default class)")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="record an execution trace and export it as "
+                         "Chrome trace-event JSON (open in Perfetto)")
+    ap.add_argument("--trace-buffer", type=int, default=None, metavar="N",
+                    help="tracer event-ring capacity (oldest events drop "
+                         "first; default 65536)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
@@ -142,10 +160,14 @@ def main():
                           if args.itl_target_ms is not None else None))
     # the driver builds the declarative config directly (the Engine flag
     # kwargs still work but are the deprecated path)
+    trace_kw = {}
+    if args.trace_buffer is not None:
+        trace_kw["trace_buffer"] = args.trace_buffer
     eng = Engine(cfg, params, config=EngineConfig(
         n_slots=args.slots, max_seq=args.max_seq,
         chunked=args.chunked_prefill, token_budget=args.token_budget,
         preempt_quantum=args.preempt_quantum, tp=args.tp, policy=policy,
+        trace=args.trace is not None, **trace_kw,
         cache=CacheConfig(
             paged=args.paged or args.tp > 1, page_tokens=args.page_tokens,
             n_pages=args.pages, tiered=args.tiered,
@@ -173,6 +195,11 @@ def main():
             if it % args.metrics_log == 0:
                 print(f"[metrics] {json.dumps(eng.metrics_snapshot())}",
                       flush=True)
+        if it % args.metrics_log != 0:
+            # final partial window: the drain's tail iterations would
+            # otherwise never appear in the log
+            print(f"[metrics] {json.dumps(eng.metrics_snapshot())}",
+                  flush=True)
     else:
         done = eng.run(max_steps=10000)
     wall = time.time() - t0
@@ -219,6 +246,15 @@ def main():
         print(f"[serve:slo] shed {s['shed']} ({codes or 'none'}), "
               f"itl p50/p99 "
               f"{s['itl_p50_s'] * 1e3:.1f}/{s['itl_p99_s'] * 1e3:.1f} ms")
+    if args.trace is not None:
+        path = eng.trace_export(args.trace)
+        ts = eng.trace_summary()
+        st = eng.tracer.stats()
+        print(f"[serve:trace] {st['iterations']} iterations, "
+              f"{st['events']} events ({st['dropped']} dropped) -> {path}; "
+              f"stall% schedule/fetch/dma/other "
+              f"{ts['stall_pct_schedule']:.1f}/{ts['stall_pct_fetch']:.1f}/"
+              f"{ts['stall_pct_dma']:.1f}/{ts['stall_pct_other']:.1f}")
     if args.tiered:
         s = eng.stats_summary()
         print(f"[serve:tiered] preemptions {s['preemptions']}, swap out "

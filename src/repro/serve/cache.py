@@ -93,6 +93,12 @@ class CacheManager(Protocol):
     def footprint_bytes(self) -> int: ...
     def used_bytes(self) -> int: ...
 
+    # observability (observe-only: bus/tracer writes never change behaviour;
+    # layers that add instrumented work — swap waits, COW forks — override
+    # bind_tracer to bind themselves AND delegate down)
+    def publish_metrics(self, bus) -> None: ...
+    def bind_tracer(self, tracer) -> None: ...
+
 
 class PrefixCachingPool(CacheLayer):
     """Shared-prefix reuse layer: a radix prompt index over any paged stack.

@@ -32,9 +32,11 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
+from repro.core import dma
 from repro.models import transformer
+from repro.serve import trace
 from repro.serve.cache import CacheConfig, build_cache_manager
 from repro.serve.executor import Executor
 from repro.serve.kvcache import CachePool
@@ -47,6 +49,9 @@ _DEPRECATION = (
     "Engine(paged=/tiered=/chunked_prefill=/prefix_cache=) feature flags are "
     "deprecated; pass config=EngineConfig(cache=CacheConfig(...)) instead "
     "(see repro.serve.engine.EngineConfig / repro.serve.cache.CacheConfig)")
+
+# the `trace: bool` field below shadows the module name inside the class body
+_DEFAULT_TRACE_BUFFER = trace.DEFAULT_BUFFER
 
 _LEGACY_DEFAULTS = dict(
     n_slots=4, max_seq=256, greedy=True, paged=False, page_tokens=16,
@@ -66,7 +71,16 @@ class EngineConfig:
     :class:`~repro.serve.metrics.MetricsBus` (observe-only; disabling it
     leaves engine outputs bit-identical); ``policy`` attaches an SLO
     :class:`~repro.serve.policy.SchedulerPolicy` built from the given
-    :class:`~repro.serve.policy.PolicyConfig` (None = policy-free FIFO)."""
+    :class:`~repro.serve.policy.PolicyConfig` (None = policy-free FIFO).
+
+    ``trace`` enables the execution :class:`~repro.serve.trace.Tracer`
+    (span timeline + stall attribution + Perfetto export — same observe-only
+    contract as the bus: disabled tracing leaves streams AND
+    ``metrics_snapshot()`` bit-identical); ``trace_buffer`` bounds its event
+    ring. ``clock`` injects the engine-wide monotonic time source (default
+    ``time.perf_counter``) — it feeds the tracer, every scheduler timestamp,
+    and the DMA transfer stamps, so a fake clock makes all serve-side timing
+    deterministic even with tracing off."""
     n_slots: int = 4
     max_seq: int = 256
     greedy: bool = True
@@ -77,6 +91,9 @@ class EngineConfig:
     cache: CacheConfig = CacheConfig()
     metrics: bool = True
     policy: Optional[PolicyConfig] = None
+    trace: bool = False
+    trace_buffer: int = _DEFAULT_TRACE_BUFFER
+    clock: Optional[Callable[[], float]] = None
 
     @property
     def paged(self) -> bool:
@@ -155,6 +172,21 @@ class Engine:
             pool = CachePool(cfg, config.n_slots, config.max_seq)
         self.bus = MetricsBus(enabled=config.metrics)
         self.executor.bind_metrics(self.bus)
+        # always a real Tracer (not the null singleton): clock injection must
+        # work even with tracing disabled — the tracer's clock is the one
+        # serve-side time source (scheduler timestamps, DMA stamps)
+        self.tracer = trace.Tracer(enabled=config.trace, clock=config.clock,
+                                   buffer=config.trace_buffer)
+        # module-global by design: the DMA layer cannot import serve. The
+        # last-constructed engine's clock governs the stamps (None restores
+        # time.perf_counter — a fake clock never outlives its engine's
+        # construction scope). Stamps are observational only, so a twin
+        # engine on a different clock still streams bit-identically.
+        dma.set_transfer_clock(config.clock)
+        self.executor.bind_tracer(self.tracer)
+        bind = getattr(pool, "bind_tracer", None)
+        if bind is not None:     # the dense CachePool has no instrumented work
+            bind(self.tracer)
         policy = None
         if config.policy is not None:
             policy = SchedulerPolicy(config.policy, bus=self.bus)
@@ -164,7 +196,7 @@ class Engine:
             tiered=config.cache.tiered, chunked=config.chunked,
             token_budget=config.token_budget,
             preempt_quantum=config.preempt_quantum,
-            metrics=self.bus, policy=policy)
+            metrics=self.bus, policy=policy, tracer=self.tracer)
 
     # -- host API (delegates to the scheduler) -----------------------------
     def submit(self, req: Request) -> bool:
@@ -190,6 +222,15 @@ class Engine:
     @property
     def metrics(self) -> MetricsBus:
         return self.bus
+
+    def trace_export(self, path: str) -> str:
+        """Write the tracer's event ring as Chrome trace-event JSON (open in
+        Perfetto / ``chrome://tracing``). Returns ``path``."""
+        return self.tracer.export(path)
+
+    def trace_summary(self) -> Dict[str, Any]:
+        """Windowed stall-attribution summary (see ``Tracer.stall_summary``)."""
+        return self.tracer.stall_summary()
 
     @property
     def shed(self) -> List[Request]:

@@ -49,7 +49,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.offload import TargetRegion
 from repro.models import transformer
 from repro.parallel import sharding
-from repro.serve import paged_step
+from repro.serve import paged_step, trace
 from repro.train import step as steps
 
 try:                                    # jax >= 0.5 moved it to the top level
@@ -102,6 +102,8 @@ class Executor:
         self.interpret = interpret
         self.stats = {"token_fetches": 0, "tokens_fetched": 0}
         self.bus = None     # MetricsBus, attached by the Engine facade
+        self.tracer = trace.null_tracer()   # Tracer, rebound by the facade
+        self._inflight: List[Tuple[str, float]] = []  # open device windows
         if self.tp > 1 and not paged:
             raise ValueError("tensor parallelism requires the paged serving "
                              "path (dense slot caches are not head-sharded)")
@@ -207,25 +209,49 @@ class Executor:
         return sampled
 
     # -- dispatch (async — the host thread continues immediately) ----------
+    def _note_dispatch(self, kind: str) -> None:
+        """Open a device window: jax dispatch is async, so the device is
+        (at least potentially) busy from here until this iteration's host
+        values land in ``fetch_token_ids`` — which closes every open window
+        with observed timestamps (span gaps, not guesses)."""
+        if self.tracer.enabled:
+            self._inflight.append((kind, self.tracer.now()))
+
     def decode_paged(self, tokens, pages, page_table, lengths, active):
-        with self._mesh_ctx():
-            return self._decode(self.params, tokens, pages, page_table,
-                                lengths, active)
+        with self.tracer.span("dispatch", kind="decode_paged"):
+            with self._mesh_ctx():
+                out = self._decode(self.params, tokens, pages, page_table,
+                                   lengths, active)
+            self._note_dispatch("decode_paged")
+            return out
 
     def prefill_chunk(self, tokens, pages, table_row, start):
-        with self._mesh_ctx():
-            return self._prefill_chunk(self.params, tokens, pages, table_row,
-                                       start)
+        with self.tracer.span("dispatch", kind="prefill_chunk"):
+            with self._mesh_ctx():
+                out = self._prefill_chunk(self.params, tokens, pages,
+                                          table_row, start)
+            self._note_dispatch("prefill_chunk")
+            return out
 
     def prefill_dense(self, tokens, caches):
-        with self._mesh_ctx():
-            return self._prefill_dense(self.params, tokens, caches)
+        with self.tracer.span("dispatch", kind="prefill_dense"):
+            with self._mesh_ctx():
+                out = self._prefill_dense(self.params, tokens, caches)
+            self._note_dispatch("prefill_dense")
+            return out
 
     def decode_dense(self, tokens, caches, cache_pos):
-        return self._decode(self.params, tokens, caches, cache_pos)
+        with self.tracer.span("dispatch", kind="decode_dense"):
+            out = self._decode(self.params, tokens, caches, cache_pos)
+            self._note_dispatch("decode_dense")
+            return out
 
     def prefill_slot(self, tokens, caches, slot, length):
-        return self._prefill_slot(self.params, tokens, caches, slot, length)
+        with self.tracer.span("dispatch", kind="prefill_slot"):
+            out = self._prefill_slot(self.params, tokens, caches, slot,
+                                     length)
+            self._note_dispatch("prefill_slot")
+            return out
 
     # -- pool placement ----------------------------------------------------
     def shard_pool(self, pool) -> None:
@@ -243,6 +269,12 @@ class Executor:
         counters onto it (observe-only — dispatch behaviour is unchanged)."""
         self.bus = bus
 
+    def bind_tracer(self, tracer) -> None:
+        """Attach the engine's Tracer: dispatches open ``dispatch`` spans +
+        async ``device_step`` windows, and ``fetch_token_ids`` wraps the one
+        device→host sync in a ``fetch_tokens`` span (observe-only)."""
+        self.tracer = tracer
+
     # -- the one device→host transfer --------------------------------------
     def fetch_token_ids(self, arrays: Sequence[jax.Array]
                         ) -> List[np.ndarray]:
@@ -255,7 +287,17 @@ class Executor:
         flats = [jnp.ravel(a) for a in arrays]
         joined = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
         self.stats["token_fetches"] += 1
-        host = np.asarray(joined)
+        with self.tracer.span("fetch_tokens", arrays=len(arrays)):
+            host = np.asarray(joined)
+        if self._inflight:
+            # the host values landed: every window opened since the last
+            # fetch is now known to have completed — close them at observed
+            # time on the device track
+            t_end = self.tracer.now()
+            for kind, t_begin in self._inflight:
+                self.tracer.async_span("device", "device_step", t_begin,
+                                       t_end, kind=kind)
+            self._inflight.clear()
         self.stats["tokens_fetched"] += int(host.size)
         if self.bus is not None:
             self.bus.set_total("token_fetches", self.stats["token_fetches"])

@@ -50,7 +50,7 @@ import numpy as np
 
 from repro.core import addrspace, vmm
 from repro.models import transformer
-from repro.serve import paged_step
+from repro.serve import paged_step, trace
 
 
 @dataclasses.dataclass
@@ -221,6 +221,7 @@ class PagedCachePool:
         self._shared_base: Dict[int, int] = {}  # seq_id -> adopted pages the
         #                                         seq will never write (full
         #                                         shared prefix pages)
+        self.tracer = trace.null_tracer()     # rebound via bind_tracer
 
     # -- admission --------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -379,11 +380,12 @@ class PagedCachePool:
         pages = self.alloc._seq_pages[sid]
         if idx >= len(pages) or self.alloc.refcount(pages[idx]) <= 1:
             return False
-        old, new = self.alloc.fork_page(sid, idx)
-        self.pages = [
-            tuple({name: paged_step.copy_page(kv[name], old, new)
-                   for name in ("k", "v")} for kv in per_pos)
-            for per_pos in self.pages]
+        with self.tracer.span("cow_copy", seq_id=sid, page=int(pages[idx])):
+            old, new = self.alloc.fork_page(sid, idx)
+            self.pages = [
+                tuple({name: paged_step.copy_page(kv[name], old, new)
+                       for name in ("k", "v")} for kv in per_pos)
+                for per_pos in self.pages]
         return True
 
     def can_reserve_decode(self, seq_id: int, prompt_len: int,
@@ -499,3 +501,10 @@ class PagedCachePool:
         bus.set("used_pages", self.alloc.n_pages - self.alloc.free_pages)
         bus.set("reservation_debt_pages", self._reservation_debt())
         bus.set("used_bytes", self.used_bytes())
+
+    def bind_tracer(self, tracer) -> None:
+        """Attach the engine's Tracer: COW forks emit ``cow_copy`` spans
+        (observe-only). Upper cache layers override this to bind themselves
+        AND delegate down — the generic ``CacheLayer.__getattr__``
+        fall-through alone would reach only the bottom pool."""
+        self.tracer = tracer

@@ -43,6 +43,19 @@ floored at one token per mid-prefill resident so fair-share survives).
 Policy never touches pages and never changes which tokens an admitted
 request streams.
 
+Tracing (PR 7): the scheduler is also the tracing root — every ``step()``
+runs inside a :class:`repro.serve.trace.Tracer` ``iteration`` span, with
+``schedule``/``policy``/``prefill_chunk`` phase spans below it and request
+lifecycle state recorded at every transition (``queued → admitted →
+prefill → decode → finished/shed/preempted → resumed``). The tracer's
+injected clock is the scheduler's ONLY time source (``self.tracer.now()``
+replaces every direct ``time.perf_counter()`` call), so an engine built
+with a fake clock is time-deterministic end to end. After each iteration
+closes, its exclusive stall buckets are published to the bus as
+``stall_pct_{schedule,fetch,dma,other}`` histograms — only when tracing is
+enabled, so a disabled tracer leaves ``metrics_snapshot()`` (and streams)
+bit-identical.
+
 Invariants (tests/test_scheduler_properties.py):
 
   * **Bit-identical streams**: scheduling decisions (chunking, preemption,
@@ -60,7 +73,6 @@ Invariants (tests/test_scheduler_properties.py):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -68,6 +80,7 @@ import numpy as np
 
 from repro.core.offload import Mailbox
 from repro.models import transformer
+from repro.serve import trace
 from repro.serve.executor import Executor
 from repro.serve.metrics import MetricsBus, percentiles
 from repro.serve.policy import SchedulerPolicy
@@ -106,7 +119,8 @@ class Scheduler:
                  token_budget: Optional[int] = None,
                  preempt_quantum: int = 1,
                  metrics: Optional[MetricsBus] = None,
-                 policy: Optional[SchedulerPolicy] = None):
+                 policy: Optional[SchedulerPolicy] = None,
+                 tracer: Optional[trace.Tracer] = None):
         self.cfg = cfg
         self.pool = pool
         self.executor = executor
@@ -115,6 +129,7 @@ class Scheduler:
         self.tiered = tiered
         self.chunked = chunked
         self.bus = metrics if metrics is not None else MetricsBus(enabled=False)
+        self.tracer = tracer if tracer is not None else trace.null_tracer()
         self.policy = policy
         self.shed: List[Request] = []              # policy-rejected requests
         self._ever_admitted: set = set()           # seq_ids that held pages
@@ -158,13 +173,14 @@ class Scheduler:
 
     # -- host API ----------------------------------------------------------
     def submit(self, req: Request) -> bool:
-        req.t_submit = time.perf_counter()
+        req.t_submit = self.tracer.now()
         req.t_first = 0.0
         req.prefill_pos = 0
         req.tokens_out = []
         req.t_tokens = []
         req.verdict = None
         self.bus.inc("requests_submitted")
+        self.tracer.request_state(req.seq_id, "queued")
         return self.mailbox.put(req)
 
     @property
@@ -181,30 +197,34 @@ class Scheduler:
         dispatch, each phase flushed once. Returns the requests that
         finished this iteration."""
         self._finished = []
-        self._policy_pass()
-        decoded = False
-        if self.chunked:
-            decoded = self._step_chunked()
-            self._flush_tokens()
-        elif self.paged:
-            self._admit_paged()
-            self._flush_tokens()
-            if self.active:
-                self._dispatch_decode_paged()
+        with self.tracer.iteration():
+            self._policy_pass()
+            decoded = False
+            if self.chunked:
+                decoded = self._step_chunked()
                 self._flush_tokens()
-                decoded = True
-        else:
-            self._admit()
-            self._flush_tokens()
-            if self.active:
-                self._dispatch_decode_dense()
+            elif self.paged:
+                with self.tracer.span("schedule"):
+                    self._admit_paged()
                 self._flush_tokens()
-        if self.tiered and decoded:
-            # double-buffer: with this step's releases applied, start the
-            # head-of-queue resume's host→dev DMAs now; they overlap the
-            # upcoming admission pass and land at the top of the next step
-            self._start_prefetch()
-        self._publish_metrics()
+                if self.active:
+                    self._dispatch_decode_paged()
+                    self._flush_tokens()
+                    decoded = True
+            else:
+                with self.tracer.span("schedule"):
+                    self._admit()
+                self._flush_tokens()
+                if self.active:
+                    self._dispatch_decode_dense()
+                    self._flush_tokens()
+            if self.tiered and decoded:
+                # double-buffer: with this step's releases applied, start the
+                # head-of-queue resume's host→dev DMAs now; they overlap the
+                # upcoming admission pass and land at the top of the next step
+                self._start_prefetch()
+            self._publish_metrics()
+        self._publish_stall()
         return self._finished
 
     def run(self, max_steps: int = 1000) -> List[Request]:
@@ -245,32 +265,35 @@ class Scheduler:
         refusal."""
         if self.policy is None or len(self.mailbox) == 0:
             return
-        pending = self.mailbox.drain(len(self.mailbox))
-        if not pending:
-            return
-        head_before = pending[0]
-        keep, shed = self.policy.plan(
-            pending, now=time.perf_counter(), in_system=self._in_system(),
-            sheddable=self._sheddable)
-        for req, verdict in shed:
-            req.verdict = verdict
-            req.done = True
-            self.shed.append(req)
-            self.stats["shed"] += 1
-        for req in reversed(keep):
-            self.mailbox.requeue(req)
-        if getattr(self, "_admit_stalled", False) and \
-                (shed or not keep or keep[0] is not head_before):
-            self._admit_stalled = False
+        with self.tracer.span("policy"):
+            pending = self.mailbox.drain(len(self.mailbox))
+            if not pending:
+                return
+            head_before = pending[0]
+            keep, shed = self.policy.plan(
+                pending, now=self.tracer.now(), in_system=self._in_system(),
+                sheddable=self._sheddable)
+            for req, verdict in shed:
+                req.verdict = verdict
+                req.done = True
+                self.shed.append(req)
+                self.stats["shed"] += 1
+                self.tracer.request_state(req.seq_id, "shed")
+            for req in reversed(keep):
+                self.mailbox.requeue(req)
+            if getattr(self, "_admit_stalled", False) and \
+                    (shed or not keep or keep[0] is not head_before):
+                self._admit_stalled = False
 
     def _note_first_admit(self, req: Request) -> None:
         """First-admission bookkeeping shared by every admission path."""
         self._ever_admitted.add(req.seq_id)
         self.stats["admission_order"].append(int(req.seq_id))
-        lat = time.perf_counter() - req.t_submit
+        lat = self.tracer.now() - req.t_submit
         self.stats["queue_lat_s"].append(lat)
         self.bus.observe("queue_lat_s", lat)
         self.bus.inc("admissions")
+        self.tracer.request_instant(req.seq_id, "admitted")
         if self.policy is not None:
             self.policy.note_admitted(req)
 
@@ -301,6 +324,21 @@ class Scheduler:
         if publish is not None:
             publish(bus)
 
+    def _publish_stall(self) -> None:
+        """Publish the just-closed iteration's exclusive stall buckets as
+        ``stall_pct_*`` histogram observations. Runs AFTER the iteration
+        span exits (buckets are only final at close) and only when tracing
+        is enabled — so a disabled tracer leaves ``metrics_snapshot()``
+        bit-identical to an untraced engine."""
+        if not self.tracer.enabled or not self.bus.enabled:
+            return
+        entry = self.tracer.last_iteration()
+        if entry is None or entry["dur"] <= 0.0:
+            return
+        for bucket, sec in entry["buckets"].items():
+            self.bus.observe(f"stall_pct_{bucket}",
+                             100.0 * sec / entry["dur"])
+
     # -- deferred token materialisation ------------------------------------
     def _queue_fetch(self, ids_dev, consumer: Callable) -> None:
         self._fetch_queue.append((ids_dev, consumer))
@@ -317,7 +355,7 @@ class Scheduler:
 
     def _emit(self, req: Request, tok: int) -> None:
         req.tokens_out.append(tok)
-        now = time.perf_counter()
+        now = self.tracer.now()
         if req.t_first == 0.0:
             req.t_first = now
             self.stats["ttft_s"].append(now - req.t_submit)
@@ -353,6 +391,7 @@ class Scheduler:
             self.pool.lengths[slot] = L + 1
             self.active[slot] = req
             self._note_first_admit(req)
+            self.tracer.request_state(req.seq_id, "decode")
             self.stats["prefills"] += 1
 
     def _dispatch_decode_dense(self):
@@ -383,6 +422,7 @@ class Scheduler:
                 self._finished.append(req)
                 del self.active[slot]
                 self.pool.free_slot(slot)
+                self.tracer.request_state(req.seq_id, "finished")
 
     # -- paged scheduling state --------------------------------------------
     def _activate(self, slot: int, req: Request, first_admit: bool):
@@ -393,13 +433,17 @@ class Scheduler:
         self._chunks_done[slot] = 0
         if self.chunked and req.prefill_pos < len(req.prompt):
             self.prefilling[slot] = req
+            state = "prefill"
         elif self.chunked and not self.pool.has_decode_reservation(
                 req.seq_id, len(req.prompt), req.max_new):
             self.prefilled_wait[slot] = req
+            state = "prefill"
         else:
             self.active[slot] = req
+            state = "decode"
         if first_admit:
             self._note_first_admit(req)
+        self.tracer.request_state(req.seq_id, state)
 
     def _pick_victim(self, exclude: Optional[int] = None) -> Optional[int]:
         """LRU preemption victim: least-recently-decoded resident, oldest
@@ -446,6 +490,7 @@ class Scheduler:
                 else:
                     vreq = self.prefilled_wait.pop(victim)
             self.pool.swap_out(victim)
+            self.tracer.request_state(vreq.seq_id, "preempted")
             # back of the queue: the waiting request goes first, the victim
             # resumes in FIFO turn (front-requeue only if the mailbox is
             # full — never lose a request)
@@ -467,6 +512,7 @@ class Scheduler:
         req, token = self._pending_swapin
         self._pending_swapin = None
         slot = self.pool.swap_in_finish(token)
+        self.tracer.request_instant(req.seq_id, "resumed")
         self._activate(slot, req, first_admit=False)
         self._sync_swap_stats()
 
@@ -511,6 +557,7 @@ class Scheduler:
                     self._admit_stalled = True
                     break
                 slot = self.pool.swap_in(req.seq_id)
+                self.tracer.request_instant(req.seq_id, "resumed")
                 self._activate(slot, req, first_admit=False)
                 self._sync_swap_stats()
                 continue
@@ -677,6 +724,7 @@ class Scheduler:
                 self._finished.append(req)
                 del self.active[slot]
                 self.pool.release(slot)
+                self.tracer.request_state(req.seq_id, "finished")
                 self._admit_stalled = False       # capacity freed: retry admits
 
     def _start_prefetch(self):
@@ -713,20 +761,22 @@ class Scheduler:
         prefilled, and streams its first token within this single iteration —
         it never queues behind another request's whole prefill. Returns True
         iff a decode step was dispatched."""
-        if self.tiered:
-            self._finish_pending_swapin()
-        self._admit_paged()
-        self._promote_waiters()
-        decode_slots = sorted(self.active)
-        mid_prefill = sorted(int(r.seq_id) for r in self.prefilling.values())
-        budget_left = self.token_budget - len(decode_slots)
-        if self.policy is not None:
-            # ITL-target mix shaping: squeeze the prefill share down to its
-            # floor (one token per mid-prefill resident) when decode latency
-            # is over target — fair-share/no-starvation survives the clamp
-            budget_left = self.policy.prefill_allowance(
-                budget_left, len(self.prefilling))
-        chunks = self._pack_chunks(budget_left)
+        with self.tracer.span("schedule"):
+            if self.tiered:
+                self._finish_pending_swapin()
+            self._admit_paged()
+            self._promote_waiters()
+            decode_slots = sorted(self.active)
+            mid_prefill = sorted(
+                int(r.seq_id) for r in self.prefilling.values())
+            budget_left = self.token_budget - len(decode_slots)
+            if self.policy is not None:
+                # ITL-target mix shaping: squeeze the prefill share down to
+                # its floor (one token per mid-prefill resident) when decode
+                # latency is over target — fair-share/no-starvation survives
+                budget_left = self.policy.prefill_allowance(
+                    budget_left, len(self.prefilling))
+            chunks = self._pack_chunks(budget_left)
         for slot, req, start, size in chunks:
             self._run_chunk(slot, req, start, size)
         if decode_slots:
@@ -774,15 +824,18 @@ class Scheduler:
         the slot's already-reserved pages; when the chunk completes the
         prompt, its sampled first token is queued for this iteration's flush
         (emission + prefix insertion + promotion run once the value lands)."""
-        if self.prefix is not None and self.pool.cow_unshare(slot, start):
-            # the first chunk after a mid-page prefix match diverges inside
-            # the shared partially-filled page: fork it before the write
-            self.stats["cow_forks"] += 1
-        table_row = jnp.asarray(self.pool.page_table_row(slot))
-        toks = jnp.asarray(
-            req.prompt[start:start + size][None, :].astype(np.int32))
-        tok_dev, self.pool.pages = self.executor.prefill_chunk(
-            toks, self.pool.pages, table_row, jnp.asarray(start, jnp.int32))
+        with self.tracer.span("prefill_chunk", seq_id=int(req.seq_id),
+                              start=int(start), size=int(size)):
+            if self.prefix is not None and self.pool.cow_unshare(slot, start):
+                # the first chunk after a mid-page prefix match diverges
+                # inside the shared partially-filled page: fork it first
+                self.stats["cow_forks"] += 1
+            table_row = jnp.asarray(self.pool.page_table_row(slot))
+            toks = jnp.asarray(
+                req.prompt[start:start + size][None, :].astype(np.int32))
+            tok_dev, self.pool.pages = self.executor.prefill_chunk(
+                toks, self.pool.pages, table_row,
+                jnp.asarray(start, jnp.int32))
         req.prefill_pos = start + size
         self.pool.lengths[slot] = req.prefill_pos
         self._chunks_done[slot] += 1
@@ -808,6 +861,7 @@ class Scheduler:
         if self.pool.reserve_decode(req.seq_id, len(req.prompt),
                                     req.max_new):
             self.active[slot] = req
+            self.tracer.request_state(req.seq_id, "decode")
         else:
             self.prefilled_wait[slot] = req
 
@@ -849,6 +903,7 @@ class Scheduler:
                 return
             del self.prefilled_wait[head]
             self.active[head] = req
+            self.tracer.request_state(req.seq_id, "decode")
 
     def _evict_reprefill(self, slot: int):
         """Promotion-deadlock breaker (untiered, or tiered with the host
@@ -871,6 +926,7 @@ class Scheduler:
                 pass
             req.t_first = 0.0
         self.mailbox.requeue(req)
+        self.tracer.request_state(req.seq_id, "queued")
         self.stats["evictions_reprefill"] += 1
         self._admit_stalled = False
 

@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.core import dma, heromem, vmm
 from repro.models import transformer
-from repro.serve import paged_step
+from repro.serve import paged_step, trace
 from repro.serve import kvcache
 from repro.serve.kvcache import PagedCachePool
 
@@ -116,6 +116,7 @@ class TieredCachePool(kvcache.CacheLayer):
         self.swap_in_count = 0
         self.swap_out_bytes = 0
         self.swap_in_bytes = 0
+        self.tracer = trace.null_tracer()     # rebound via bind_tracer
 
     @property
     def hot(self) -> PagedCachePool:
@@ -161,6 +162,24 @@ class TieredCachePool(kvcache.CacheLayer):
         bus.set_total("swap_in_count", self.swap_in_count)
         bus.set_total("swap_out_bytes", self.swap_out_bytes)
         bus.set_total("swap_in_bytes", self.swap_in_bytes)
+
+    def bind_tracer(self, tracer) -> None:
+        """Attach the engine's Tracer here AND on the hot pool below:
+        blocking DMA waits emit ``swap_wait`` spans, the in-flight transfer
+        windows land on the dma track from the handles' observed
+        ``t_start``/``t_done`` stamps (observe-only)."""
+        self.tracer = tracer
+        self.inner.bind_tracer(tracer)
+
+    def _trace_dma(self, name: str, handles, nbytes: int) -> None:
+        """One aggregate dma-track window per swap phase: earliest issue to
+        latest completion across the batch (the transfers overlap — the
+        window IS the double-buffering evidence)."""
+        if not self.tracer.enabled or not handles:
+            return
+        self.tracer.async_span(
+            "dma", name, min(h.t_start for h in handles),
+            max(h.t_done for h in handles), bytes=nbytes, n=len(handles))
 
     def host_free_bytes(self) -> int:
         return self.hero.capacity(3)
@@ -210,8 +229,11 @@ class TieredCachePool(kvcache.CacheLayer):
                     paged_step.gather_pages(kv[name], idx))
                     for name in ("k", "v")})
             handles.append(row)
-        dma.hero_memcpy_wait_all(
-            [h for row in handles for ent in row for h in ent.values()])
+        flat = [h for row in handles for ent in row for h in ent.values()]
+        with self.tracer.span("swap_wait", dir="out", seq_id=sid,
+                              bytes=nbytes):
+            dma.hero_memcpy_wait_all(flat)
+        self._trace_dma("swap_out_dma", flat, nbytes)
         host = [[{name: np.asarray(h.value) for name, h in ent.items()}
                  for ent in row] for row in handles]
         # resume re-allocates every page as private (the shared prefix is
@@ -265,9 +287,12 @@ class TieredCachePool(kvcache.CacheLayer):
         # in swap_in_start) are filled by later prefill chunks before any read
         idx = jnp.asarray(self.hot.alloc._seq_pages[rec.seq_id][:rec.n_valid],
                           jnp.int32)
-        dma.hero_memcpy_wait_all(
-            [h for row in pending.handles for ent in row
-             for h in ent.values()])
+        flat = [h for row in pending.handles for ent in row
+                for h in ent.values()]
+        with self.tracer.span("swap_wait", dir="in", seq_id=rec.seq_id,
+                              bytes=rec.nbytes):
+            dma.hero_memcpy_wait_all(flat)
+        self._trace_dma("swap_in_dma", flat, rec.nbytes)
         new_pages = []
         for gi, per_pos in enumerate(self.hot.pages):
             new_per_pos = []

@@ -65,10 +65,11 @@ def test_grad_accum_matches_plain():
 
 @pytest.mark.slow  # subprocess CLI end-to-end
 @pytest.mark.parametrize("mode", ["dense", "paged", "tiered", "chunked",
-                                  "prefix", "tp"])
-def test_serve_driver_cli(mode):
+                                  "prefix", "tp", "trace"])
+def test_serve_driver_cli(mode, tmp_path):
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    trace_out = str(tmp_path / "serve.trace.json")
     cmd = [sys.executable, "-m", "repro.launch.serve", "--requests", "3",
            "--slots", "2", "--max-new", "3", "--max-seq", "32"]
     if mode == "paged":
@@ -92,6 +93,11 @@ def test_serve_driver_cli(mode):
                             ).strip()
         cmd += ["--tp", "2", "--chunked-prefill", "--page-tokens", "8",
                 "--token-budget", "6"]
+    elif mode == "trace":
+        # tiered oversubscription so swap DMA windows land in the export
+        cmd += ["--tiered", "--page-tokens", "8", "--pages", "2",
+                "--host-budget-mb", "1", "--trace", trace_out,
+                "--metrics-log", "7"]
     r = subprocess.run(cmd, env=env, capture_output=True, text=True,
                        timeout=400)
     assert "3 requests" in r.stdout, r.stdout + r.stderr
@@ -105,6 +111,13 @@ def test_serve_driver_cli(mode):
         assert "prefix hits" in r.stdout and "shared tokens" in r.stdout
     elif mode == "tp":
         assert "serve:tp2+chunked" in r.stdout, r.stdout + r.stderr
+    elif mode == "trace":
+        assert "[serve:trace]" in r.stdout and "stall%" in r.stdout, \
+            r.stdout + r.stderr
+        assert "[metrics]" in r.stdout       # final-window flush at drain
+        import json as _json
+        doc = _json.load(open(trace_out))
+        assert doc["traceEvents"] and doc["displayTimeUnit"] == "ms"
 
 
 def test_validate_bench_schema_roundtrip(tmp_path):
@@ -156,6 +169,12 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                 "identical_streams": 1,
                 "reference": engine_stub("slo"),
                 "baseline": engine_stub("slo"), "slo": engine_stub("slo")},
+        "trace": {"arch": "qwen2-0.5b", "hot_pages": 4, "page_tokens": 8,
+                  "n_slots": 2, "requests": 12, "tp": 2, "token_budget": 10,
+                  "plain_wall_s": 0.5, "identical_streams": 1,
+                  "deterministic_snapshot": 1, "closure_worst_err_pct": 0.0,
+                  "trace_json": "BENCH_serve.trace.json",
+                  "traced": engine_stub("trace")},
     }
     p = tmp_path / "BENCH_serve.json"
     p.write_text(json.dumps(good))
@@ -178,4 +197,4 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                               "BENCH_serve.json")
     assert validate(repo_bench) == []
     assert set(SCHEMAS) == {"tiering", "chunked_prefill", "prefix_cache",
-                            "tensor_parallel", "slo"}
+                            "tensor_parallel", "slo", "trace"}

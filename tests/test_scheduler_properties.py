@@ -20,6 +20,11 @@ The property runs with ``compute_dtype=float32`` so the bit-identity claim
 is about the *scheduler*, not about bf16 rounding luck between the two
 prefill algorithms (the bf16 end-to-end case is covered deterministically in
 tests/test_system.py). ``derandomize=True`` keeps CI reproducible.
+
+The tracing properties at the bottom add the observability axis (PR 7): on
+any workload a traced engine streams the same tokens as an untraced one,
+and every iteration's exclusive stall buckets are non-overlapping,
+non-negative, and close the iteration's wall span.
 """
 import jax
 import jax.numpy as jnp
@@ -32,6 +37,7 @@ from repro.serve.cache import CacheConfig
 from repro.serve.engine import Engine, EngineConfig, Request
 from repro.serve.kvcache import token_bytes
 from repro.serve.policy import PolicyConfig
+from repro.serve import trace
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -681,3 +687,137 @@ def test_chunked_scheduler_property():
         sched = _schedule_from(raw, seed, n_pages, 8, 64)
         _run_case(sched, n_slots + budget_extra, n_slots, n_pages)
     prop()
+
+
+# -- execution tracing (PR 7): stall-bucket accounting -----------------------
+def _run_case_traced(schedule, token_budget, n_slots, n_pages, *,
+                     page_tokens=8, max_seq=64, tiered=False, prefix=False,
+                     tp=1, cfg=None, params=None):
+    """A traced engine vs its untraced twin on the same workload.
+
+    Asserts the observe-only contract (greedy streams bit-identical), then
+    the stall-attribution invariants on every recorded iteration:
+
+      * bucket keys are exactly ``trace.BUCKETS`` — non-overlap is
+        structural (a span contributes only its *exclusive* self-time;
+        children subtract from the parent), so equal key-sets plus closure
+        IS the non-overlap proof,
+      * every bucket value is non-negative,
+      * the buckets sum to the iteration's wall span (closure is exact by
+        construction — the tolerance absorbs float accumulation only),
+
+    and finally that the aggregate ``stall_pct_*`` histograms landed in
+    the metrics snapshot."""
+    if cfg is None:
+        cfg, params = _CFG, _params()
+    cache = CacheConfig(
+        paged=True, page_tokens=page_tokens, n_pages=n_pages, tiered=tiered,
+        host_budget_bytes=(16 * 2 * len(schedule) * token_bytes(cfg)
+                           * page_tokens) if tiered else None,
+        prefix=prefix,
+        prefix_pages=max(2, n_pages // 2) if prefix else None)
+    kw = dict(n_slots=n_slots, max_seq=max_seq, chunked=True,
+              token_budget=token_budget, preempt_quantum=1, tp=tp,
+              cache=cache)
+    plain = Engine(cfg, params, config=EngineConfig(**kw))
+    ref = {r.seq_id: list(r.tokens_out) for r in _drive(plain, schedule)}
+    traced = Engine(cfg, params, config=EngineConfig(trace=True, **kw))
+    got = {r.seq_id: list(r.tokens_out) for r in _drive(traced, schedule)}
+    assert set(got) == set(range(len(schedule)))
+    assert got == ref, "tracing must never change greedy streams"
+
+    log = traced.tracer.stall_log()
+    assert log, "a traced drain must record at least one iteration"
+    for prev, cur in zip(log, log[1:]):
+        assert cur["iter"] > prev["iter"], "iteration log out of order"
+    for entry in log:
+        b = entry["buckets"]
+        assert set(b) == set(trace.BUCKETS), f"bucket keys drifted: {b}"
+        assert all(v >= 0.0 for v in b.values()), \
+            f"negative exclusive self-time: {entry}"
+        assert entry["dur"] >= 0.0
+        assert sum(b.values()) == pytest.approx(entry["dur"], rel=1e-9,
+                                                abs=1e-12), \
+            f"stall buckets do not close the iteration span: {entry}"
+    hists = traced.metrics_snapshot()["histograms"]
+    assert all(f"stall_pct_{name}" in hists for name in trace.BUCKETS)
+    return traced
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_stall_accounting_tiered_property():
+    """Random arrivals on the tiered (swap-preempting) chunked engine: the
+    8-page hot pool squeezes concurrent residents so swap_wait spans (the
+    dma bucket) actually occur in most cases, and the bucket accounting
+    must survive preemption/resume churn."""
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(
+        raw=st.lists(st.tuples(st.integers(0, 8),      # arrival iteration
+                               st.integers(1, 16),     # prompt length
+                               st.integers(1, 5)),     # max_new
+                     min_size=2, max_size=5),
+        n_slots=st.integers(2, 3),
+        budget_extra=st.integers(1, 10),
+        seed=st.integers(0, 3),
+    )
+    def prop(raw, n_slots, budget_extra, seed):
+        n_pages = 8
+        sched = _schedule_from(raw, seed, n_pages, 8, 64)
+        _run_case_traced(sched, n_slots + budget_extra, n_slots, n_pages,
+                         tiered=True)
+    prop()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_stall_accounting_prefix_property():
+    """The prefix-sharing mix: COW forks add cow_copy spans (other bucket)
+    and adopted prefixes skip prefill chunks entirely — the accounting
+    must close on iterations with zero engine work too."""
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(
+        raw=st.lists(st.tuples(st.integers(0, 8),      # arrival iteration
+                               st.integers(0, 2),      # which shared prefix
+                               st.integers(0, 8),      # suffix length
+                               st.integers(1, 4)),     # max_new
+                     min_size=2, max_size=5),
+        n_slots=st.integers(2, 3),
+        budget_extra=st.integers(1, 10),
+        n_pages=st.integers(10, 16),
+        seed=st.integers(0, 3),
+    )
+    def prop(raw, n_slots, budget_extra, n_pages, seed):
+        sched = _prefix_schedule(raw, seed, n_pages, 8, 64)
+        _run_case_traced(sched, n_slots + budget_extra, n_slots, n_pages,
+                         prefix=True)
+    prop()
+
+
+# -- deterministic twin (runs even without hypothesis) -----------------------
+def test_stall_accounting_random_cases_seeded():
+    rng = np.random.default_rng(77)
+    for case in range(3):
+        n_req = int(rng.integers(2, 6))
+        raw = [(int(rng.integers(0, 8)), int(rng.integers(1, 16)),
+                int(rng.integers(1, 5))) for _ in range(n_req)]
+        n_slots = int(rng.integers(2, 4))
+        budget = int(rng.integers(n_slots + 1, 16))
+        sched = _schedule_from(raw, 300 + case, 8, 8, 64)
+        _run_case_traced(sched, budget, n_slots, 8, tiered=(case % 2 == 0))
+
+
+@pytest.mark.parametrize("tp", [2])
+def test_stall_accounting_under_tensor_parallel(tp):
+    """Stall accounting on the tp-sharded tiered executor: dispatch spans
+    wrap shard_map'd steps and swap DMA windows run against head-sharded
+    pools — the exclusive-bucket closure must be unaffected by device
+    count."""
+    if _N_DEV < tp:
+        pytest.skip(f"needs {tp} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    cfg, params = _tp_cfg(tp)
+    rng = np.random.default_rng(19)
+    sched = [(2 * i, rng.integers(0, cfg.vocab,
+                                  4 + 2 * i).astype(np.int32), 3)
+             for i in range(4)]
+    _run_case_traced(sched, token_budget=10, n_slots=2, n_pages=8,
+                     tiered=True, tp=tp, cfg=cfg, params=params)

@@ -45,6 +45,7 @@ REQUIRED_MODULES = (
     "src/repro/serve/engine.py",
     "src/repro/serve/metrics.py",
     "src/repro/serve/policy.py",
+    "src/repro/serve/trace.py",
 )
 
 
