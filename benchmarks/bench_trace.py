@@ -139,7 +139,6 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
         _reexec(smoke, arch)
         return None
     from repro import configs
-    from repro.core import dma
     from repro.models import blocks, transformer
     from repro.serve.kvcache import token_bytes
 
@@ -177,8 +176,8 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
     assert worst_err <= CLOSURE_TOL_PCT, (
         f"stall buckets must close each iteration's wall time within "
         f"{CLOSURE_TOL_PCT}% (worst {worst_err:.3f}%)")
-    total_pct = (summary["stall_pct_schedule"] + summary["stall_pct_fetch"]
-                 + summary["stall_pct_dma"] + summary["stall_pct_other"])
+    from repro.serve import trace as _trace
+    total_pct = sum(summary[f"stall_pct_{b}"] for b in _trace.BUCKETS)
     assert abs(total_pct - 100.0) <= CLOSURE_TOL_PCT, \
         f"aggregate stall percentages must sum to ~100 (got {total_pct:.2f})"
     events = eng_t.tracer.chrome_trace()["traceEvents"]
@@ -199,7 +198,6 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
         assert {r.seq_id: list(r.tokens_out)
                 for r in done_f} == streams_p, "fake-clock streams diverged"
         snaps.append(json.dumps(eng_f.metrics_snapshot(), sort_keys=True))
-    dma.set_transfer_clock(None)            # fake clocks end with the twins
     assert snaps[0] == snaps[1], (
         "metrics_snapshot() must be bit-identical across fake-clock twins "
         "(a direct perf_counter call is leaking wall time)")
@@ -212,6 +210,7 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
         "stall_pct_schedule": summary["stall_pct_schedule"],
         "stall_pct_fetch": summary["stall_pct_fetch"],
         "stall_pct_dma": summary["stall_pct_dma"],
+        "stall_pct_shadowed": summary["stall_pct_shadowed"],
         "stall_pct_other": summary["stall_pct_other"],
         "dma_windows": dma_windows, "device_windows": device_windows,
     }
@@ -233,7 +232,8 @@ def run(smoke: bool = True, arch: str = "qwen2-0.5b", n_slots: int = 2,
           f"iterations={traced['iterations']} events={traced['events']} "
           f"stall%={summary['stall_pct_schedule']:.1f}/"
           f"{summary['stall_pct_fetch']:.1f}/{summary['stall_pct_dma']:.1f}/"
-          f"{summary['stall_pct_other']:.1f} (sched/fetch/dma/other)")
+          f"{summary['stall_pct_shadowed']:.1f}/"
+          f"{summary['stall_pct_other']:.1f} (sched/fetch/dma/shadowed/other)")
     print(f"# closure worst err {worst_err:.4f}% (tol {CLOSURE_TOL_PCT}%); "
           f"{dma_windows} dma windows, {device_windows} device windows; "
           f"streams bit-identical traced/untraced/fake-clock; "

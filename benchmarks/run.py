@@ -27,6 +27,10 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
                               determinism, Perfetto export →
                               BENCH_serve.json ``trace`` section +
                               BENCH_serve.trace.json
+  §3      bench_overlap       overlapped engine loop vs the sync loop on
+                              the tiered+tp mix — bit-identical streams,
+                              ≥2x non-compute stall reduction →
+                              BENCH_serve.json ``overlap`` section
   (validate_bench checks the BENCH_serve.json schema after the benches)
 """
 from __future__ import annotations
@@ -39,8 +43,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_autodma, bench_chunked_prefill,
                             bench_complexity, bench_interconnect, bench_isa,
-                            bench_parallel, bench_prefix_cache, bench_slo,
-                            bench_tensor_parallel, bench_tiering,
+                            bench_overlap, bench_parallel, bench_prefix_cache,
+                            bench_slo, bench_tensor_parallel, bench_tiering,
                             bench_tiling, bench_trace, roofline_report,
                             validate_bench)
     failures = []
@@ -48,7 +52,7 @@ def main() -> None:
                 bench_autodma, bench_interconnect, bench_isa,
                 roofline_report, bench_tiering, bench_chunked_prefill,
                 bench_prefix_cache, bench_tensor_parallel, bench_slo,
-                bench_trace):
+                bench_trace, bench_overlap):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()

@@ -67,6 +67,13 @@ SCHEMAS = {
         "trace_json": str,                   # exported Perfetto artifact
         "traced": dict,
     },
+    "overlap": {
+        "arch": str, "hot_pages": _NUM, "page_tokens": _NUM, "n_slots": _NUM,
+        "requests": _NUM, "tp": _NUM, "token_budget": _NUM,
+        "identical_streams": _NUM,           # 1 = overlap streams == sync
+        "noncompute_stall_reduction": _NUM,  # sync/(overlap) schedule+fetch+dma
+        "sync": dict, "overlap": dict,
+    },
 }
 # keys every per-engine sub-dict must carry with numeric values
 ENGINE_NUM_KEYS = {
@@ -83,8 +90,12 @@ ENGINE_NUM_KEYS = {
             "admission_refusals", "shed", "itl_p50_s", "itl_p99_s"),
     "trace": ("completed", "tokens", "wall_s", "iterations", "events",
               "dropped", "stall_pct_schedule", "stall_pct_fetch",
-              "stall_pct_dma", "stall_pct_other", "dma_windows",
-              "device_windows"),
+              "stall_pct_dma", "stall_pct_shadowed", "stall_pct_other",
+              "dma_windows", "device_windows"),
+    "overlap": ("completed", "tokens", "wall_s", "iterations",
+                "noncompute_pct", "stall_pct_schedule", "stall_pct_fetch",
+                "stall_pct_dma", "stall_pct_shadowed", "stall_pct_other",
+                "swap_out_count", "swap_in_count"),
 }
 
 
@@ -110,7 +121,7 @@ def _check(errors, path, obj, schema):
 
 def validate(path: str, require=("tiering", "chunked_prefill",
                                  "prefix_cache", "tensor_parallel", "slo",
-                                 "trace")):
+                                 "trace", "overlap")):
     """Returns a list of error strings (empty = valid)."""
     errors = []
     try:
@@ -145,7 +156,7 @@ def main():
     ap.add_argument("path", nargs="?", default="BENCH_serve.json")
     ap.add_argument("--require", nargs="+",
                     default=["tiering", "chunked_prefill", "prefix_cache",
-                             "tensor_parallel", "slo", "trace"])
+                             "tensor_parallel", "slo", "trace", "overlap"])
     args = ap.parse_args()
     errors = validate(args.path, require=tuple(args.require))
     if errors:

@@ -29,7 +29,7 @@ import numpy as np
 try:  # TPU backend primitives — present in jax but only lower on TPU
     from jax.experimental.pallas import tpu as pltpu
     _HAVE_PLTPU = True
-except Exception:  # pragma: no cover
+except ImportError:  # pragma: no cover
     _HAVE_PLTPU = False
 
 
@@ -43,49 +43,43 @@ class TransferHandle:
     ``wait()`` is idempotent (re-waiting a completed transfer is a no-op that
     returns the same value) and ``nbytes`` carries the transfer size for
     hero_perf-style traffic counters (the swap tier sums these).
-    ``t_start``/``t_done`` stamp issue and completion on the module transfer
-    clock (:func:`set_transfer_clock`): the serve-layer tracer renders the
-    async window between them on its dma track, so DMA/compute overlap is
-    *observed* from the handle, never guessed. Observational only — nothing
-    reads the stamps to make decisions.
+    ``t_start``/``t_done`` stamp issue and completion on the handle's own
+    clock (the ``clock=`` passed to the ``_async`` constructor, defaulting to
+    ``time.perf_counter``): the serve-layer tracer renders the async window
+    between them on its dma track, so DMA/compute overlap is *observed* from
+    the handle, never guessed. The clock is per-handle — two engines with
+    different injected clocks never stamp each other's transfers.
+    Observational only — nothing reads the stamps to make decisions.
     """
     value: object
     _id: int
     nbytes: int = 0
     t_start: float = 0.0
     t_done: float = 0.0
+    clock: Callable[[], float] = time.perf_counter
 
     def wait(self):
         jax.block_until_ready(self.value)
         if self.t_done == 0.0:
-            self.t_done = _CLOCK[0]()
+            self.t_done = self.clock()
         return self.value
 
 
 _NEXT_ID = [0]
 
-# core must not import the serve layer, so the tracer's injected clock
-# reaches the handle stamps through this module-level slot instead
-_CLOCK: list = [time.perf_counter]
-
-
-def set_transfer_clock(clock: Optional[Callable[[], float]]) -> None:
-    """Route TransferHandle timestamps through ``clock`` (None restores
-    ``time.perf_counter``). Injected by the engine when it carries a
-    deterministic test clock; stamps are observational only."""
-    _CLOCK[0] = clock if clock is not None else time.perf_counter
-
 
 def _nbytes(v) -> int:
     try:
         return int(v.size) * int(v.dtype.itemsize)
-    except Exception:
+    except (AttributeError, TypeError):
         return 0
 
 
-def _handle(v) -> TransferHandle:
+def _handle(v, clock: Optional[Callable[[], float]] = None) -> TransferHandle:
     _NEXT_ID[0] += 1
-    return TransferHandle(v, _NEXT_ID[0], _nbytes(v), t_start=_CLOCK[0]())
+    clk = clock if clock is not None else time.perf_counter
+    return TransferHandle(v, _NEXT_ID[0], _nbytes(v), t_start=clk(),
+                          clock=clk)
 
 
 def hero_memcpy_host2dev(dst_sharding, src) -> jax.Array:
@@ -95,8 +89,10 @@ def hero_memcpy_host2dev(dst_sharding, src) -> jax.Array:
     return out
 
 
-def hero_memcpy_host2dev_async(dst_sharding, src) -> TransferHandle:
-    return _handle(jax.device_put(src, dst_sharding))
+def hero_memcpy_host2dev_async(dst_sharding, src,
+                               clock: Optional[Callable[[], float]] = None,
+                               ) -> TransferHandle:
+    return _handle(jax.device_put(src, dst_sharding), clock=clock)
 
 
 def hero_memcpy_dev2host(dst: Optional[np.ndarray], src: jax.Array) -> np.ndarray:
@@ -107,9 +103,11 @@ def hero_memcpy_dev2host(dst: Optional[np.ndarray], src: jax.Array) -> np.ndarra
     return arr
 
 
-def hero_memcpy_dev2host_async(src: jax.Array) -> TransferHandle:
+def hero_memcpy_dev2host_async(src: jax.Array,
+                               clock: Optional[Callable[[], float]] = None,
+                               ) -> TransferHandle:
     src.copy_to_host_async()
-    return _handle(src)
+    return _handle(src, clock=clock)
 
 
 def hero_memcpy_wait(handle: TransferHandle):

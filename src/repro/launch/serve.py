@@ -20,6 +20,12 @@ hero_memcpy DMA and the request resumes later (preemptive scheduling);
 loop (continuous batching with chunked prefill; implies --paged, composes
 with --tiered); ``--token-budget`` caps the tokens any iteration may process
 — decode tokens are packed first, prompt chunks fill the remainder.
+The chunked step loop runs **overlapped** by default (PR 8): iteration k's
+device step is dispatched, then iteration k+1's scheduling, swap-in DMAs,
+and COW pre-forks run in its shadow, blocking only at the commit-point
+token fetch — greedy streams are bit-identical either way. ``--no-overlap``
+restores the fully synchronous loop (each phase flushed before the next),
+which is the right mode for latency-bisection debugging.
 ``--prefix-cache`` (implies --chunked-prefill) turns on shared-prefix KV
 caching: completed prompts are indexed in a radix tree and later arrivals
 adopt the ref-counted pages of their longest cached prefix instead of
@@ -110,6 +116,11 @@ def main():
                     help="tokens per engine iteration (decode first, prompt "
                          "chunks fill the remainder; default "
                          "slots + 4×page-tokens)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the overlapped step loop: run scheduling, "
+                         "swap DMAs, and COW copies synchronously instead "
+                         "of in the device step's shadow (streams are "
+                         "bit-identical either way)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="shared-prefix KV caching: radix prompt index + "
                          "ref-counted copy-on-write pages (implies "
@@ -166,7 +177,8 @@ def main():
     eng = Engine(cfg, params, config=EngineConfig(
         n_slots=args.slots, max_seq=args.max_seq,
         chunked=args.chunked_prefill, token_budget=args.token_budget,
-        preempt_quantum=args.preempt_quantum, tp=args.tp, policy=policy,
+        preempt_quantum=args.preempt_quantum, overlap=not args.no_overlap,
+        tp=args.tp, policy=policy,
         trace=args.trace is not None, **trace_kw,
         cache=CacheConfig(
             paged=args.paged or args.tp > 1, page_tokens=args.page_tokens,
@@ -252,9 +264,10 @@ def main():
         st = eng.tracer.stats()
         print(f"[serve:trace] {st['iterations']} iterations, "
               f"{st['events']} events ({st['dropped']} dropped) -> {path}; "
-              f"stall% schedule/fetch/dma/other "
+              f"stall% schedule/fetch/dma/shadowed/other "
               f"{ts['stall_pct_schedule']:.1f}/{ts['stall_pct_fetch']:.1f}/"
-              f"{ts['stall_pct_dma']:.1f}/{ts['stall_pct_other']:.1f}")
+              f"{ts['stall_pct_dma']:.1f}/{ts['stall_pct_shadowed']:.1f}/"
+              f"{ts['stall_pct_other']:.1f}")
     if args.tiered:
         s = eng.stats_summary()
         print(f"[serve:tiered] preemptions {s['preemptions']}, swap out "

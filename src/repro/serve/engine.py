@@ -34,7 +34,6 @@ import dataclasses
 import warnings
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core import dma
 from repro.models import transformer
 from repro.serve import trace
 from repro.serve.cache import CacheConfig, build_cache_manager
@@ -73,6 +72,13 @@ class EngineConfig:
     :class:`~repro.serve.policy.SchedulerPolicy` built from the given
     :class:`~repro.serve.policy.PolicyConfig` (None = policy-free FIFO).
 
+    ``overlap`` (default True) enables the overlapped step loop on the
+    chunked path: iteration k's device step hides iteration k+1's
+    scheduling, swap DMAs, and COW copies, with the one blocking token
+    fetch as the commit point (see serve/scheduler.py). Greedy streams are
+    bit-identical either way; ``overlap=False`` restores the fully
+    synchronous loop. Ignored (always synchronous) off the chunked path.
+
     ``trace`` enables the execution :class:`~repro.serve.trace.Tracer`
     (span timeline + stall attribution + Perfetto export — same observe-only
     contract as the bus: disabled tracing leaves streams AND
@@ -87,6 +93,7 @@ class EngineConfig:
     chunked: bool = False
     token_budget: Optional[int] = None
     preempt_quantum: int = 1
+    overlap: bool = True
     tp: int = 1
     cache: CacheConfig = CacheConfig()
     metrics: bool = True
@@ -177,12 +184,10 @@ class Engine:
         # serve-side time source (scheduler timestamps, DMA stamps)
         self.tracer = trace.Tracer(enabled=config.trace, clock=config.clock,
                                    buffer=config.trace_buffer)
-        # module-global by design: the DMA layer cannot import serve. The
-        # last-constructed engine's clock governs the stamps (None restores
-        # time.perf_counter — a fake clock never outlives its engine's
-        # construction scope). Stamps are observational only, so a twin
-        # engine on a different clock still streams bit-identically.
-        dma.set_transfer_clock(config.clock)
+        # DMA TransferHandle stamps ride the tracer's clock per-handle (the
+        # tiering layer passes clock= into every _async constructor), so two
+        # live engines with different injected clocks never stamp each
+        # other's transfers. Stamps are observational only.
         self.executor.bind_tracer(self.tracer)
         bind = getattr(pool, "bind_tracer", None)
         if bind is not None:     # the dense CachePool has no instrumented work
@@ -196,6 +201,7 @@ class Engine:
             tiered=config.cache.tiered, chunked=config.chunked,
             token_budget=config.token_budget,
             preempt_quantum=config.preempt_quantum,
+            overlap=config.overlap,
             metrics=self.bus, policy=policy, tracer=self.tracer)
 
     # -- host API (delegates to the scheduler) -----------------------------

@@ -216,6 +216,9 @@ class Executor:
         with observed timestamps (span gaps, not guesses)."""
         if self.tracer.enabled:
             self._inflight.append((kind, self.tracer.now()))
+        # host spans entered from here until the next fetch are candidates
+        # for the "shadowed" stall bucket (self-gated when tracing is off)
+        self.tracer.device_dispatch()
 
     def decode_paged(self, tokens, pages, page_table, lengths, active):
         with self.tracer.span("dispatch", kind="decode_paged"):
@@ -289,6 +292,7 @@ class Executor:
         self.stats["token_fetches"] += 1
         with self.tracer.span("fetch_tokens", arrays=len(arrays)):
             host = np.asarray(joined)
+        self.tracer.device_landed()
         if self._inflight:
             # the host values landed: every window opened since the last
             # fetch is now known to have completed — close them at observed

@@ -371,7 +371,14 @@ class PagedCachePool:
         page's rows there before the caller's divergent write. Never fails
         for admitted sequences: the fork page was reserved at admission
         (`_private_prompt_need`) or by ``reserve_extra``. Returns True iff a
-        fork happened."""
+        fork happened.
+
+        Overlap contract (PR 8): the scheduler's shadow phase may pre-fork
+        the page a dispatched-but-uncommitted decode will write, while that
+        device step is still in flight. This is safe because the copy is a
+        device op sequenced by data dependency — it reads the shared page's
+        buffer as produced by the in-flight step's predecessors, and the
+        divergent write only lands in the *next* step, after the fork."""
         sid = int(self.seq_ids[slot])
         if sid < 0:
             raise vmm.StaleSequenceError(

@@ -23,10 +23,30 @@ a prefix layer.
 
 Token movement discipline: dispatches return device-resident sampled ids;
 the scheduler queues them with their completion logic and materialises the
-whole iteration's ids in ONE ``Executor.fetch_token_ids`` transfer at the
-end of the step — value-dependent effects (stream emission, prefix
-insertion, decode promotion, slot release) run in dispatch order once the
-host values land.
+whole iteration's ids in ONE ``Executor.fetch_token_ids`` transfer —
+value-dependent effects (stream emission, prefix insertion, decode
+promotion, slot release) run in dispatch order once the host values land.
+
+Overlapped execution (PR 8, ``overlap=True`` on the chunked path): the
+step pipeline is split around that one blocking fetch so iteration k's
+device step hides iteration k+1's host work. Each ``step()`` first runs
+the *shadow phase* — policy pass, swap-in landings, the admission drain
+(cold resumes start their host→dev DMAs via ``swap_in_start`` instead of
+blocking), and the mailbox-head prefetch — while the PREVIOUS step's
+dispatches are still in flight on the device. Only then does the one
+``fetch_token_ids`` block (the *commit*: the previous iteration's queued
+consumers emit tokens, finish requests, release pages, and promote
+completed prefills). Everything whose outcome feeds the packer — waiter
+promotion, decode-slot selection, chunk packing — runs *after* the commit
+against exact state, so the budget/fair-share/no-starvation invariants are
+decided from the same state the synchronous loop would see. Two queues
+make this safe: dispatches append to ``_fetch_queue``; at step end it
+becomes ``_commit_queue`` for the next step's commit point. Consumers
+carry identity guards (the dispatched ``(slot, req)`` pair must still
+match) so a request preempted while its step was in flight is discarded —
+the swap-out captured the pre-decode state and greedy determinism
+re-derives the identical token on resume, keeping streams bit-identical
+to the synchronous loop (``overlap=False`` restores it exactly).
 
 Observability + policy (PR 6): every iteration publishes its signals —
 queue depth, resident sets, token counters, TTFT/ITL/queue-latency
@@ -117,7 +137,7 @@ class Scheduler:
                  *, n_slots: int, greedy: bool = True, paged: bool = False,
                  tiered: bool = False, chunked: bool = False,
                  token_budget: Optional[int] = None,
-                 preempt_quantum: int = 1,
+                 preempt_quantum: int = 1, overlap: bool = True,
                  metrics: Optional[MetricsBus] = None,
                  policy: Optional[SchedulerPolicy] = None,
                  tracer: Optional[trace.Tracer] = None):
@@ -128,6 +148,9 @@ class Scheduler:
         self.paged = paged
         self.tiered = tiered
         self.chunked = chunked
+        # overlapped execution only exists on the unified chunked step loop
+        # (the legacy dense/monolithic paths flush per phase)
+        self.overlap = bool(overlap and chunked and paged)
         self.bus = metrics if metrics is not None else MetricsBus(enabled=False)
         self.tracer = tracer if tracer is not None else trace.null_tracer()
         self.policy = policy
@@ -151,10 +174,13 @@ class Scheduler:
                       "queue_lat_s": [], "ttft_s": [], "itl_s": [],
                       "iter_log": []}
         self._fetch_queue: List[Tuple[Any, Callable]] = []
+        self._commit_queue: List[Tuple[Any, Callable]] = []  # overlap: prev it.
         self._finished: List[Request] = []
         if self.paged:
             self._admit_stalled = False
-            self._pending_swapin = None            # (Request, PendingSwapIn)
+            self._pending_swapins: List[Tuple[Request, Any]] = []
+            self._inflight_decode: Dict[int, Request] = {}  # last dispatch
+            self._shadow_activated: set = set()  # slots resumed this step
             self._last_decoded = np.zeros(n_slots, np.int64)
             self._admitted_at = np.zeros(n_slots, np.int64)
             self._resident_since = np.zeros(n_slots, np.int64)
@@ -188,7 +214,8 @@ class Scheduler:
         """True when nothing is resident, queued, or in flight."""
         return (not self.active and not self.prefilling
                 and not self.prefilled_wait and len(self.mailbox) == 0
-                and getattr(self, "_pending_swapin", None) is None)
+                and not getattr(self, "_pending_swapins", None)
+                and not self._fetch_queue and not self._commit_queue)
 
     def step(self) -> List[Request]:
         """One engine iteration. Chunked mode: the unified token-budgeted
@@ -202,7 +229,8 @@ class Scheduler:
             decoded = False
             if self.chunked:
                 decoded = self._step_chunked()
-                self._flush_tokens()
+                if not self.overlap:
+                    self._flush_tokens()
             elif self.paged:
                 with self.tracer.span("schedule"):
                     self._admit_paged()
@@ -218,10 +246,11 @@ class Scheduler:
                 if self.active:
                     self._dispatch_decode_dense()
                     self._flush_tokens()
-            if self.tiered and decoded:
+            if self.tiered and decoded and not self.overlap:
                 # double-buffer: with this step's releases applied, start the
                 # head-of-queue resume's host→dev DMAs now; they overlap the
                 # upcoming admission pass and land at the top of the next step
+                # (the overlapped loop prefetches inside its shadow phase)
                 self._start_prefetch()
             self._publish_metrics()
         self._publish_stall()
@@ -353,6 +382,22 @@ class Scheduler:
         for (_, consumer), v in zip(queue, vals):
             consumer(v)
 
+    def _flush_commit(self) -> None:
+        """Overlap-mode commit point: materialise the PREVIOUS iteration's
+        queued ids in one blocking transfer and run its completions. Runs
+        after the shadow phase, so the host work above it overlapped the
+        device step whose tokens land here."""
+        if not self._commit_queue:
+            return
+        queue, self._commit_queue = self._commit_queue, []
+        vals = self.executor.fetch_token_ids([a for a, _ in queue])
+        for (_, consumer), v in zip(queue, vals):
+            consumer(v)
+        # the in-flight map is only meaningful between a dispatch and its
+        # commit (the shadow COW pre-fork keys on it) — drop it now so a
+        # dispatch-free iteration can't leave a stale pair behind
+        self._inflight_decode = {}
+
     def _emit(self, req: Request, tok: int) -> None:
         req.tokens_out.append(tok)
         now = self.tracer.now()
@@ -431,6 +476,8 @@ class Scheduler:
         self._last_decoded[slot] = self.stats["decode_steps"]
         self._resident_since[slot] = self.stats["decode_steps"]
         self._chunks_done[slot] = 0
+        if self.overlap:
+            self._shadow_activated.add(slot)
         if self.chunked and req.prefill_pos < len(req.prompt):
             self.prefilling[slot] = req
             state = "prefill"
@@ -461,10 +508,29 @@ class Scheduler:
         for slot in candidates:
             if slot == exclude:
                 continue
-            if slot in self.active and \
-               self.stats["decode_steps"] - self._resident_since[slot] \
-               < self.preempt_quantum:
+            if self.overlap and slot in self._shadow_activated:
+                # resumed in this step's shadow: it has not reached the
+                # post-commit pack yet, so evicting it re-queues a fully
+                # paid swap-in having made zero progress. With the one-step
+                # commit lag every resumed residency would be stolen by the
+                # same shadow's admission pass before its first dispatch
+                # and the rotation never terminates — this makes the sync
+                # loop's "the last resumes survive the admission pass"
+                # property explicit
                 continue
+            if slot in self.active:
+                quantum = self.preempt_quantum
+                if self.overlap and \
+                        self._inflight_decode.get(slot) is self.active[slot]:
+                    # overlap: the last dispatched token is still in flight
+                    # and would be DISCARDED by a preemption now — it is not
+                    # progress yet, so it cannot count toward the quantum
+                    # (otherwise a 1-quantum rotation livelocks: every
+                    # residency's only token dies uncommitted)
+                    quantum += 1
+                if self.stats["decode_steps"] - self._resident_since[slot] \
+                   < quantum:
+                    continue
             if slot in self.prefilling and self._chunks_done[slot] == 0:
                 continue
             if not self.pool.can_swap_out(slot):
@@ -507,14 +573,12 @@ class Scheduler:
         self.stats["swap_in_bytes"] = self.pool.swap_in_bytes
 
     def _finish_pending_swapin(self):
-        if self._pending_swapin is None:
-            return
-        req, token = self._pending_swapin
-        self._pending_swapin = None
-        slot = self.pool.swap_in_finish(token)
-        self.tracer.request_instant(req.seq_id, "resumed")
-        self._activate(slot, req, first_admit=False)
-        self._sync_swap_stats()
+        while self._pending_swapins:
+            req, token = self._pending_swapins.pop(0)
+            slot = self.pool.swap_in_finish(token)
+            self.tracer.request_instant(req.seq_id, "resumed")
+            self._activate(slot, req, first_admit=False)
+            self._sync_swap_stats()
 
     def _admit_paged(self):
         """Admit by page availability: the drain stops at the first request
@@ -556,6 +620,16 @@ class Scheduler:
                     self.stats["admission_refusals"] += 1
                     self._admit_stalled = True
                     break
+                if self.overlap:
+                    # shadow phase: start the host→dev page DMAs now and keep
+                    # draining — the slot and pages are claimed immediately
+                    # (capacity accounting stays exact), the wait + scatter
+                    # land at the top of the next step's shadow, under the
+                    # device step dispatched below
+                    self._pending_swapins.append(
+                        (req, self.pool.swap_in_start(req.seq_id)))
+                    self._sync_swap_stats()
+                    continue
                 slot = self.pool.swap_in(req.seq_id)
                 self.tracer.request_instant(req.seq_id, "resumed")
                 self._activate(slot, req, first_admit=False)
@@ -657,11 +731,13 @@ class Scheduler:
         return m
 
     def _dispatch_decode_paged(self, slots: Optional[List[int]] = None):
-        if self.tiered:
+        if self.tiered and not self.overlap:
             # land the prefetch started at the end of the previous step: its
             # host→dev DMA has been overlapping the admission pass (and any
             # prefill dispatches) in between; the resumed slot joins this
-            # decode batch
+            # decode batch (the overlapped loop lands prefetches in its
+            # shadow phase instead — finishing here would block on DMAs
+            # started only this step)
             self._finish_pending_swapin()
         if slots is None:
             slots = sorted(self.active)
@@ -707,13 +783,21 @@ class Scheduler:
                 self.pool.host_used_bytes())
         self.stats["peak_in_system"] = max(
             self.stats.get("peak_in_system", 0), in_system)
+        pairs = [(slot, self.active[slot]) for slot in slots]
+        if self.overlap:
+            self._inflight_decode = dict(pairs)
         self._queue_fetch(
             ids_dev,
-            lambda v, slots=list(slots): self._finish_decode_paged(slots, v))
+            lambda v, pairs=pairs: self._finish_decode_paged(pairs, v))
 
-    def _finish_decode_paged(self, slots: List[int], vals: np.ndarray):
-        for slot in slots:
-            req = self.active[slot]
+    def _finish_decode_paged(self, pairs: List[Tuple[int, Request]],
+                             vals: np.ndarray):
+        for slot, req in pairs:
+            if self.active.get(slot) is not req:
+                # preempted (overlap mode) while its step was in flight: the
+                # swap-out captured the pre-decode KV and this token is
+                # discarded — the greedy resume re-derives it bit-identically
+                continue
             self._emit(req, int(vals[slot]))
             self.pool.lengths[slot] += 1
             # paged lengths count KV rows (dense counts rows + the pending
@@ -733,14 +817,15 @@ class Scheduler:
         (waited + scattered) at the top of the next decode step, so the
         transfer overlaps the admission pass in between (AutoDMA's
         load/execute phasing, lifted to the serving level)."""
-        if self._pending_swapin is not None or not self.pool.cold_seqs():
+        if self._pending_swapins or not self.pool.cold_seqs():
             return
         head = self.mailbox.drain(1)
         if not head:
             return
         req = head[0]
         if self.pool.is_cold(req.seq_id) and self.pool.can_resume(req.seq_id):
-            self._pending_swapin = (req, self.pool.swap_in_start(req.seq_id))
+            self._pending_swapins.append(
+                (req, self.pool.swap_in_start(req.seq_id)))
         else:
             self.mailbox.requeue(req)
 
@@ -760,23 +845,66 @@ class Scheduler:
         A request whose whole prompt fits in the leftover budget is admitted,
         prefilled, and streams its first token within this single iteration —
         it never queues behind another request's whole prefill. Returns True
-        iff a decode step was dispatched."""
-        with self.tracer.span("schedule"):
-            if self.tiered:
-                self._finish_pending_swapin()
-            self._admit_paged()
-            self._promote_waiters()
-            decode_slots = sorted(self.active)
-            mid_prefill = sorted(
-                int(r.seq_id) for r in self.prefilling.values())
-            budget_left = self.token_budget - len(decode_slots)
-            if self.policy is not None:
-                # ITL-target mix shaping: squeeze the prefill share down to
-                # its floor (one token per mid-prefill resident) when decode
-                # latency is over target — fair-share/no-starvation survives
-                budget_left = self.policy.prefill_allowance(
-                    budget_left, len(self.prefilling))
-            chunks = self._pack_chunks(budget_left)
+        iff a decode step was dispatched.
+
+        Overlap mode splits the iteration around the commit point: steps
+        1–2 (plus the prefetch start and a COW pre-fork pass) run FIRST, in
+        the shadow of the previous iteration's in-flight device step; then
+        the single blocking fetch commits that iteration's tokens; steps
+        3–5 run after it, against exact post-commit state — so promotion,
+        decode-slot selection, and chunk packing decide from the same state
+        the synchronous loop would see, and the budget/fair-share
+        invariants hold bit-for-bit."""
+        if self.overlap:
+            with self.tracer.span("schedule"):
+                # -- shadow phase: previous step still in flight -----------
+                self._shadow_activated.clear()
+                if self.tiered:
+                    self._finish_pending_swapin()
+                self._admit_paged()
+                if self.prefix is not None:
+                    self._cow_prefork()
+                if self.tiered:
+                    self._start_prefetch()
+                if self.tiered and not self.active and not self.prefilling:
+                    # nothing will dispatch this step, so the pending
+                    # resumes' DMAs have no device window to hide behind
+                    # anyway — land them now and let this step decode
+                    # instead of going idle (in deep-rotation mixes the
+                    # preempt+swap-in step would otherwise dispatch nothing
+                    # and leave the NEXT shadow phase naked)
+                    self._finish_pending_swapin()
+            # -- commit: the one blocking fetch (previous iteration) -------
+            self._flush_commit()
+            with self.tracer.span("schedule"):
+                # -- exact-state phase: promote + pack post-commit ---------
+                self._promote_waiters()
+                decode_slots = sorted(self.active)
+                mid_prefill = sorted(
+                    int(r.seq_id) for r in self.prefilling.values())
+                budget_left = self.token_budget - len(decode_slots)
+                if self.policy is not None:
+                    budget_left = self.policy.prefill_allowance(
+                        budget_left, len(self.prefilling))
+                chunks = self._pack_chunks(budget_left)
+        else:
+            with self.tracer.span("schedule"):
+                if self.tiered:
+                    self._finish_pending_swapin()
+                self._admit_paged()
+                self._promote_waiters()
+                decode_slots = sorted(self.active)
+                mid_prefill = sorted(
+                    int(r.seq_id) for r in self.prefilling.values())
+                budget_left = self.token_budget - len(decode_slots)
+                if self.policy is not None:
+                    # ITL-target mix shaping: squeeze the prefill share down
+                    # to its floor (one token per mid-prefill resident) when
+                    # decode latency is over target — fair-share/
+                    # no-starvation survives
+                    budget_left = self.policy.prefill_allowance(
+                        budget_left, len(self.prefilling))
+                chunks = self._pack_chunks(budget_left)
         for slot, req, start, size in chunks:
             self._run_chunk(slot, req, start, size)
         if decode_slots:
@@ -789,7 +917,32 @@ class Scheduler:
                        for _, r, start, size in chunks],
             "mid_prefill": mid_prefill,
         })
+        if self.overlap:
+            # this iteration's consumers become the NEXT iteration's commit;
+            # the shadow phase above never queues fetches, so the handoff is
+            # a straight swap
+            self._commit_queue = self._fetch_queue
+            self._fetch_queue = []
         return bool(decode_slots)
+
+    def _cow_prefork(self) -> None:
+        """Shadow-phase COW pre-fork (overlap mode, prefix stack): fork the
+        shared page each in-flight decode slot will write at its NEXT
+        dispatch, while the device step is still hiding the copy. The fork
+        position is the post-commit write position (``lengths+1``);
+        finishing slots are skipped — their fork page lies outside the
+        decode reservation, and the synchronous loop never forks them. The
+        dispatch-time ``cow_unshare`` then finds the page already private
+        and is a no-op, so fork counts match the synchronous loop."""
+        for slot, req in self.active.items():
+            if self._inflight_decode.get(slot) is not req:
+                continue          # no token in flight: lengths not advancing
+            L = int(self.pool.lengths[slot])
+            if len(req.tokens_out) + 1 >= req.max_new or \
+                    L + 1 >= self.pool.max_seq - 2:
+                continue          # finishes at commit
+            if self.pool.cow_unshare(slot, L + 1):
+                self.stats["cow_forks"] += 1
 
     def _pack_chunks(self, budget_left: int
                      ) -> List[Tuple[int, Request, int, int]]:
@@ -851,8 +1004,15 @@ class Scheduler:
         """Prompt completed: stream the first token, index the prompt in the
         prefix cache, and attempt promotion to the decode set."""
         self._emit(req, tok)
-        del self.prefilling[slot]
         self.stats["prefills"] += 1
+        if self.prefilling.get(slot) is not req:
+            # preempted (overlap mode) while the completing chunk was in
+            # flight: the swap-out captured the full prompt KV (prefill_pos
+            # advanced eagerly at dispatch) and tokens_out[-1] now carries
+            # this first token, so the resume activates straight past
+            # prefill — nothing to promote or index here
+            return
+        del self.prefilling[slot]
         if self.prefix is not None and self.greedy:
             # index the completed prompt: its pages become claimable by
             # later arrivals, its greedy first token makes an exact

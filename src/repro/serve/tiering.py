@@ -226,7 +226,8 @@ class TieredCachePool(kvcache.CacheLayer):
             row = []
             for kv in per_pos:
                 row.append({name: dma.hero_memcpy_dev2host_async(
-                    paged_step.gather_pages(kv[name], idx))
+                    paged_step.gather_pages(kv[name], idx),
+                    clock=self.tracer.clock)
                     for name in ("k", "v")})
             handles.append(row)
         flat = [h for row in handles for ent in row for h in ent.values()]
@@ -272,7 +273,8 @@ class TieredCachePool(kvcache.CacheLayer):
         self.hot.alloc.alloc_seq(seq_id, rec.n_pages * self.hot.page_tokens)
         self.hot.seq_ids[slot] = seq_id
         self.hot.lengths[slot] = 0           # valid only after finish
-        handles = [[{name: dma.hero_memcpy_host2dev_async(None, arr)
+        handles = [[{name: dma.hero_memcpy_host2dev_async(
+                        None, arr, clock=self.tracer.clock)
                      for name, arr in ent.items()}
                     for ent in row] for row in rec.host]
         return PendingSwapIn(seq_id=seq_id, slot=slot, rec=rec,

@@ -27,11 +27,18 @@ Two span families share one bounded ring buffer:
 
 **Stall attribution** rides on the phase spans: every open span accumulates
 its children's wall time, so at close its *self time* (dur − child time) is
-exclusive by construction. Self times map onto four buckets — ``schedule``
+exclusive by construction. Self times map onto five buckets — ``schedule``
 (schedule + policy spans), ``fetch`` (the one device→host token sync),
-``dma`` (blocking swap-DMA waits), ``other`` (dispatch, chunk/COW host
-work, iteration residue) — which therefore sum to the iteration's wall time
-*exactly*, not approximately. :meth:`Tracer.last_iteration` hands the
+``dma`` (blocking swap-DMA waits), ``shadowed`` (host work performed while
+a dispatched device step was still in flight — overlapped, not a stall),
+``other`` (dispatch, chunk/COW host work, iteration residue) — which
+therefore sum to the iteration's wall time *exactly*, not approximately.
+The ``shadowed`` relabel is driven by the executor's
+:meth:`Tracer.device_dispatch`/:meth:`Tracer.device_landed` signals: a host
+span that opens after a dispatch and closes before that step's results land
+ran entirely under the device step, so its self time is overlap, not stall
+("in flight" means dispatched-and-not-yet-fetched; any residual device wait
+still shows up in ``fetch``). :meth:`Tracer.last_iteration` hands the
 scheduler each breakdown to publish as ``stall_pct_*`` histograms on the
 metrics bus; :meth:`Tracer.stall_summary` aggregates the run.
 
@@ -77,14 +84,17 @@ DEFAULT_BUFFER = 65536
 # how many per-iteration stall breakdowns to retain (one dict per step)
 STALL_WINDOW = 4096
 
-# span name -> exclusive stall bucket; everything unlisted is host "other"
+# span name -> exclusive stall bucket; everything unlisted is host "other".
+# A span fully under an in-flight device step is relabelled "shadowed"
+# (overlapped host work, not stall) — see _Span.__exit__; fetch_tokens is
+# never shadowed (it IS the blocking sync point).
 _BUCKET = {
     "schedule": "schedule",
     "policy": "schedule",
     "fetch_tokens": "fetch",
     "swap_wait": "dma",
 }
-BUCKETS = ("schedule", "fetch", "dma", "other")
+BUCKETS = ("schedule", "fetch", "dma", "shadowed", "other")
 
 # trace-track thread ids (pid is always 0 — one engine process)
 TID_ENGINE = 0
@@ -120,7 +130,8 @@ class _Span:
     can compute exclusive self time — the stall buckets sum to the
     iteration span exactly because every microsecond is counted once."""
 
-    __slots__ = ("tracer", "name", "args", "t0", "child", "is_iter")
+    __slots__ = ("tracer", "name", "args", "t0", "child", "is_iter",
+                 "shadow0", "closes0")
 
     def __init__(self, tracer: "Tracer", name: str, args: Dict[str, Any],
                  is_iter: bool = False):
@@ -133,6 +144,10 @@ class _Span:
     def __enter__(self):
         tr = self.tracer
         self.t0 = tr.clock()
+        # device-busy snapshot: if work is in flight now and it has not
+        # landed by __exit__, this span ran entirely under the device step
+        self.shadow0 = tr._dev_depth > 0
+        self.closes0 = tr._dev_closes
         if self.is_iter:
             tr._iter += 1
             tr._buckets = dict.fromkeys(BUCKETS, 0.0)
@@ -149,7 +164,12 @@ class _Span:
             tr._stack[-1].child += dur
         self_time = dur - self.child
         if tr._buckets is not None:
-            tr._buckets[_BUCKET.get(self.name, "other")] += self_time
+            bucket = _BUCKET.get(self.name, "other")
+            if (self.shadow0 and not self.is_iter
+                    and self.name != "fetch_tokens"
+                    and tr._dev_closes == self.closes0):
+                bucket = "shadowed"
+            tr._buckets[bucket] += self_time
         tr._push({"ph": "X", "name": self.name, "tid": TID_ENGINE,
                   "cat": "iteration" if self.is_iter else "phase",
                   "t": self.t0, "dur": dur, "args": self.args})
@@ -189,6 +209,8 @@ class Tracer:
         self._last_iter: Optional[Dict[str, Any]] = None
         self._req_open: Dict[int, Dict[str, Any]] = {}  # sid -> {state, t0}
         self._async_id = 0
+        self._dev_depth = 0          # dispatched-not-yet-fetched device steps
+        self._dev_closes = 0         # total landings (shadow-window fencing)
 
     # -- clock (the serve layer's one timing source) -----------------------
     def now(self) -> float:
@@ -222,6 +244,24 @@ class Tracer:
                     "t": t_start, "id": self._async_id, "args": args})
         self._push({"ph": "e", "name": name, "tid": tid, "cat": track,
                     "t": t_end, "id": self._async_id, "args": {}})
+
+    # -- device-busy signal (overlap attribution) ---------------------------
+    def device_dispatch(self) -> None:
+        """Executor signal: a device step was just dispatched (async, still
+        in flight). Host spans that open while work is in flight and close
+        before it lands book their self time as ``shadowed`` — overlapped
+        work, not stall. Observe-only: nothing reads this to schedule."""
+        if not self.enabled:
+            return
+        self._dev_depth += 1
+
+    def device_landed(self) -> None:
+        """Executor signal: the in-flight device work's results landed on
+        the host (the blocking token fetch returned)."""
+        if not self.enabled:
+            return
+        self._dev_depth = 0
+        self._dev_closes += 1
 
     def instant(self, name: str, **args) -> None:
         if not self.enabled:
@@ -267,9 +307,9 @@ class Tracer:
     # -- stall attribution --------------------------------------------------
     def last_iteration(self) -> Optional[Dict[str, Any]]:
         """The most recent iteration's breakdown: ``{"iter", "t", "dur",
-        "buckets": {schedule, fetch, dma, other}}`` — bucket seconds sum to
-        ``dur`` exactly (self-time accounting). None before the first
-        iteration or when disabled."""
+        "buckets": {schedule, fetch, dma, shadowed, other}}`` — bucket
+        seconds sum to ``dur`` exactly (self-time accounting). None before
+        the first iteration or when disabled."""
         return self._last_iter
 
     def stall_log(self) -> List[Dict[str, Any]]:
@@ -305,7 +345,15 @@ class Tracer:
         """The buffered window as a Chrome trace-event object:
         ``{"traceEvents": [...]}`` with ``ph:"M"`` thread names first, then
         the ring buffer in completion order (µs timestamps relative to the
-        tracer's construction epoch)."""
+        tracer's construction epoch).
+
+        After a ring wrap a parent span can survive eviction of its children
+        (events push at span *close*, so children precede their parent in the
+        ring): any retained span that *started* at or before the oldest
+        retained event's timeline position may have lost children, so it is
+        exported with ``args.partial = true`` — readers must not assume its
+        child spans close it exactly. Over-marking is safe; under-marking
+        would silently break the bucket-closure contract."""
         names = {TID_ENGINE: "engine", TID_DEVICE: "device", TID_DMA: "dma"}
         seen_tids = {ev["tid"] for ev in self.events}
         events: List[Dict[str, Any]] = [
@@ -315,12 +363,17 @@ class Tracer:
             label = names.get(tid, f"req {tid - TID_REQ_BASE}")
             events.append({"ph": "M", "name": "thread_name", "pid": 0,
                            "tid": tid, "args": {"name": label}})
+        cutoff = None
+        if self.dropped > 0 and self.events:
+            cutoff = self.events[0]["t"]
         for ev in self.events:
             out = {"ph": ev["ph"], "name": ev["name"], "pid": 0,
                    "tid": ev["tid"], "cat": ev["cat"],
                    "ts": self._us(ev["t"]), "args": ev["args"]}
             if ev["ph"] == "X":
                 out["dur"] = ev["dur"] * 1e6
+                if cutoff is not None and ev["t"] <= cutoff:
+                    out["args"] = dict(ev["args"], partial=True)
             elif ev["ph"] in ("b", "e"):
                 out["id"] = ev["id"]
             elif ev["ph"] == "i":

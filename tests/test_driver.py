@@ -175,6 +175,12 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                   "deterministic_snapshot": 1, "closure_worst_err_pct": 0.0,
                   "trace_json": "BENCH_serve.trace.json",
                   "traced": engine_stub("trace")},
+        "overlap": {"arch": "qwen2-0.5b", "hot_pages": 4, "page_tokens": 8,
+                    "n_slots": 2, "requests": 12, "tp": 2,
+                    "token_budget": 10, "identical_streams": 1,
+                    "noncompute_stall_reduction": 3.0,
+                    "sync": engine_stub("overlap"),
+                    "overlap": engine_stub("overlap")},
     }
     p = tmp_path / "BENCH_serve.json"
     p.write_text(json.dumps(good))
@@ -197,4 +203,4 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                               "BENCH_serve.json")
     assert validate(repo_bench) == []
     assert set(SCHEMAS) == {"tiering", "chunked_prefill", "prefix_cache",
-                            "tensor_parallel", "slo", "trace"}
+                            "tensor_parallel", "slo", "trace", "overlap"}

@@ -821,3 +821,118 @@ def test_stall_accounting_under_tensor_parallel(tp):
              for i in range(4)]
     _run_case_traced(sched, token_budget=10, n_slots=2, n_pages=8,
                      tiered=True, tp=tp, cfg=cfg, params=params)
+
+
+# -- overlapped execution (PR 8): hide host work under the device step -------
+def _run_case_overlap(schedule, token_budget, n_slots, n_pages, *,
+                      page_tokens=8, max_seq=64, tiered=False, prefix=False,
+                      tp=1, cfg=None, params=None):
+    """Overlap-on engine vs its synchronous twin on the same workload: the
+    overlapped loop may change WHEN tokens commit (one-iteration lag, shadow
+    -phase preemptions discarding in-flight tokens) but never WHICH tokens a
+    greedy request streams. The scheduler invariants (budget, fair-share,
+    bounded wait, accounting closure, leak-freedom) must hold on the
+    overlapped engine's own iteration log."""
+    if cfg is None:
+        cfg, params = _CFG, _params()
+    cache = CacheConfig(
+        paged=True, page_tokens=page_tokens, n_pages=n_pages, tiered=tiered,
+        host_budget_bytes=(16 * 2 * len(schedule) * token_bytes(cfg)
+                           * page_tokens) if tiered else None,
+        prefix=prefix,
+        prefix_pages=max(2, n_pages // 2) if prefix else None)
+    kw = dict(n_slots=n_slots, max_seq=max_seq, chunked=True,
+              token_budget=token_budget, preempt_quantum=1, tp=tp,
+              cache=cache)
+    sync = Engine(cfg, params, config=EngineConfig(overlap=False, **kw))
+    ref = {r.seq_id: list(r.tokens_out) for r in _drive(sync, schedule)}
+    over = Engine(cfg, params, config=EngineConfig(overlap=True, **kw))
+    got = {r.seq_id: list(r.tokens_out) for r in _drive(over, schedule)}
+    assert over.scheduler.overlap and not sync.scheduler.overlap
+    assert set(got) == set(range(len(schedule)))
+    assert got == ref, \
+        "overlapped greedy streams must be bit-identical to the sync loop"
+    _check_scheduler_invariants(over, schedule)
+    # the in-flight machinery fully drained with the workload
+    assert not over.scheduler._pending_swapins
+    assert not over.scheduler._commit_queue
+    assert not over.scheduler._fetch_queue
+    if tiered:
+        assert not over.pool.cold_seqs()
+    return over
+
+
+def test_overlap_streams_bit_identical_seeded():
+    """Deterministic seeded twins across the three hard mixes: tiered swap
+    churn, prefix sharing with COW, and both together."""
+    rng = np.random.default_rng(88)
+    for case, (tiered, prefix) in enumerate(
+            [(True, False), (False, True), (True, True)]):
+        n_req = int(rng.integers(3, 6))
+        raw = [(int(rng.integers(0, 8)), int(rng.integers(1, 16)),
+                int(rng.integers(1, 5))) for _ in range(n_req)]
+        sched = _schedule_from(raw, 500 + case, 8, 8, 64)
+        eng = _run_case_overlap(sched, token_budget=10, n_slots=2, n_pages=8,
+                                tiered=tiered, prefix=prefix)
+        if tiered:
+            # the 8-page pool oversubscribes: the overlapped run must have
+            # exercised the shadow-phase swap path, not just drained idle
+            assert eng.pool.swap_out_count > 0
+
+
+@pytest.mark.parametrize("tp", [2])
+def test_overlap_streams_bit_identical_tp(tp):
+    """Overlap under tensor parallelism: the deferred commit point fetches
+    from a shard_map'd sampler and shadow-phase swap DMAs run against the
+    head-sharded pool."""
+    if _N_DEV < tp:
+        pytest.skip(f"needs {tp} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    cfg, params = _tp_cfg(tp)
+    rng = np.random.default_rng(41)
+    sched = [(2 * i, rng.integers(0, cfg.vocab,
+                                  3 + 2 * i).astype(np.int32), 3)
+             for i in range(4)]
+    _run_case_overlap(sched, token_budget=10, n_slots=2, n_pages=8,
+                      tiered=True, tp=tp, cfg=cfg, params=params)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_overlap_preemption_during_prefetch_property():
+    """Random tiered oversubscription with overlap on: shadow-phase
+    admissions start swap-in DMAs whose sequences can themselves be
+    preempted (or preempt others) before the transfer lands. The property:
+    no page leaks, no double-restore — every request completes with the
+    sync loop's exact stream and the allocator audit is clean at drain
+    (checked inside ``_run_case_overlap`` / the shared invariants)."""
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(
+        raw=st.lists(st.tuples(st.integers(0, 8),      # arrival iteration
+                               st.integers(1, 16),     # prompt length
+                               st.integers(1, 5)),     # max_new
+                     min_size=3, max_size=6),
+        n_slots=st.integers(2, 3),
+        budget_extra=st.integers(1, 8),
+        seed=st.integers(0, 3),
+    )
+    def prop(raw, n_slots, budget_extra, seed):
+        n_pages = 8
+        sched = _schedule_from(raw, seed, n_pages, 8, 64)
+        _run_case_overlap(sched, n_slots + budget_extra, n_slots, n_pages,
+                          tiered=True)
+    prop()
+
+
+def test_overlap_config_flag_reaches_scheduler():
+    """EngineConfig.overlap defaults on for the chunked loop and is forced
+    off on the non-chunked paths (they flush per phase)."""
+    eng = Engine(_CFG, _params(), config=EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=10,
+        cache=CacheConfig(page_tokens=8, n_pages=16)))
+    assert eng.scheduler.overlap
+    eng_off = Engine(_CFG, _params(), config=EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=10, overlap=False,
+        cache=CacheConfig(page_tokens=8, n_pages=16)))
+    assert not eng_off.scheduler.overlap
+    dense = Engine(_CFG, _params(), n_slots=2, max_seq=64)
+    assert not dense.scheduler.overlap

@@ -56,12 +56,6 @@ class FakeClock:
         return self.t
 
 
-@pytest.fixture(autouse=True)
-def _restore_dma_clock():
-    yield
-    dma.set_transfer_clock(None)
-
-
 # --------------------------------------------------------------------------
 # tracer unit tests (fake clock)
 # --------------------------------------------------------------------------
@@ -136,6 +130,74 @@ def test_ring_buffer_evicts_oldest_and_counts_drops():
     assert [e["name"] for e in tr.events] == ["ev6", "ev7", "ev8", "ev9"]
     assert tr.stats() == {"events": 4, "dropped": 6, "iterations": 0}
     assert tr.chrome_trace()["otherData"]["dropped_events"] == 6
+
+
+def test_ring_wrap_marks_orphaned_parents_partial():
+    # ring wraps mid-iteration: children evicted while the parent's X
+    # survives — export must mark such parents partial so readers never
+    # assume exact child closure on a wrapped window
+    tr = T.Tracer(enabled=True, clock=FakeClock(), buffer=6)
+    with tr.iteration():                     # iter 0: 5 children + parent
+        for name in ("schedule", "policy", "dispatch", "fetch_tokens",
+                     "cow_copy"):
+            with tr.span(name):
+                pass
+    with tr.iteration():                     # iter 1 evicts iter-0 children
+        with tr.span("schedule"):
+            pass
+    assert tr.dropped == 2
+    doc = tr.chrome_trace()
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    iters = sorted((e for e in xs if e["cat"] == "iteration"),
+                   key=lambda e: e["ts"])
+    assert len(iters) == 2
+    assert iters[0]["args"].get("partial") is True, \
+        "an iteration whose children were evicted must be marked partial"
+    assert "partial" not in iters[1]["args"]
+    for e in xs:                             # the intact iteration's spans
+        if e["ts"] >= iters[1]["ts"]:
+            assert "partial" not in e["args"]
+    # export never mutates the ring: a second export is identical
+    assert tr.chrome_trace() == doc
+    # an unwrapped ring marks nothing
+    tr2 = T.Tracer(enabled=True, clock=FakeClock(), buffer=64)
+    with tr2.iteration():
+        with tr2.span("schedule"):
+            pass
+    assert all("partial" not in e["args"]
+               for e in tr2.chrome_trace()["traceEvents"]
+               if e.get("ph") == "X")
+
+
+def test_shadowed_bucket_attributes_in_flight_host_work():
+    # a host span that opens after device_dispatch() and closes before
+    # device_landed() is overlapped work -> "shadowed", not its usual bucket
+    tr = T.Tracer(enabled=True, clock=FakeClock(step=0.5))
+    with tr.iteration():
+        tr.device_dispatch()
+        with tr.span("schedule"):            # fully under the in-flight step
+            pass
+        with tr.span("swap_wait", dir="in"):  # dma wait hidden by the step
+            pass
+        with tr.span("fetch_tokens"):        # the sync point: never shadowed
+            tr.device_landed()
+        with tr.span("schedule"):            # after landing: a real stall
+            pass
+    b = tr.last_iteration()["buckets"]
+    assert set(b) == set(T.BUCKETS)
+    assert b["shadowed"] > 0.0 and b["dma"] == 0.0
+    assert b["fetch"] > 0.0 and b["schedule"] > 0.0
+    assert sum(b.values()) == pytest.approx(tr.last_iteration()["dur"],
+                                            rel=1e-12)
+    # a span still open when the step lands is NOT shadowed (it outlived
+    # the overlap window)
+    tr2 = T.Tracer(enabled=True, clock=FakeClock(step=0.5))
+    with tr2.iteration():
+        tr2.device_dispatch()
+        with tr2.span("schedule"):
+            tr2.device_landed()
+    b2 = tr2.last_iteration()["buckets"]
+    assert b2["shadowed"] == 0.0 and b2["schedule"] > 0.0
 
 
 def test_bucket_self_time_decomposition_is_exact():
@@ -266,6 +328,45 @@ def test_fake_clock_twins_snapshot_bit_identical():
         snaps.append(json.dumps(eng.metrics_snapshot(), sort_keys=True))
     assert snaps[0] == snaps[1]
     assert "stall_pct" not in snaps[0]       # stall hists are trace-gated
+
+
+def test_transfer_handles_stamp_their_own_clock():
+    # satellite regression: the clock is per-handle, not a process global —
+    # a handle built against clock A never reads clock B
+    clk1, clk2 = FakeClock(step=1.0), FakeClock(step=100.0)
+    h1 = dma.hero_memcpy_host2dev_async(None, np.ones(4, np.float32),
+                                        clock=clk1)
+    h2 = dma.hero_memcpy_host2dev_async(None, np.ones(4, np.float32),
+                                        clock=clk2)
+    h1.wait(), h2.wait()
+    assert h1.t_start == 1.0 and h1.t_done == 2.0
+    assert h2.t_start == 100.0 and h2.t_done == 200.0
+    # default clock still works (and wait() stays idempotent)
+    h3 = dma.hero_memcpy_host2dev_async(None, np.ones(4, np.float32))
+    h3.wait()
+    done = h3.t_done
+    assert 0.0 < h3.t_start <= done
+    h3.wait()
+    assert h3.t_done == done
+
+
+def test_dma_clock_scoped_per_engine():
+    # two live engines with different injected clocks: driving one must
+    # never read the other's clock (the old module-global _CLOCK meant the
+    # last-constructed engine stamped everyone's transfers)
+    clk_a, clk_b = FakeClock(), FakeClock()
+    a = _mk(trace_on=True, clock=clk_a)
+    b = _mk(trace_on=True, clock=clk_b)      # built later: would have stolen
+    before_b = clk_b.reads
+    sa = _drive(a)
+    assert clk_b.reads == before_b, "engine A's transfers read B's clock"
+    before_a = clk_a.reads
+    sb = _drive(b)
+    assert clk_a.reads == before_a, "engine B's transfers read A's clock"
+    assert sa == sb
+    # the oversubscribed tiered mix really swapped (property not vacuous)
+    assert a.scheduler.pool.swap_out_count > 0
+    assert b.scheduler.pool.swap_out_count > 0
 
 
 def test_traced_engine_stall_closure_and_export(tmp_path):
