@@ -1,0 +1,209 @@
+"""Prefix-aware fleet routing vs round-robin: prefill-token reduction and
+TTFT on a two-tenant shared-system-prompt mix over two engine replicas.
+
+The workload is the one a prefix-aware router exists for: two tenants, each
+with its own long shared system prompt, spraying ragged arrivals at a fleet
+of two replicas. Round-robin placement alternates blindly, so each replica
+ends up prefilling BOTH tenants' shared prefixes (every replica's radix
+cache must earn each prefix separately); the prefix router fingerprints the
+incoming prompt, finds which replica already holds the tenant's prefix
+pages, and sends followers home — each shared prefix is prefilled once
+*fleet-wide* instead of once per replica. Same HEROv2 move as the PR-4
+prefix cache (dispatch work where the data already is), lifted one layer up.
+
+Three configurations are measured on the identical seeded mix:
+
+  * ``single``  — one engine, the conformance reference
+  * ``round_robin`` — 2-replica Fleet, blind alternation (baseline)
+  * ``prefix``  — 2-replica Fleet, longest-fingerprint-match routing
+
+All greedy streams are asserted bit-identical across the three (routing may
+change *where* a stream is computed, never the tokens), and the prefix
+router must beat round-robin on total prefill chunk tokens.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_fleet.py [--smoke]
+``--smoke`` (the CI job) measures one pass per configuration; without it
+each is measured three times and latency metrics are medians. Appends the
+``fleet`` section to BENCH_serve.json and writes
+benchmarks/results/fleet.json.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_bench, save_json
+from repro import configs
+from repro.models import blocks, transformer
+from repro.serve.cache import CacheConfig
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.router import Fleet
+
+PREFIX_LEN = 48          # per-tenant shared system prompt (6 pages at pt=8)
+N_TENANTS = 2
+N_REQUESTS = 12          # total across tenants, donors included
+N_REPLICAS = 2
+
+
+def _mix(cfg, rng):
+    """(arrival_iter, Request): one early donor per tenant, then ragged
+    interleaved followers all sharing their tenant's system prompt. Donors
+    arrive first so their prefills are resident (and fingerprinted) before
+    any follower is routed — the locality the prefix router exploits."""
+    shared = [rng.integers(0, cfg.vocab, PREFIX_LEN)
+              for _ in range(N_TENANTS)]
+
+    def req(i, tenant, suffix_len, new, arrival):
+        suffix = rng.integers(0, cfg.vocab, suffix_len)
+        prompt = np.concatenate([shared[tenant], suffix]).astype(np.int32)
+        return (arrival, Request(seq_id=i, prompt=prompt, max_new=new))
+
+    sched = [req(t, t, 4, 8, 0) for t in range(N_TENANTS)]     # donors
+    for i in range(N_TENANTS, N_REQUESTS):
+        # tenant drawn from the rng, NOT i % N_TENANTS: an alternating
+        # tenant pattern would line up with round-robin's alternation and
+        # hand the baseline accidental perfect affinity
+        sched.append(req(i, int(rng.integers(0, N_TENANTS)),
+                         2 + int(rng.integers(0, 5)),
+                         2 + int(rng.integers(0, 5)),
+                         12 + 2 * i))                          # ragged
+    return sched
+
+
+def _drive(target, schedule, max_iters=8000):
+    """Feed the arrival schedule into an Engine or a Fleet (same submit/
+    step/idle surface) and run it dry."""
+    pending = sorted(schedule, key=lambda t: t[0])
+    done, it = [], 0
+    while True:
+        while pending and pending[0][0] <= it:
+            assert target.submit(pending[0][1])
+            pending.pop(0)
+        if not pending and target.idle:
+            return done
+        done.extend(target.step())
+        it += 1
+        if it > max_iters:
+            raise RuntimeError("bench workload did not drain")
+
+
+def _fleet_prefill_tokens(fleet):
+    return sum(s["prefill_chunk_tokens"]
+               for s in fleet.stats_summary()["per_replica"].values())
+
+
+def _metrics(done):
+    ttft = [r.t_first - r.t_submit for r in done]
+    return {"ttft_mean_s": float(np.mean(ttft)),
+            "streams": {r.seq_id: list(r.tokens_out) for r in done}}
+
+
+def run(smoke: bool = True, arch: str = "qwen2-0.5b", token_budget: int = 24,
+        page_tokens: int = 8, n_slots: int = 4):
+    cfg = configs.get_smoke_config(arch)
+    params_t = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    params, _ = blocks.split_params(params_t)
+    max_seq, n_pages = 96, 60
+    econf = EngineConfig(
+        n_slots=n_slots, max_seq=max_seq, token_budget=token_budget,
+        cache=CacheConfig(paged=True, page_tokens=page_tokens,
+                          n_pages=n_pages, prefix=True,
+                          prefix_pages=n_pages // 4))
+
+    def build(mode):
+        if mode == "single":
+            return Engine(cfg, params, config=econf)
+        return Fleet(cfg, params, econf, replicas=N_REPLICAS, router=mode)
+
+    reps = 1 if smoke else 3
+    results = {}
+    for mode in ("single", "round_robin", "prefix"):
+        _drive(build(mode), _mix(cfg, np.random.default_rng(1)))     # warm
+        runs = []
+        for _ in range(reps):
+            target = build(mode)
+            done = _drive(target, _mix(cfg, np.random.default_rng(0)))
+            m = _metrics(done)
+            if mode == "single":
+                m["prefill_chunk_tokens"] = \
+                    target.stats_summary()["prefill_chunk_tokens"]
+            else:
+                m["prefill_chunk_tokens"] = _fleet_prefill_tokens(target)
+                fs = target.stats_summary()["fleet"]
+                m.update(routed=fs["routed"],
+                         routed_prefix=fs["routed_prefix"],
+                         routed_prefix_tokens=fs["routed_prefix_tokens"],
+                         backpressure_waits=fs["backpressure_waits"])
+                assert fs["shed"] == 0 and fs["pending"] == 0, \
+                    "policy-free fleet must place and finish everything"
+            runs.append(m)
+        m = dict(runs[0])
+        m["ttft_mean_s"] = float(np.median([r["ttft_mean_s"] for r in runs]))
+        for r in runs[1:]:
+            assert r["streams"] == m["streams"], "streams must be stable"
+        results[mode] = m
+
+    for mode in ("round_robin", "prefix"):
+        assert results[mode]["streams"] == results["single"]["streams"], \
+            f"{mode}-routed fleet streams must be bit-identical to the " \
+            "single-engine reference"
+    reduction = results["round_robin"]["prefill_chunk_tokens"] / \
+        max(results["prefix"]["prefill_chunk_tokens"], 1)
+    assert reduction >= 1.2, \
+        f"prefix-aware routing must cut fleet prefill tokens vs round-" \
+        f"robin on the two-tenant mix (got {reduction:.2f}x)"
+    assert results["prefix"]["routed_prefix"] > 0, \
+        "prefix router never made a fingerprint-matched placement"
+    ttft_ratio = results["prefix"]["ttft_mean_s"] / \
+        max(results["round_robin"]["ttft_mean_s"], 1e-12)
+
+    for m in results.values():
+        m.pop("streams")
+    payload = {
+        "arch": arch, "token_budget": token_budget, "n_slots": n_slots,
+        "page_tokens": page_tokens, "n_pages": n_pages,
+        "replicas": N_REPLICAS, "tenants": N_TENANTS,
+        "requests": N_REQUESTS, "prefix_len": PREFIX_LEN,
+        "single": results["single"],
+        "round_robin": results["round_robin"],
+        "prefix": results["prefix"],
+        "prefill_token_reduction": reduction,
+        "ttft_speedup": 1.0 / ttft_ratio,
+    }
+    save_json("fleet", payload)
+    path = save_bench("serve", payload, section="fleet")
+    print(f"fleet_round_robin,"
+          f"{results['round_robin']['ttft_mean_s'] * 1e6:.1f},"
+          f"prefill_tok={results['round_robin']['prefill_chunk_tokens']}")
+    print(f"fleet_prefix,"
+          f"{results['prefix']['ttft_mean_s'] * 1e6:.1f},"
+          f"prefill_tok={results['prefix']['prefill_chunk_tokens']} "
+          f"affine={results['prefix']['routed_prefix']} "
+          f"matched_tok={results['prefix']['routed_prefix_tokens']}")
+    print(f"# fleet: {reduction:.2f}x fewer prefill tokens than round-robin"
+          f", {payload['ttft_speedup']:.2f}x mean TTFT; streams bit-"
+          f"identical to single engine; wrote {path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single measured pass per configuration (CI job)")
+    ap.add_argument("--token-budget", type=int, default=24)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    run(smoke=args.smoke, arch=args.arch, token_budget=args.token_budget,
+        page_tokens=args.page_tokens, n_slots=args.slots)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,10 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
                               the tiered+tp mix — bit-identical streams,
                               ≥2x non-compute stall reduction →
                               BENCH_serve.json ``overlap`` section
+  §2      bench_fleet         prefix-aware fleet routing vs round-robin on
+                              a two-tenant shared-prefix mix — streams
+                              bit-identical to one engine, fewer prefill
+                              tokens → BENCH_serve.json ``fleet`` section
   (validate_bench checks the BENCH_serve.json schema after the benches)
 """
 from __future__ import annotations
@@ -42,7 +46,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_autodma, bench_chunked_prefill,
-                            bench_complexity, bench_interconnect, bench_isa,
+                            bench_complexity, bench_fleet,
+                            bench_interconnect, bench_isa,
                             bench_overlap, bench_parallel, bench_prefix_cache,
                             bench_slo, bench_tensor_parallel, bench_tiering,
                             bench_tiling, bench_trace, roofline_report,
@@ -52,7 +57,7 @@ def main() -> None:
                 bench_autodma, bench_interconnect, bench_isa,
                 roofline_report, bench_tiering, bench_chunked_prefill,
                 bench_prefix_cache, bench_tensor_parallel, bench_slo,
-                bench_trace, bench_overlap):
+                bench_trace, bench_overlap, bench_fleet):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()

@@ -74,6 +74,14 @@ SCHEMAS = {
         "noncompute_stall_reduction": _NUM,  # sync/(overlap) schedule+fetch+dma
         "sync": dict, "overlap": dict,
     },
+    "fleet": {
+        "arch": str, "token_budget": _NUM, "n_slots": _NUM,
+        "page_tokens": _NUM, "n_pages": _NUM, "replicas": _NUM,
+        "tenants": _NUM, "requests": _NUM, "prefix_len": _NUM,
+        "prefill_token_reduction": _NUM,     # round_robin / prefix tokens
+        "ttft_speedup": _NUM,
+        "single": dict, "round_robin": dict, "prefix": dict,
+    },
 }
 # keys every per-engine sub-dict must carry with numeric values
 ENGINE_NUM_KEYS = {
@@ -96,6 +104,7 @@ ENGINE_NUM_KEYS = {
                 "noncompute_pct", "stall_pct_schedule", "stall_pct_fetch",
                 "stall_pct_dma", "stall_pct_shadowed", "stall_pct_other",
                 "swap_out_count", "swap_in_count"),
+    "fleet": ("ttft_mean_s", "prefill_chunk_tokens"),
 }
 
 
@@ -121,7 +130,7 @@ def _check(errors, path, obj, schema):
 
 def validate(path: str, require=("tiering", "chunked_prefill",
                                  "prefix_cache", "tensor_parallel", "slo",
-                                 "trace", "overlap")):
+                                 "trace", "overlap", "fleet")):
     """Returns a list of error strings (empty = valid)."""
     errors = []
     try:
@@ -156,7 +165,8 @@ def main():
     ap.add_argument("path", nargs="?", default="BENCH_serve.json")
     ap.add_argument("--require", nargs="+",
                     default=["tiering", "chunked_prefill", "prefix_cache",
-                             "tensor_parallel", "slo", "trace", "overlap"])
+                             "tensor_parallel", "slo", "trace", "overlap",
+                             "fleet"])
     args = ap.parse_args()
     errors = validate(args.path, require=tuple(args.require))
     if errors:

@@ -70,6 +70,17 @@ in-memory event ring (oldest events drop first).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --tiered --pages 8 --requests 16 --trace /tmp/serve.trace.json
+
+Fleet serving (PR 9): ``--replicas N`` routes the request mix through a
+:class:`~repro.serve.router.Fleet` of N engine replicas instead of one
+engine — placement by longest prefix-fingerprint match with an occupancy
+tie-break (``--router round_robin`` for the baseline policy), admission
+backpressure when every replica's SLO gate refuses, per-replica namespaced
+metrics. Greedy streams are bit-identical to a single engine regardless of
+replica count or router.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --prefix-cache --shared-prefix-len 32 --requests 12 --replicas 2
 """
 from __future__ import annotations
 
@@ -85,6 +96,56 @@ from repro.models import blocks, transformer
 from repro.serve.cache import CacheConfig
 from repro.serve.engine import Engine, EngineConfig, Request
 from repro.serve.policy import PolicyConfig
+
+
+def _serve_fleet(cfg, params, econf, args):
+    """--replicas N path: route the request mix through a Fleet instead of
+    a single Engine (prefix-aware placement by default; see
+    serve/router.py), then print fleet-level stats."""
+    from repro.serve.router import Fleet
+
+    fleet = Fleet(cfg, params, econf, replicas=args.replicas,
+                  router=args.router)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, args.shared_prefix_len)
+    t0 = time.time()
+    for i in range(args.requests):
+        suffix = rng.integers(0, cfg.vocab, args.prompt_len)
+        fleet.submit(Request(
+            seq_id=i,
+            prompt=np.concatenate([shared, suffix]).astype(np.int32),
+            max_new=args.max_new,
+            priority=(i % args.priorities if args.priorities else 0)))
+    if args.metrics_log > 0:
+        done, it = [], 0
+        while not fleet.idle and it < 10000:
+            done.extend(fleet.step())
+            it += 1
+            if it % args.metrics_log == 0:
+                print(f"[metrics] {json.dumps(fleet.metrics_snapshot())}",
+                      flush=True)
+        if it % args.metrics_log != 0:
+            print(f"[metrics] {json.dumps(fleet.metrics_snapshot())}",
+                  flush=True)
+    else:
+        done = fleet.run(max_steps=10000)
+    wall = time.time() - t0
+    total_new = sum(len(r.tokens_out) for r in done)
+    ss = fleet.stats_summary()
+    fs = ss["fleet"]
+    print(f"[serve:fleet] {args.replicas} replicas ({args.router} router): "
+          f"{len(done)} requests, {total_new} tokens in {wall:.2f}s "
+          f"({total_new / wall:.1f} tok/s); routed {fs['routed']} "
+          f"({fs['routed_prefix']} prefix-affine, "
+          f"{fs['routed_prefix_tokens']} matched tok), backpressure waits "
+          f"{fs['backpressure_waits']}, shed {fs['shed']}")
+    for name, s in sorted(ss["per_replica"].items()):
+        rinfo = fs["replicas"][name]
+        print(f"[serve:fleet]   {name} ({rinfo['state']}, gen "
+              f"{rinfo['generation']}): finished {rinfo['finished']}, "
+              f"decode steps {s['decode_steps']}, prefill chunk tokens "
+              f"{s.get('prefill_chunk_tokens', 0)}, prefix shared tokens "
+              f"{s.get('prefix_shared_tokens', 0)}")
 
 
 def main():
@@ -157,6 +218,15 @@ def main():
     ap.add_argument("--trace-buffer", type=int, default=None, metavar="N",
                     help="tracer event-ring capacity (oldest events drop "
                          "first; default 65536)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a Fleet of this many engine "
+                         "replicas with prefix-aware routing (see "
+                         "serve/router.py); 1 = single engine")
+    ap.add_argument("--router", choices=("prefix", "round_robin"),
+                    default="prefix",
+                    help="fleet placement policy: longest prefix-"
+                         "fingerprint match (occupancy tie-break) or plain "
+                         "round-robin (--replicas > 1 only)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
@@ -174,7 +244,7 @@ def main():
     trace_kw = {}
     if args.trace_buffer is not None:
         trace_kw["trace_buffer"] = args.trace_buffer
-    eng = Engine(cfg, params, config=EngineConfig(
+    econf = EngineConfig(
         n_slots=args.slots, max_seq=args.max_seq,
         chunked=args.chunked_prefill, token_budget=args.token_budget,
         preempt_quantum=args.preempt_quantum, overlap=not args.no_overlap,
@@ -186,7 +256,11 @@ def main():
             host_budget_bytes=(args.host_budget_mb * 1024 * 1024
                                if args.host_budget_mb else None),
             prefix=args.prefix_cache,
-            prefix_pages=args.prefix_cache_pages)))
+            prefix_pages=args.prefix_cache_pages))
+    if args.replicas > 1:
+        _serve_fleet(cfg, params, econf, args)
+        return
+    eng = Engine(cfg, params, config=econf)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix_len)

@@ -1,1 +1,2 @@
-from repro.serve import engine, kvcache, prefix_cache, tiering  # noqa: F401
+from repro.serve import (engine, kvcache, prefix_cache, replica,  # noqa: F401
+                         router, tiering)

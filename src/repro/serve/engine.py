@@ -68,7 +68,11 @@ class EngineConfig:
     many devices (kv-head axis — see serve/executor.py). ``cache`` composes
     the KV stack bottom-up. ``metrics`` enables the per-iteration
     :class:`~repro.serve.metrics.MetricsBus` (observe-only; disabling it
-    leaves engine outputs bit-identical); ``policy`` attaches an SLO
+    leaves engine outputs bit-identical); ``metrics_namespace`` stamps that
+    bus's snapshots with a replica identity so twin engines in one process
+    (a :class:`~repro.serve.router.Fleet`) don't collide when their stats
+    are merged (None = anonymous single-engine snapshot, byte-identical to
+    the pre-fleet format); ``policy`` attaches an SLO
     :class:`~repro.serve.policy.SchedulerPolicy` built from the given
     :class:`~repro.serve.policy.PolicyConfig` (None = policy-free FIFO).
 
@@ -97,6 +101,7 @@ class EngineConfig:
     tp: int = 1
     cache: CacheConfig = CacheConfig()
     metrics: bool = True
+    metrics_namespace: Optional[str] = None
     policy: Optional[PolicyConfig] = None
     trace: bool = False
     trace_buffer: int = _DEFAULT_TRACE_BUFFER
@@ -177,7 +182,8 @@ class Engine:
             self.executor.shard_pool(pool)
         else:
             pool = CachePool(cfg, config.n_slots, config.max_seq)
-        self.bus = MetricsBus(enabled=config.metrics)
+        self.bus = MetricsBus(enabled=config.metrics,
+                              namespace=config.metrics_namespace)
         self.executor.bind_metrics(self.bus)
         # always a real Tracer (not the null singleton): clock injection must
         # work even with tracing disabled — the tracer's clock is the one

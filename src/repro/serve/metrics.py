@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import collections
 import math
-from typing import Deque, Dict, Iterable, List, Optional, Sequence, Union
+from typing import Any, Deque, Dict, Iterable, List, Optional, Sequence, Union
 
 Number = Union[int, float]
 
@@ -177,15 +177,26 @@ class Histogram:
 class MetricsBus:
     """Named-metric registry for one engine. ``enabled=False`` turns every
     write into a no-op (and ``snapshot()`` into ``{}``) so the disabled
-    engine is bit-identical to one that never constructed a bus."""
+    engine is bit-identical to one that never constructed a bus.
+
+    ``namespace`` tags every snapshot with the owning replica's identity.
+    The bus used to assume one process holds one engine, so snapshots were
+    anonymous — two twin engines in one process (a fleet of replicas, or
+    fake-clock twins in a test) produced indistinguishable dicts that
+    collide when merged into fleet-level stats. A namespaced bus stamps
+    ``snapshot()["namespace"]`` so aggregation keys on it; ``None`` (the
+    single-engine default) leaves the snapshot byte-identical to the
+    pre-namespace format."""
 
     _NULL_COUNTER = None    # shared write-sinks for the disabled bus
     _NULL_GAUGE = None
     _NULL_HIST = None
 
-    def __init__(self, enabled: bool = True, window: int = DEFAULT_WINDOW):
+    def __init__(self, enabled: bool = True, window: int = DEFAULT_WINDOW,
+                 namespace: Optional[str] = None):
         self.enabled = enabled
         self.window = window
+        self.namespace = namespace
         self.counters: Dict[str, Counter] = {}
         self.gauges: Dict[str, Gauge] = {}
         self.hists: Dict[str, Histogram] = {}
@@ -242,18 +253,22 @@ class MetricsBus:
             return None
         return h.percentile(p)
 
-    def snapshot(self, ps: Sequence[Number] = (50, 90, 99)) -> Dict[str, dict]:
+    def snapshot(self, ps: Sequence[Number] = (50, 90, 99)) -> Dict[str, Any]:
         """Structured, ``json.dumps``-able view of every metric. Plain
         Python numbers only; an empty bus returns empty sections without
         allocating anything beyond the dicts themselves."""
         if not self.enabled:
             return {}
-        return {
+        out: Dict[str, Any] = {}
+        if self.namespace is not None:
+            out["namespace"] = self.namespace
+        out.update({
             "counters": {k: c.value for k, c in sorted(self.counters.items())},
             "gauges": {k: g.value for k, g in sorted(self.gauges.items())},
             "histograms": {k: h.snapshot(ps)
                            for k, h in sorted(self.hists.items())},
-        }
+        })
+        return out
 
 
 class _NullCounter(Counter):

@@ -39,6 +39,7 @@ Ownership boundaries & invariants:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -57,6 +58,69 @@ class PrefixMatch:
 
 
 _NO_MATCH = PrefixMatch(length=0, pages=[])
+
+
+# --------------------------------------------------------------------------
+# prefix fingerprints — the fleet router's cheap placement signal
+# --------------------------------------------------------------------------
+# A fingerprint is a rolling digest over a prompt prefix: ``ROOT_DIGEST``
+# extended one page-chunk (or tail-token span) at a time. Two prefixes share
+# a fingerprint iff they are token-identical, so a replica can export
+# ``{digest: covered_tokens}`` for everything its cache holds and the router
+# can score "which replica already holds this prompt's longest prefix"
+# without shipping token arrays or walking a remote radix tree. Digests are
+# content-only (blake2b, fixed root), so placement decisions are
+# deterministic across processes and runs — same cache contents, same score.
+
+ROOT_DIGEST = b""
+_DIGEST_SIZE = 16
+
+
+def extend_digest(digest: bytes, tokens) -> bytes:
+    """One rolling-digest step: ``digest`` extended by ``tokens`` (an int32
+    token span, or its raw little-endian bytes — the radix tree keys chunks
+    by exactly those bytes, so both spellings hash identically)."""
+    raw = tokens if isinstance(tokens, bytes) else \
+        np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
+    h = hashlib.blake2b(digest, digest_size=_DIGEST_SIZE)
+    h.update(raw)
+    return h.digest()
+
+
+def prompt_fingerprints(prompt, page_tokens: int) -> List[Tuple[int, bytes]]:
+    """Every candidate-prefix fingerprint of ``prompt``, longest first.
+
+    Candidates are the lengths a cached match can actually end at: each
+    full-page boundary (radix-tree nodes) plus, from every boundary, each
+    sub-page extension of up to ``page_tokens - 1`` tokens (tail records —
+    a cached prompt may end mid-page at any depth). O(len(prompt)) digests;
+    the router computes this once per request and checks membership against
+    each replica's exported :meth:`PrefixCache.fingerprints`."""
+    toks = np.ascontiguousarray(np.asarray(prompt, np.int32))
+    L, pt = len(toks), int(page_tokens)
+    out: List[Tuple[int, bytes]] = []
+    d, k = ROOT_DIGEST, 0
+    while True:
+        base = k * pt
+        for j in range(1, min(pt - 1, L - base) + 1):
+            out.append((base + j, extend_digest(d, toks[base:base + j])))
+        if base + pt > L:
+            break
+        d = extend_digest(d, toks[base:base + pt])
+        k += 1
+        out.append((k * pt, d))
+    out.sort(key=lambda t: -t[0])
+    return out
+
+
+def longest_fingerprint_match(candidates: List[Tuple[int, bytes]],
+                              fingerprints) -> int:
+    """Tokens covered by the longest candidate present in ``fingerprints``
+    (a set or dict of digests); 0 when nothing matches."""
+    for n, d in candidates:
+        if d in fingerprints:
+            return n
+    return 0
 
 
 @dataclasses.dataclass
@@ -311,6 +375,35 @@ class PrefixCache:
         self._children.clear()
         self._tails.clear()
         return released
+
+    # -- fleet routing signal ----------------------------------------------
+    def fingerprints(self) -> Dict[bytes, int]:
+        """``{digest: covered_tokens}`` for every prefix this cache can
+        serve: the rolling digest of each radix-tree chain (full pages) plus
+        each tail record's per-token prefixes (a router match mid-tail is a
+        real partial-tail hit at admission). Read-only — no LRU ticks, no
+        allocator traffic — so replicas can export it every routing pass."""
+        out: Dict[bytes, int] = {}
+
+        def put(d, n):
+            if n > out.get(d, -1):
+                out[d] = n
+
+        def visit_tails(tails, d, base):
+            for tail in tails.values():
+                for j in range(1, len(tail.tokens) + 1):
+                    put(extend_digest(d, tail.tokens[:j]), base + j)
+
+        visit_tails(self._tails, ROOT_DIGEST, 0)
+        stack = [(self._children, ROOT_DIGEST, 0)]
+        while stack:
+            children, d, base = stack.pop()
+            for key, node in children.items():
+                nd = extend_digest(d, key)
+                put(nd, base + self.page_tokens)
+                visit_tails(node.tails, nd, base + self.page_tokens)
+                stack.append((node.children, nd, base + self.page_tokens))
+        return out
 
     # -- introspection (tests + stats) -------------------------------------
     def cached_pages(self) -> List[int]:

@@ -217,6 +217,22 @@ class Scheduler:
                 and not getattr(self, "_pending_swapins", None)
                 and not self._fetch_queue and not self._commit_queue)
 
+    def extract_unadmitted(self) -> List[Request]:
+        """Remove and return every mailbox request that holds NO engine
+        state — the fleet-drain hook. A draining replica stops admitting
+        and hands its never-admitted queue to siblings, but requests with
+        resident pages (ever-admitted returnees, tiered-cold residents)
+        must finish here: moving them would strand allocator accounting.
+        The kept requests are requeued in their original order."""
+        pending = self.mailbox.drain(len(self.mailbox))
+        keep: List[Request] = []
+        out: List[Request] = []
+        for req in pending:
+            (out if self._sheddable(req) else keep).append(req)
+        for req in reversed(keep):
+            self.mailbox.requeue(req)
+        return out
+
     def step(self) -> List[Request]:
         """One engine iteration. Chunked mode: the unified token-budgeted
         step, flushed with exactly one host transfer of sampled ids.

@@ -65,7 +65,7 @@ def test_grad_accum_matches_plain():
 
 @pytest.mark.slow  # subprocess CLI end-to-end
 @pytest.mark.parametrize("mode", ["dense", "paged", "tiered", "chunked",
-                                  "prefix", "tp", "trace"])
+                                  "prefix", "tp", "trace", "fleet"])
 def test_serve_driver_cli(mode, tmp_path):
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -98,6 +98,11 @@ def test_serve_driver_cli(mode, tmp_path):
         cmd += ["--tiered", "--page-tokens", "8", "--pages", "2",
                 "--host-budget-mb", "1", "--trace", trace_out,
                 "--metrics-log", "7"]
+    elif mode == "fleet":
+        # two replicas with prefix-aware routing on a shared system prompt
+        cmd += ["--replicas", "2", "--prefix-cache", "--page-tokens", "8",
+                "--token-budget", "8", "--shared-prefix-len", "8",
+                "--prompt-len", "2"]
     r = subprocess.run(cmd, env=env, capture_output=True, text=True,
                        timeout=400)
     assert "3 requests" in r.stdout, r.stdout + r.stderr
@@ -118,6 +123,10 @@ def test_serve_driver_cli(mode, tmp_path):
         import json as _json
         doc = _json.load(open(trace_out))
         assert doc["traceEvents"] and doc["displayTimeUnit"] == "ms"
+    elif mode == "fleet":
+        assert "[serve:fleet] 2 replicas (prefix router)" in r.stdout, \
+            r.stdout + r.stderr
+        assert "routed 3" in r.stdout and "gen 1" in r.stdout
 
 
 def test_validate_bench_schema_roundtrip(tmp_path):
@@ -181,6 +190,13 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                     "noncompute_stall_reduction": 3.0,
                     "sync": engine_stub("overlap"),
                     "overlap": engine_stub("overlap")},
+        "fleet": {"arch": "qwen2-0.5b", "token_budget": 24, "n_slots": 4,
+                  "page_tokens": 8, "n_pages": 60, "replicas": 2,
+                  "tenants": 2, "requests": 12, "prefix_len": 48,
+                  "prefill_token_reduction": 1.6, "ttft_speedup": 1.2,
+                  "single": engine_stub("fleet"),
+                  "round_robin": engine_stub("fleet"),
+                  "prefix": engine_stub("fleet")},
     }
     p = tmp_path / "BENCH_serve.json"
     p.write_text(json.dumps(good))
@@ -203,4 +219,5 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                               "BENCH_serve.json")
     assert validate(repo_bench) == []
     assert set(SCHEMAS) == {"tiering", "chunked_prefill", "prefix_cache",
-                            "tensor_parallel", "slo", "trace", "overlap"}
+                            "tensor_parallel", "slo", "trace", "overlap",
+                            "fleet"}

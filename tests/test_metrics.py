@@ -237,3 +237,59 @@ def test_bench_pctl_pins_numpy():
     for p in (50, 99):
         assert pctl(vals, p) == pytest.approx(
             float(np.percentile(vals, p)), rel=1e-12)
+
+
+# --------------------------------------------------------------------------
+# per-replica namespacing (PR 9 fleet regression)
+# --------------------------------------------------------------------------
+def test_bus_namespace_stamped_and_default_anonymous():
+    bus = M.MetricsBus(enabled=True, namespace="r0")
+    bus.inc("c", 2)
+    snap = bus.snapshot()
+    assert snap["namespace"] == "r0"
+    anon = M.MetricsBus(enabled=True)
+    anon.inc("c", 2)
+    # the single-engine default stays byte-identical to the pre-namespace
+    # snapshot format (no stray key)
+    assert "namespace" not in anon.snapshot()
+    assert json.dumps(anon.snapshot()) == json.dumps(
+        {k: v for k, v in snap.items() if k != "namespace"})
+    # a disabled namespaced bus is still inert
+    off = M.MetricsBus(enabled=False, namespace="r1")
+    off.inc("c")
+    assert off.snapshot() == {}
+
+
+def test_twin_engines_namespaced_snapshots_dont_collide():
+    """The latent one-process-one-bus assumption: two engines running the
+    SAME workload under the SAME fake clock used to produce byte-identical
+    anonymous snapshots — merged fleet stats could not tell them apart.
+    Namespaced buses make the twins distinguishable by exactly one field."""
+    def twin(name):
+        t = {"now": 0.0}
+
+        def clock():
+            t["now"] += 1e-3
+            return t["now"]
+
+        eng = Engine(_CFG, _params(), config=EngineConfig(
+            n_slots=2, max_seq=64, chunked=True, token_budget=12,
+            cache=CacheConfig(paged=True), clock=clock,
+            metrics_namespace=name))
+        rng = np.random.default_rng(9)
+        for i in range(4):
+            eng.submit(Request(
+                seq_id=i,
+                prompt=rng.integers(0, _CFG.vocab, 6 + i).astype(np.int32),
+                max_new=3))
+        eng.run(max_steps=500)
+        assert eng.idle
+        return eng.metrics_snapshot()
+
+    a, b = twin("r0"), twin("r1")
+    assert a["namespace"] == "r0" and b["namespace"] == "r1"
+    assert a != b, "namespaced twin snapshots must not collide"
+    # ...and the namespace is the ONLY difference: same workload + same
+    # fake clock = identical metrics underneath (the PR-7 determinism pin)
+    a.pop("namespace"), b.pop("namespace")
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)

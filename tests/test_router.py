@@ -1,0 +1,541 @@
+"""Fleet router conformance + fault-injection suite (PR 9).
+
+The fleet's contract stands on the repo's one serving invariant: greedy
+token streams are a pure function of (params, prompt) — scheduling,
+batching, tiering, prefix reuse, and tensor parallelism may change *when*
+tokens happen, never *which* tokens. Routing adds two more axes (which
+REPLICA computes a stream, and whether that replica survives), so the
+conformance bar is:
+
+  * the union of per-request streams from an N-replica fleet is
+    bit-identical to a 1-replica run of the same seeded mix, on every cache
+    stack (chunked / tiered / prefix / tp);
+  * zero request loss across kill, drain, and respawn — every submitted
+    request ends exactly one of finished/shed, shed verdicts are typed;
+  * placement is a deterministic function of (prefix digests, occupancy
+    gauges, replica order): longest fingerprint match wins, least-occupied
+    breaks ties (and is the fallback when nothing matches);
+  * the allocator audits clean on every replica at drain.
+
+Fault injection uses Replica.fail_after(n) — the crash fires at the top of
+a step, before device work, so a killed replica models death between
+iterations; the fleet must requeue its in-flight AND queued requests to
+siblings and every stream must still complete bit-identically (re-derived
+from scratch — Scheduler.submit resets stream state on re-submission).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import blocks, transformer
+from repro.serve.cache import CacheConfig
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.metrics import MetricsBus
+from repro.serve.policy import PolicyConfig
+from repro.serve.prefix_cache import (extend_digest, longest_fingerprint_match,
+                                      prompt_fingerprints)
+from repro.serve.replica import DEAD, DRAINING, READY, Replica
+from repro.serve.router import Fleet
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_CFG = configs.get_smoke_config("qwen2-0.5b", compute_dtype=jnp.float32)
+_PARAMS = None
+_N_DEV = len(jax.devices())
+
+
+def _params():
+    global _PARAMS
+    if _PARAMS is None:
+        params_t = transformer.init_model(jax.random.PRNGKey(0), _CFG)
+        _PARAMS, _ = blocks.split_params(params_t)
+    return _PARAMS
+
+
+def _mix(seed, n=8, shared_len=12, spread=2):
+    """(arrival_iter, Request): ragged arrivals over a shared system
+    prompt — the workload where placement matters."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, _CFG.vocab, shared_len)
+    sched = []
+    for i in range(n):
+        suffix = rng.integers(0, _CFG.vocab, 2 + int(rng.integers(0, 4)))
+        sched.append((spread * i, Request(
+            seq_id=i,
+            prompt=np.concatenate([shared, suffix]).astype(np.int32),
+            max_new=3 + int(rng.integers(0, 4)))))
+    return sched
+
+
+def _drive(target, schedule, max_iters=2000, hook=None):
+    """Feed arrivals into an Engine or a Fleet (same surface); ``hook(it)``
+    runs before each step (fault/drain injection point)."""
+    pending = sorted(schedule, key=lambda t: t[0])
+    done, it = [], 0
+    while True:
+        while pending and pending[0][0] <= it:
+            assert target.submit(pending[0][1])
+            pending.pop(0)
+        if hook is not None:
+            hook(it)
+        if not pending and target.idle:
+            return done
+        done.extend(target.step())
+        it += 1
+        assert it <= max_iters, "workload did not drain"
+
+
+_STACKS = {
+    "chunked": EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=12,
+        cache=CacheConfig(paged=True, page_tokens=8, n_pages=24)),
+    "tiered": EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=12,
+        preempt_quantum=1,
+        cache=CacheConfig(page_tokens=8, n_pages=8, tiered=True)),
+    "prefix": EngineConfig(
+        n_slots=2, max_seq=64, token_budget=12,
+        cache=CacheConfig(paged=True, page_tokens=8, n_pages=24,
+                          prefix=True, prefix_pages=6)),
+}
+
+
+def _streams(done):
+    return {r.seq_id: list(r.tokens_out) for r in done}
+
+
+def _assert_zero_loss(fleet, schedule):
+    """Every submitted request ended exactly one of finished/shed, and a
+    shed one carries a typed verdict."""
+    submitted = {req.seq_id for _, req in schedule}
+    fin = {r.seq_id for r in fleet.finished}
+    shed = {r.seq_id for r in fleet.shed}
+    assert fin | shed == submitted, "request lost by the fleet"
+    assert not (fin & shed), "request both finished and shed"
+    assert not fleet._pending and not fleet._inflight
+    for r in fleet.shed:
+        assert r.verdict is not None and r.verdict.code in (
+            "overload", "deadline"), f"untyped shed verdict on {r.seq_id}"
+    for r in fleet.finished:
+        assert r.done and r.tokens_out
+
+
+def _drain_all_and_audit(fleet):
+    """Graceful-drain every live replica, step the corpses dead, and run
+    the allocator audit on each (the drain keeps engines post-mortem)."""
+    for rep in fleet.replicas:
+        if rep.state == READY:
+            fleet.drain(rep.name)
+    fleet.run(50)
+    for rep in fleet.replicas:
+        assert rep.state == DEAD, f"{rep.name} stuck in {rep.state}"
+        if rep.engine is not None and hasattr(rep.engine.pool, "alloc"):
+            rep.engine.pool.alloc.audit()
+            assert rep.engine.pool.alloc._seq_pages == {}, \
+                f"{rep.name} leaked sequence pages"
+
+
+# --------------------------------------------------------------------------
+# routed-vs-single conformance across cache stacks
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("stack", sorted(_STACKS))
+def test_fleet_streams_bit_identical_to_single(stack):
+    econf = _STACKS[stack]
+    single = Engine(_CFG, _params(), config=econf)
+    ref = _streams(_drive(single, _mix(0)))
+
+    for router in ("prefix", "round_robin"):
+        fleet = Fleet(_CFG, _params(), econf, replicas=2, router=router)
+        sched = _mix(0)
+        got = _streams(_drive(fleet, sched))
+        assert got == ref, f"{stack}/{router}: routed streams diverged"
+        _assert_zero_loss(fleet, sched)
+        assert fleet.stats["routed"] == len(sched)
+        # per-replica bus snapshots are namespaced (no fleet collisions)
+        snaps = fleet.metrics_snapshot()
+        assert {s["namespace"] for s in snaps.values()} == {"r0", "r1"}
+        _drain_all_and_audit(fleet)
+
+
+@pytest.mark.parametrize("tp", [2])
+def test_fleet_streams_bit_identical_tp(tp):
+    if _N_DEV < tp:
+        pytest.skip(f"needs {tp} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    econf = EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=10, tp=tp,
+        cache=CacheConfig(page_tokens=8, n_pages=16))
+    single = Engine(_CFG, _params(), config=econf)
+    ref = _streams(_drive(single, _mix(1, n=6)))
+    fleet = Fleet(_CFG, _params(), econf, replicas=2)
+    sched = _mix(1, n=6)
+    assert _streams(_drive(fleet, sched)) == ref
+    _assert_zero_loss(fleet, sched)
+    _drain_all_and_audit(fleet)
+
+
+# --------------------------------------------------------------------------
+# fault injection: kill mid-decode, drain -> respawn
+# --------------------------------------------------------------------------
+def test_kill_mid_decode_requeues_to_siblings():
+    econf = _STACKS["prefix"]
+    single = Engine(_CFG, _params(), config=econf)
+    ref = _streams(_drive(single, _mix(2)))
+
+    fleet = Fleet(_CFG, _params(), econf, replicas=2)
+    sched = _mix(2)
+
+    def hook(it):
+        if it == 4:      # mid-run: r0 has residents and queued work
+            fleet._by_name["r0"].fail_after(1)
+
+    got = _streams(_drive(fleet, sched, hook=hook))
+    r0 = fleet._by_name["r0"]
+    assert r0.state == DEAD and r0.engine is None
+    assert fleet.stats["requeued_kill"] > 0, \
+        "kill at iteration 4 must orphan at least one request"
+    assert got == ref, "streams after mid-decode kill diverged"
+    _assert_zero_loss(fleet, sched)
+    # the survivor audits clean after finishing everyone's work
+    _drain_all_and_audit(fleet)
+
+
+def test_explicit_kill_and_respawn_round_trip():
+    econf = _STACKS["chunked"]
+    single = Engine(_CFG, _params(), config=econf)
+    ref = _streams(_drive(single, _mix(3)))
+
+    fleet = Fleet(_CFG, _params(), econf, replicas=2)
+    sched = _mix(3)
+    state = {"killed": False, "respawned": False}
+
+    def hook(it):
+        if it == 3 and not state["killed"]:
+            fleet.kill("r1")
+            state["killed"] = True
+        elif it == 8 and not state["respawned"]:
+            rep = fleet.respawn("r1")
+            assert rep.state == READY and rep.generation == 2
+            state["respawned"] = True
+
+    got = _streams(_drive(fleet, sched, hook=hook))
+    assert state["killed"] and state["respawned"]
+    assert got == ref
+    _assert_zero_loss(fleet, sched)
+    assert fleet.stats["respawns"] == 1
+    _drain_all_and_audit(fleet)
+
+
+def test_drain_requeues_only_stateless_requests():
+    """Drain moves never-admitted mailbox requests to siblings; residents
+    (they hold pages) finish on the draining replica, which then
+    tombstones itself with its engine intact for the post-mortem audit."""
+    econf = _STACKS["tiered"]
+    single = Engine(_CFG, _params(), config=econf)
+    ref = _streams(_drive(single, _mix(4, n=10, spread=1)))
+
+    fleet = Fleet(_CFG, _params(), econf, replicas=2)
+    sched = _mix(4, n=10, spread=1)
+    moved = {}
+
+    def hook(it):
+        if it == 3:
+            moved["n"] = fleet.drain("r0")
+            assert fleet._by_name["r0"].state in (DRAINING, DEAD)
+
+    got = _streams(_drive(fleet, sched, hook=hook))
+    assert got == ref
+    _assert_zero_loss(fleet, sched)
+    assert fleet.stats["requeued_drain"] == moved["n"]
+    r0 = fleet._by_name["r0"]
+    assert r0.state == DEAD and r0.engine is not None, \
+        "drained corpse must keep its engine for the audit"
+    r0.engine.pool.alloc.audit()
+    assert r0.engine.pool.alloc._seq_pages == {}
+    _drain_all_and_audit(fleet)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_drain_respawn_property_zero_loss():
+    """Property (seeded twins): for random mixes and a random drain point,
+    a drain -> respawn round trip loses zero requests, streams stay
+    bit-identical to the single-engine reference, and a twin fleet driven
+    identically lands every placement identically (routing is
+    deterministic)."""
+    econf = _STACKS["chunked"]
+
+    @settings(max_examples=5, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 10_000), n=st.integers(4, 8),
+           drain_at=st.integers(1, 6))
+    def prop(seed, n, drain_at):
+        single = Engine(_CFG, _params(), config=econf)
+        ref = _streams(_drive(single, _mix(seed, n=n)))
+
+        def run_fleet():
+            fleet = Fleet(_CFG, _params(), econf, replicas=2)
+            state = {"drained": False, "respawned": False}
+
+            def hook(it):
+                if it == drain_at and not state["drained"]:
+                    fleet.drain("r0")
+                    state["drained"] = True
+                elif (state["drained"] and not state["respawned"]
+                      and fleet._by_name["r0"].state == DEAD):
+                    fleet.respawn("r0")
+                    state["respawned"] = True
+
+            got = _streams(_drive(fleet, _mix(seed, n=n), hook=hook))
+            assert state["drained"]
+            return fleet, got
+
+        fleet_a, got_a = run_fleet()
+        fleet_b, got_b = run_fleet()
+        assert got_a == ref, "drain/respawn round trip changed streams"
+        assert got_b == got_a, "seeded twin fleets diverged"
+        _assert_zero_loss(fleet_a, _mix(seed, n=n))
+        assert fleet_a.stats == fleet_b.stats, \
+            "twin fleets made different placement decisions"
+        _drain_all_and_audit(fleet_a)
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# admission backpressure + typed shedding under SLO policy
+# --------------------------------------------------------------------------
+def test_backpressure_holds_fifo_until_a_replica_opens():
+    """With every replica's admission gate at max_in_system=1, later
+    ragged arrivals find no open replica and park in the fleet FIFO —
+    nothing is dropped, everything eventually completes."""
+    econf = EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=12,
+        policy=PolicyConfig(max_in_system=1),
+        cache=CacheConfig(paged=True, page_tokens=8, n_pages=24))
+    single = Engine(_CFG, _params(), config=econf)
+    ref = _streams(_drive(single, _mix(5, spread=1)))
+    fleet = Fleet(_CFG, _params(), econf, replicas=2)
+    sched = _mix(5, spread=1)
+    got = _streams(_drive(fleet, sched))
+    assert got == ref
+    _assert_zero_loss(fleet, sched)
+    assert fleet.stats["backpressure_waits"] > 0, \
+        "8 ragged arrivals vs 2 one-resident replicas must backpressure"
+    assert not fleet.shed
+
+
+def test_overload_shed_verdicts_are_typed():
+    """A queue-capped policy sheds the over-cap tail on whichever replica
+    it was routed to; the fleet folds those requests into its ledger with
+    their typed verdicts (no silent loss)."""
+    econf = EngineConfig(
+        n_slots=2, max_seq=64, chunked=True, token_budget=12,
+        policy=PolicyConfig(max_in_system=2, max_queue=1),
+        cache=CacheConfig(paged=True, page_tokens=8, n_pages=24))
+    fleet = Fleet(_CFG, _params(), econf, replicas=2)
+    sched = [(0, req) for _, req in _mix(6, n=12)]      # one burst
+    _drive(fleet, sched)
+    _assert_zero_loss(fleet, sched)
+    assert fleet.shed, "burst over max_queue=1 x 2 replicas must shed"
+    assert all(r.verdict.code == "overload" for r in fleet.shed)
+    assert fleet.stats_summary()["fleet"]["shed"] == len(fleet.shed)
+
+
+# --------------------------------------------------------------------------
+# prefix fingerprints: golden match cases against a real radix tree
+# --------------------------------------------------------------------------
+def test_prompt_fingerprints_deterministic_and_ordered():
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, 1000, 21).astype(np.int32)
+    fps = prompt_fingerprints(prompt, 8)
+    assert fps == prompt_fingerprints(prompt, 8), "must be deterministic"
+    lens = [n for n, _ in fps]
+    assert lens == sorted(lens, reverse=True), "longest candidate first"
+    assert set(lens) == set(range(1, 22)), \
+        "every prefix length through L must be a candidate"
+    # digests are content-rolling: a one-token change anywhere invalidates
+    # every candidate at or beyond it, and nothing before it
+    mutated = prompt.copy()
+    mutated[10] = (mutated[10] + 1) % 1000
+    other = dict((d, n) for n, d in prompt_fingerprints(mutated, 8))
+    match = longest_fingerprint_match(fps, other)
+    assert match == 10, f"divergence at token 10 must match 10, got {match}"
+
+
+def test_fingerprint_match_golden_against_real_cache():
+    """The exported digest map of a real radix tree scores followers at
+    the cache's actual reuse granularity: whole pages for interior chain
+    nodes, per-token for the partial tail."""
+    econf = _STACKS["prefix"]
+    eng = Engine(_CFG, _params(), config=econf)
+    rng = np.random.default_rng(12)
+    donor = rng.integers(0, _CFG.vocab, 20).astype(np.int32)   # 2 pages + 4
+    eng.submit(Request(seq_id=0, prompt=donor, max_new=3))
+    eng.run(200)
+    fp = eng.prefix.fingerprints()
+    assert sorted(fp.values()) == [8, 16, 17, 18, 19, 20], \
+        "chains at page boundaries + per-token tail prefixes"
+
+    def match(prompt):
+        return longest_fingerprint_match(
+            prompt_fingerprints(np.asarray(prompt, np.int32), 8), fp)
+
+    tail = rng.integers(0, _CFG.vocab, 6)
+    full = np.concatenate([donor, tail])
+    assert match(full) == 20                      # full match incl. tail
+    partial_tail = full.copy()
+    partial_tail[18] = (partial_tail[18] + 1) % _CFG.vocab
+    assert match(partial_tail) == 18              # mid-page, partial tail
+    mid_page = full.copy()
+    mid_page[12] = (mid_page[12] + 1) % _CFG.vocab
+    assert match(mid_page) == 8, \
+        "interior divergence falls back to the last whole-page boundary"
+    assert match(rng.integers(0, _CFG.vocab, 12)) == 0
+
+
+# --------------------------------------------------------------------------
+# placement unit tests (fake replicas: no device work)
+# --------------------------------------------------------------------------
+class _FakePrefix:
+    def __init__(self, fps):
+        self._fps = fps
+
+    def fingerprints(self):
+        return dict(self._fps)
+
+
+class _FakeScheduler:
+    policy = None
+
+    def __init__(self):
+        self.n_resident = 0
+
+    def _in_system(self):
+        return self.n_resident
+
+
+class _FakeEngine:
+    """Just the surface Replica's routing signals + submit touch."""
+
+    def __init__(self):
+        self.mailbox = []
+        self.bus = MetricsBus(enabled=False)
+        self.scheduler = _FakeScheduler()
+        self.prefix = None
+        self.shed = []
+        self.idle = True
+
+    def submit(self, req):
+        self.mailbox.append(req)
+        return True
+
+    def step(self):
+        return []
+
+
+def _fake_fleet(n=3):
+    fleet = Fleet(None, None, EngineConfig(
+        cache=CacheConfig(paged=True, page_tokens=8)),
+        replicas=n, engine_factory=lambda name, gen: _FakeEngine())
+    return fleet
+
+
+def _donor_map(prompt, page_tokens=8):
+    """Digest map a replica holding ``prompt`` would export: chain digests
+    at page boundaries plus per-token prefixes of the final partial page —
+    built independently with extend_digest (not prompt_fingerprints, which
+    is the *query* side)."""
+    toks = np.asarray(prompt, np.int32)
+    out, d, base = {}, b"", 0
+    while base + page_tokens <= len(toks):
+        d = extend_digest(d, toks[base:base + page_tokens])
+        base += page_tokens
+        out[d] = base
+    for j in range(1, len(toks) - base + 1):
+        out[extend_digest(d, toks[base:base + j])] = base + j
+    return out
+
+
+def test_pick_longest_prefix_match_wins():
+    fleet = _fake_fleet(3)
+    rng = np.random.default_rng(13)
+    tenant_a = rng.integers(0, 1000, 24).astype(np.int32)
+    tenant_b = rng.integers(0, 1000, 24).astype(np.int32)
+    fleet._by_name["r1"].engine.prefix = _FakePrefix(_donor_map(tenant_a))
+    fleet._by_name["r2"].engine.prefix = _FakePrefix(_donor_map(tenant_b))
+
+    follower = Request(seq_id=50, prompt=np.concatenate(
+        [tenant_a, rng.integers(0, 1000, 5)]).astype(np.int32), max_new=2)
+    assert fleet._try_place(follower)
+    assert fleet._inflight[50][1] == "r1", "longest match must win"
+    assert fleet.stats["routed_prefix"] == 1
+    assert fleet.stats["routed_prefix_tokens"] == 24
+    # tenant-b follower goes home too, even though r1 now has queue depth
+    follower_b = Request(seq_id=51, prompt=np.concatenate(
+        [tenant_b, rng.integers(0, 1000, 3)]).astype(np.int32), max_new=2)
+    assert fleet._try_place(follower_b)
+    assert fleet._inflight[51][1] == "r2"
+
+
+def test_pick_falls_back_to_least_occupied_and_is_deterministic():
+    fleet = _fake_fleet(3)
+    fleet._by_name["r0"].engine.scheduler.n_resident = 2
+    fleet._by_name["r1"].engine.mailbox.extend([None])      # load 1
+    # r2: load 0 -> least occupied wins on no fingerprint match
+    rng = np.random.default_rng(14)
+    req = Request(seq_id=60, prompt=rng.integers(0, 1000, 9).astype(np.int32),
+                  max_new=2)
+    assert fleet._try_place(req)
+    assert fleet._inflight[60][1] == "r2"
+    assert fleet.stats["routed_prefix"] == 0
+    # determinism: identical state in a twin fleet -> identical placement
+    twin = _fake_fleet(3)
+    twin._by_name["r0"].engine.scheduler.n_resident = 2
+    twin._by_name["r1"].engine.mailbox.extend([None])
+    req2 = Request(seq_id=60,
+                   prompt=rng.integers(0, 1000, 9).astype(np.int32),
+                   max_new=2)
+    assert twin._try_place(req2) and twin._inflight[60][1] == "r2"
+    # full tie -> lowest replica index (a total order, not dict luck)
+    tie = _fake_fleet(3)
+    req3 = Request(seq_id=61, prompt=np.arange(7, dtype=np.int32), max_new=2)
+    assert tie._try_place(req3) and tie._inflight[61][1] == "r0"
+
+
+def test_round_robin_cycles_open_replicas():
+    fleet = _fake_fleet(3)
+    fleet.router = "round_robin"
+    owners = []
+    for i in range(6):
+        req = Request(seq_id=70 + i, prompt=np.arange(5, dtype=np.int32),
+                      max_new=1)
+        assert fleet._try_place(req)
+        owners.append(fleet._inflight[70 + i][1])
+    assert owners == ["r0", "r1", "r2", "r0", "r1", "r2"]
+
+
+def test_replica_lifecycle_guards():
+    rep = Replica("x", lambda name, gen: _FakeEngine())
+    with pytest.raises(RuntimeError):
+        rep.start_drain()                 # not READY yet
+    rep.launch()
+    assert rep.state == READY and rep.generation == 1
+    with pytest.raises(RuntimeError):
+        rep.launch()                      # already live
+    with pytest.raises(ValueError):
+        rep.fail_after(0)
+    rep.engine.idle = False               # a resident is still decoding
+    rep.start_drain()
+    assert rep.state == DRAINING and not rep.admission_open()
+    rep.step()                            # still busy -> stays draining
+    assert rep.state == DRAINING
+    rep.engine.idle = True
+    rep.step()                            # emptied -> tombstones itself
+    assert rep.state == DEAD and rep.engine is not None
+    rep.launch()                          # respawn path
+    assert rep.state == READY and rep.generation == 2

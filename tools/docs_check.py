@@ -46,6 +46,8 @@ REQUIRED_MODULES = (
     "src/repro/serve/metrics.py",
     "src/repro/serve/policy.py",
     "src/repro/serve/trace.py",
+    "src/repro/serve/replica.py",
+    "src/repro/serve/router.py",
 )
 
 
