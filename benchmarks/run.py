@@ -35,6 +35,10 @@ Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
                               a two-tenant shared-prefix mix — streams
                               bit-identical to one engine, fewer prefill
                               tokens → BENCH_serve.json ``fleet`` section
+  §2.3    bench_kv_quant      int8 KV pages vs f32: ≥2x resident seqs at
+                              equal HBM, ≥2x fewer swap bytes, token-match
+                              + logit-error ablation →
+                              BENCH_serve.json ``kv_quant`` section
   (validate_bench checks the BENCH_serve.json schema after the benches)
 """
 from __future__ import annotations
@@ -47,7 +51,7 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_autodma, bench_chunked_prefill,
                             bench_complexity, bench_fleet,
-                            bench_interconnect, bench_isa,
+                            bench_interconnect, bench_isa, bench_kv_quant,
                             bench_overlap, bench_parallel, bench_prefix_cache,
                             bench_slo, bench_tensor_parallel, bench_tiering,
                             bench_tiling, bench_trace, roofline_report,
@@ -57,7 +61,7 @@ def main() -> None:
                 bench_autodma, bench_interconnect, bench_isa,
                 roofline_report, bench_tiering, bench_chunked_prefill,
                 bench_prefix_cache, bench_tensor_parallel, bench_slo,
-                bench_trace, bench_overlap, bench_fleet):
+                bench_trace, bench_overlap, bench_fleet, bench_kv_quant):
         print(f"# === {mod.__name__} ===", flush=True)
         try:
             mod.run()

@@ -82,6 +82,18 @@ SCHEMAS = {
         "ttft_speedup": _NUM,
         "single": dict, "round_robin": dict, "prefix": dict,
     },
+    "kv_quant": {
+        "arch": str, "page_tokens": _NUM, "hot_pages": _NUM,
+        "n_slots": _NUM, "requests": _NUM, "hbm_budget_bytes": _NUM,
+        "page_nbytes_f32": _NUM, "page_nbytes_int8": _NUM,
+        "resident_seqs_f32": _NUM, "resident_seqs_int8": _NUM,
+        "residency_gain": _NUM,              # >= 2 asserted by the bench
+        "swap_bytes_f32": _NUM, "swap_bytes_int8": _NUM,
+        "swap_byte_reduction": _NUM,         # >= 2 asserted by the bench
+        "token_match_rate": _NUM,            # greedy-stream agreement
+        "max_abs_logit_err": _NUM,           # direct decode-step comparison
+        "f32": dict, "int8": dict,
+    },
 }
 # keys every per-engine sub-dict must carry with numeric values
 ENGINE_NUM_KEYS = {
@@ -105,6 +117,9 @@ ENGINE_NUM_KEYS = {
                 "stall_pct_dma", "stall_pct_shadowed", "stall_pct_other",
                 "swap_out_count", "swap_in_count"),
     "fleet": ("ttft_mean_s", "prefill_chunk_tokens"),
+    "kv_quant": ("completed", "tokens", "wall_s", "tok_per_s",
+                 "decode_steps", "preemptions", "swap_out_count",
+                 "swap_in_count", "swap_out_bytes", "swap_in_bytes"),
 }
 
 
@@ -130,7 +145,7 @@ def _check(errors, path, obj, schema):
 
 def validate(path: str, require=("tiering", "chunked_prefill",
                                  "prefix_cache", "tensor_parallel", "slo",
-                                 "trace", "overlap", "fleet")):
+                                 "trace", "overlap", "fleet", "kv_quant")):
     """Returns a list of error strings (empty = valid)."""
     errors = []
     try:
@@ -166,7 +181,7 @@ def main():
     ap.add_argument("--require", nargs="+",
                     default=["tiering", "chunked_prefill", "prefix_cache",
                              "tensor_parallel", "slo", "trace", "overlap",
-                             "fleet"])
+                             "fleet", "kv_quant"])
     args = ap.parse_args()
     errors = validate(args.path, require=tuple(args.require))
     if errors:

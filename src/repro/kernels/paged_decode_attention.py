@@ -43,6 +43,7 @@ NEG = -1e30
 
 def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        page_table: jax.Array, lengths: jax.Array,
+                       k_scale=None, v_scale=None,
                        interpret: bool = True) -> jax.Array:
     """One-token attention over a paged KV cache.
 
@@ -51,6 +52,14 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     v_pages:    [P, K, pt, hd]
     page_table: [B, max_pages] int32 page ids, -1 = unmapped
     lengths:    [B] int32 valid token counts
+    k_scale:    optional [P, K] f32 per-(page, kv-head) dequant scales for
+                an int8 pool (serve/kvquant.py); the page block dequantizes
+                **in VMEM** — int8 rows × scale → f32 — before the f32
+                softmax accumulation. The scale block rides the same
+                prefetched page-table walk as its page (its BlockSpec
+                index_map is the table lookup), so quantization adds one
+                scalar-sized block per page, no extra gather.
+    v_scale:    optional [P, K] f32 (must accompany ``k_scale``)
     Returns [B, H, hd].
     """
     B, H, hd = q.shape
@@ -58,6 +67,10 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     G = H // K
     max_pages = page_table.shape[1]
     scale = 1.0 / math.sqrt(hd)
+    quant = k_scale is not None
+    if quant != (v_scale is not None):
+        raise ValueError("paged_flash_decode: k_scale and v_scale must be "
+                         "given together")
 
     qr = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
     # clamp padding rows: masked out by `lengths` below, but the index_map
@@ -65,8 +78,11 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     table = jnp.maximum(page_table.astype(jnp.int32), 0)
     lengths_bk = jnp.repeat(lengths.astype(jnp.int32), K)    # [B*K]
 
-    def kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-               m_ref, l_ref, acc_ref):
+    def kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest):
+        if quant:
+            ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        else:
+            o_ref, m_ref, l_ref, acc_ref = rest
         bk = pl.program_id(0)
         j = pl.program_id(1)
 
@@ -83,6 +99,11 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             qb = q_ref[0].astype(jnp.float32)            # [G, hd]
             kb = k_ref[0, 0].astype(jnp.float32)         # [pt, hd]
             vb = v_ref[0, 0].astype(jnp.float32)
+            if quant:
+                # dequantize in VMEM: int8 page block × per-(page, head)
+                # scale → f32, feeding the same f32 accumulation below
+                kb = kb * ks_ref[0, 0]
+                vb = vb * vs_ref[0, 0]
             s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
             kpos = j * pt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
             s = jnp.where(kpos < seq_len, s, NEG)
@@ -102,17 +123,29 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
     from jax.experimental.pallas import tpu as pltpu
 
+    in_specs = [
+        pl.BlockSpec((1, G, hd), lambda bk, j, tbl, lens: (bk, 0, 0)),
+        # the page-table walk: physical page id from the prefetched table
+        pl.BlockSpec((1, 1, pt, hd),
+                     lambda bk, j, tbl, lens: (tbl[bk // K, j], bk % K, 0, 0)),
+        pl.BlockSpec((1, 1, pt, hd),
+                     lambda bk, j, tbl, lens: (tbl[bk // K, j], bk % K, 0, 0)),
+    ]
+    inputs = [table, lengths_bk, qr, k_pages, v_pages]
+    if quant:
+        # scale blocks walk the same prefetched table as their pages
+        in_specs += [
+            pl.BlockSpec((1, 1),
+                         lambda bk, j, tbl, lens: (tbl[bk // K, j], bk % K)),
+            pl.BlockSpec((1, 1),
+                         lambda bk, j, tbl, lens: (tbl[bk // K, j], bk % K)),
+        ]
+        inputs += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # page_table, lengths_bk
         grid=(B * K, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, G, hd), lambda bk, j, tbl, lens: (bk, 0, 0)),
-            # the page-table walk: physical page id from the prefetched table
-            pl.BlockSpec((1, 1, pt, hd),
-                         lambda bk, j, tbl, lens: (tbl[bk // K, j], bk % K, 0, 0)),
-            pl.BlockSpec((1, 1, pt, hd),
-                         lambda bk, j, tbl, lens: (tbl[bk // K, j], bk % K, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, G, hd), lambda bk, j, tbl, lens: (bk, 0, 0)),
         scratch_shapes=[pltpu.VMEM((G,), jnp.float32),
                         pltpu.VMEM((G,), jnp.float32),
@@ -124,7 +157,7 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
         interpret=interpret,
-    )(table, lengths_bk, qr, k_pages, v_pages)
+    )(*inputs)
     return out.reshape(B, H, hd)
 
 
@@ -138,8 +171,19 @@ def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
     return jnp.transpose(dense, (0, 2, 1, 3, 4)).reshape(B, K, max_pages * pt, hd)
 
 
-def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
-    """Oracle: gather pages dense, then the masked-softmax decode oracle."""
+def dequant_pages(pages: jax.Array, page_scale: jax.Array) -> jax.Array:
+    """Dequantize an int8 page pool dense: [P, K, pt, hd] × [P, K] → f32
+    (test oracle + debugging; the kernel dequantizes per block in VMEM)."""
+    return pages.astype(jnp.float32) * page_scale[:, :, None, None]
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths,
+                               k_scale=None, v_scale=None):
+    """Oracle: gather pages dense (dequantizing first when scales are
+    given), then the masked-softmax decode oracle."""
+    if k_scale is not None:
+        k_pages = dequant_pages(k_pages, k_scale)
+        v_pages = dequant_pages(v_pages, v_scale)
     k_dense = gather_pages(k_pages, page_table)
     v_dense = gather_pages(v_pages, page_table)
     return ref.decode_attention(q, k_dense, v_dense, lengths)

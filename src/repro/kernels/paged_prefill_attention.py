@@ -45,6 +45,7 @@ NEG = -1e30
 
 def paged_flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         page_table: jax.Array, start: jax.Array,
+                        k_scale=None, v_scale=None,
                         interpret: bool = True) -> jax.Array:
     """Chunk attention over a paged KV cache with cross-chunk causal masking.
 
@@ -55,6 +56,11 @@ def paged_flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     v_pages:    [P, K, pt, hd]
     page_table: [max_pages] int32 page ids of this sequence, -1 = unmapped
     start:      scalar int32 — KV rows that precede this chunk
+    k_scale:    optional [P, K] f32 per-(page, kv-head) dequant scales for an
+                int8 pool (serve/kvquant.py): the page block dequantizes in
+                VMEM (int8 rows × scale → f32) before the f32 accumulation;
+                the scale BlockSpec walks the same prefetched page table.
+    v_scale:    optional [P, K] f32 (must accompany ``k_scale``)
     Returns [C, H, hd].
     """
     C, H, hd = q.shape
@@ -62,14 +68,21 @@ def paged_flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     G = H // K
     max_pages = page_table.shape[0]
     scale = 1.0 / math.sqrt(hd)
+    quant = k_scale is not None
+    if quant != (v_scale is not None):
+        raise ValueError("paged_flash_prefill: k_scale and v_scale must be "
+                         "given together")
 
     # head h = k·G + g, matching ref.decode_attention's grouping
     qr = jnp.transpose(q.reshape(C, K, G, hd), (1, 0, 2, 3))   # [K, C, G, hd]
     table = jnp.maximum(page_table.astype(jnp.int32), 0)
     meta = jnp.reshape(start.astype(jnp.int32), (1,))
 
-    def kernel(tbl_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
-               m_ref, l_ref, acc_ref):
+    def kernel(tbl_ref, meta_ref, q_ref, k_ref, v_ref, *rest):
+        if quant:
+            ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        else:
+            o_ref, m_ref, l_ref, acc_ref = rest
         j = pl.program_id(1)
 
         @pl.when(j == 0)
@@ -85,6 +98,11 @@ def paged_flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             qb = q_ref[0].astype(jnp.float32).reshape(C * G, hd)
             kb = k_ref[0, 0].astype(jnp.float32)     # [pt, hd]
             vb = v_ref[0, 0].astype(jnp.float32)
+            if quant:
+                # dequantize in VMEM: int8 page block × per-(page, head)
+                # scale → f32, feeding the same f32 accumulation below
+                kb = kb * ks_ref[0, 0]
+                vb = vb * vs_ref[0, 0]
             s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
             # cross-chunk causal frontier: row r is query c = r // G at
             # global position start + c; key col is global position j·pt + col
@@ -108,16 +126,26 @@ def paged_flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
     from jax.experimental.pallas import tpu as pltpu
 
+    in_specs = [
+        pl.BlockSpec((1, C, G, hd), lambda kk, j, tbl, meta: (kk, 0, 0, 0)),
+        pl.BlockSpec((1, 1, pt, hd),
+                     lambda kk, j, tbl, meta: (tbl[j], kk, 0, 0)),
+        pl.BlockSpec((1, 1, pt, hd),
+                     lambda kk, j, tbl, meta: (tbl[j], kk, 0, 0)),
+    ]
+    inputs = [table, meta, qr, k_pages, v_pages]
+    if quant:
+        # scale blocks walk the same prefetched table as their pages
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda kk, j, tbl, meta: (tbl[j], kk)),
+            pl.BlockSpec((1, 1), lambda kk, j, tbl, meta: (tbl[j], kk)),
+        ]
+        inputs += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # page_table, meta (start)
         grid=(K, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, C, G, hd), lambda kk, j, tbl, meta: (kk, 0, 0, 0)),
-            pl.BlockSpec((1, 1, pt, hd),
-                         lambda kk, j, tbl, meta: (tbl[j], kk, 0, 0)),
-            pl.BlockSpec((1, 1, pt, hd),
-                         lambda kk, j, tbl, meta: (tbl[j], kk, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C, G, hd),
                                lambda kk, j, tbl, meta: (kk, 0, 0, 0)),
         scratch_shapes=[pltpu.VMEM((C * G,), jnp.float32),
@@ -130,13 +158,19 @@ def paged_flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((K, C, G, hd), q.dtype),
         interpret=interpret,
-    )(table, meta, qr, k_pages, v_pages)
+    )(*inputs)
     return jnp.transpose(out, (1, 0, 2, 3)).reshape(C, H, hd)
 
 
-def paged_prefill_attention_ref(q, k_pages, v_pages, page_table, start):
-    """Oracle: gather the pages dense, masked softmax with the same
-    cross-chunk causal frontier (test oracle + debugging)."""
+def paged_prefill_attention_ref(q, k_pages, v_pages, page_table, start,
+                                k_scale=None, v_scale=None):
+    """Oracle: gather the pages dense (dequantizing first when scales are
+    given), masked softmax with the same cross-chunk causal frontier (test
+    oracle + debugging)."""
+    if k_scale is not None:
+        from repro.kernels.paged_decode_attention import dequant_pages
+        k_pages = dequant_pages(k_pages, k_scale)
+        v_pages = dequant_pages(v_pages, v_scale)
     C, H, hd = q.shape
     K = k_pages.shape[1]
     G = H // K

@@ -150,7 +150,13 @@ class CacheConfig:
     ``paged`` selects the page-pool bottom layer (implied by any layer
     above); ``tiered`` adds the host-DRAM swap tier; ``prefix`` adds the
     radix reuse layer. ``n_pages=None`` sizes the pool at parity with the
-    dense engine's HBM footprint for the same slots × max_seq."""
+    dense engine's HBM footprint for the same slots × max_seq.
+
+    ``kv_dtype`` picks the page-pool storage format (serve/kvquant.py):
+    ``"compute"`` (default) stores pages at the model compute dtype —
+    byte-identical to the pre-quantization stack; ``"int8"`` stores pages
+    quantized with per-(page, kv-head) f32 scales, ~4x the resident
+    sequences per HBM byte and ~4x fewer swap bytes on a tiered stack."""
     paged: bool = False
     page_tokens: int = 16
     n_pages: Optional[int] = None
@@ -158,6 +164,7 @@ class CacheConfig:
     host_budget_bytes: Optional[int] = None
     prefix: bool = False
     prefix_pages: Optional[int] = None
+    kv_dtype: str = "compute"
 
     def resolved_pages(self, n_slots: int, max_seq: int) -> int:
         if self.n_pages is not None:
@@ -177,7 +184,7 @@ def build_cache_manager(cfg: transformer.ModelConfig, cache: CacheConfig,
     n_pages = cache.resolved_pages(n_slots, max_seq)
     pool: CacheManager = PagedCachePool(
         cfg, max_batch=n_slots, max_seq=max_seq, n_pages=n_pages,
-        page_tokens=cache.page_tokens)
+        page_tokens=cache.page_tokens, kv_dtype=cache.kv_dtype)
     if cache.tiered:
         pool = TieredCachePool(inner=pool,
                                host_budget_bytes=cache.host_budget_bytes)

@@ -50,7 +50,7 @@ import numpy as np
 
 from repro.core import addrspace, vmm
 from repro.models import transformer
-from repro.serve import paged_step, trace
+from repro.serve import kvquant, paged_step, trace
 
 
 @dataclasses.dataclass
@@ -175,6 +175,16 @@ class PagedCachePool:
 
     Only full-attention caches (gqa/global/shared) are pageable; window/MLA/
     SSM caches are constant-size or compressed and stay on the dense path.
+
+    ``kv_dtype="int8"`` stores pages quantized (serve/kvquant.py): each
+    per-position leaf dict grows ``k_scale``/``v_scale`` f32 [count, P, K]
+    rows next to the int8 payload. Scales are *page state* — zeroed on
+    (re-)allocation (``reset_pages``), copied by COW forks, swapped and
+    shared with their pages — and every write goes through the shared
+    quantize helpers so the host path and the jitted scatters produce
+    bit-identical pool bytes. ``kv_dtype="compute"`` (default) keeps
+    today's plain compute-dtype pages, byte-identical to the pre-quant
+    stack.
     """
 
     # the bottom of every cache stack has no prefix index; the scheduler
@@ -183,7 +193,7 @@ class PagedCachePool:
 
     def __init__(self, cfg: transformer.ModelConfig, max_batch: int,
                  max_seq: int, n_pages: int, page_tokens: int = 16,
-                 dtype=None):
+                 dtype=None, kv_dtype: str = kvquant.COMPUTE):
         for pattern, _ in cfg.groups:
             for kind in pattern:
                 mixer, _ = transformer.parse_kind(kind)
@@ -201,16 +211,24 @@ class PagedCachePool:
         self.max_pages_per_seq = -(-max_seq // page_tokens)
         self.alloc = vmm.PagedAllocator(n_pages, page_tokens,
                                         max(1, token_bytes(cfg)))
-        dtype = dtype or cfg.compute_dtype
+        self.kv_dtype = kvquant.validate_kv_dtype(kv_dtype)
+        self.quantized = self.kv_dtype == kvquant.INT8
+        dtype = jnp.int8 if self.quantized else (dtype or cfg.compute_dtype)
         K, hd = cfg.n_kv, cfg.hd
         self.pages = []
         for pattern, count in cfg.groups:
             per_pos = []
             for kind in pattern:
-                per_pos.append({
+                leaf = {
                     "k": jnp.zeros((count, n_pages, K, page_tokens, hd), dtype),
                     "v": jnp.zeros((count, n_pages, K, page_tokens, hd), dtype),
-                })
+                }
+                if self.quantized:
+                    leaf["k_scale"] = jnp.zeros((count, n_pages, K),
+                                                jnp.float32)
+                    leaf["v_scale"] = jnp.zeros((count, n_pages, K),
+                                                jnp.float32)
+                per_pos.append(leaf)
             self.pages.append(tuple(per_pos))
         # host-side slot state (decode batch width is compiled-static)
         self.seq_ids = np.full(max_batch, -1, np.int64)
@@ -281,7 +299,7 @@ class PagedCachePool:
             raise MemoryError("paged KV: admission refused (out of pages/slots)")
         slot = int(np.where(self.seq_ids < 0)[0][0])
         self._reserved[seq_id] = self._worst_pages(prompt_len, max_new)
-        self.alloc.alloc_seq(seq_id, prompt_len)
+        self.reset_pages(self.alloc.alloc_seq(seq_id, prompt_len))
         self.seq_ids[slot] = seq_id
         self.lengths[slot] = 0
         return slot
@@ -343,8 +361,8 @@ class PagedCachePool:
             cow = 1 if match_len % self.page_tokens else 0
             self._shared_base[seq_id] = len(shared_pages) - cow
             self.alloc.adopt_pages(seq_id, shared_pages)
-        self.alloc.alloc_pages(
-            seq_id, self.pages_for(prompt_len) - len(shared_pages))
+        self.reset_pages(self.alloc.alloc_pages(
+            seq_id, self.pages_for(prompt_len) - len(shared_pages)))
         self.seq_ids[slot] = seq_id
         self.lengths[slot] = 0
         return slot
@@ -389,11 +407,32 @@ class PagedCachePool:
             return False
         with self.tracer.span("cow_copy", seq_id=sid, page=int(pages[idx])):
             old, new = self.alloc.fork_page(sid, idx)
+            # every leaf travels with the page — including the scale rows of
+            # a quantized pool (page axis is 1 for payload AND scales)
             self.pages = [
-                tuple({name: paged_step.copy_page(kv[name], old, new)
-                       for name in ("k", "v")} for kv in per_pos)
+                tuple({name: paged_step.copy_page(arr, old, new)
+                       for name, arr in kv.items()} for kv in per_pos)
                 for per_pos in self.pages]
         return True
+
+    def reset_pages(self, page_ids) -> None:
+        """Zero the scale rows of freshly (re-)allocated pages. A freed
+        page keeps its last scale; reused under the monotone-max update
+        (serve/kvquant.py) that stale value would silently poison the new
+        owner's precision — scale 0 marks the page informationless (its
+        int8 content dequantizes to 0 and is overwritten at ratio 0 on the
+        first write). No-op on compute-dtype pools and empty lists. Every
+        allocation path must come through here: admit / admit_prefill /
+        ensure locally, plus the tiered layer's resume re-allocation
+        (serve/tiering.py calls the allocator directly)."""
+        if not self.quantized or not page_ids:
+            return
+        ids = jnp.asarray(page_ids, jnp.int32)
+        self.pages = [
+            tuple({name: (arr.at[:, ids].set(0.0)
+                          if name in ("k_scale", "v_scale") else arr)
+                   for name, arr in kv.items()} for kv in per_pos)
+            for per_pos in self.pages]
 
     def can_reserve_decode(self, seq_id: int, prompt_len: int,
                            max_new: int) -> bool:
@@ -426,8 +465,9 @@ class PagedCachePool:
         """Grow slot's page list on demand so positions < n_tokens are mapped
         (never fails for admitted sequences — the reservation covers it)."""
         sid = int(self.seq_ids[slot])
-        self.alloc.extend_seq(sid, n_tokens - int(self.lengths[slot]),
-                              int(self.lengths[slot]))
+        self.reset_pages(self.alloc.extend_seq(
+            sid, n_tokens - int(self.lengths[slot]),
+            int(self.lengths[slot])))
 
     def release(self, slot: int) -> None:
         """Drop a resident sequence: every page reference it holds is
@@ -477,14 +517,24 @@ class PagedCachePool:
             new_per_pos = []
             for pi, kv in enumerate(per_pos):
                 dense = caches[gi][pi]
-                upd = {}
+                upd = dict(kv)
                 for name in ("k", "v"):
                     pool = kv[name]
                     count, _, K, S, hd = dense[name].shape
                     rows = dense[name][:, 0, :, :npg * pt]     # [count,K,S,hd]
                     rows = rows.reshape(count, K, npg, pt, hd)
                     rows = jnp.transpose(rows, (0, 2, 1, 3, 4))
-                    upd[name] = pool.at[:, page_ids].set(rows.astype(pool.dtype))
+                    if self.quantized:
+                        # the SHARED quantize-on-write helper — the jitted
+                        # chunk scatter uses the same abs_scale/quantize
+                        # pair, so both paths write bit-identical pages
+                        q, scale = kvquant.quantize_pages(rows)
+                        upd[name] = pool.at[:, page_ids].set(q)
+                        sname = kvquant.SCALE_OF[name]
+                        upd[sname] = kv[sname].at[:, page_ids].set(scale)
+                    else:
+                        upd[name] = pool.at[:, page_ids].set(
+                            rows.astype(pool.dtype))
                 new_per_pos.append(upd)
             new_pages.append(tuple(new_per_pos))
         self.pages = new_pages
@@ -494,20 +544,41 @@ class PagedCachePool:
     def token_bytes(self) -> int:
         return token_bytes(self.cfg)
 
+    def page_nbytes(self) -> int:
+        """Real bytes one logical page occupies across every pool leaf —
+        payload at the *actual* array itemsize plus the scale rows of a
+        quantized pool. This (not the allocator's compute-dtype
+        ``page_bytes`` estimate) is the basis for footprint/used gauges and
+        the tiered layer's swap-byte accounting + L3 budget."""
+        total = 0
+        for per_pos in self.pages:
+            for kv in per_pos:
+                for arr in kv.values():
+                    total += (int(np.prod(arr.shape)) // arr.shape[1]) * \
+                        jnp.dtype(arr.dtype).itemsize
+        return total
+
     def footprint_bytes(self) -> int:
-        """HBM held by the page pool (total physical pages)."""
-        return self.alloc.n_pages * self.alloc.page_bytes
+        """HBM held by the page pool (total physical pages, real bytes)."""
+        return self.alloc.n_pages * self.page_nbytes()
 
     def used_bytes(self) -> int:
-        return (self.alloc.n_pages - self.alloc.free_pages) * self.alloc.page_bytes
+        return (self.alloc.n_pages - self.alloc.free_pages) * \
+            self.page_nbytes()
 
     def publish_metrics(self, bus) -> None:
         """Hot-tier page pressure onto the engine metrics bus (observe-only;
-        upper cache layers extend this and delegate down)."""
+        upper cache layers extend this and delegate down). Byte gauges are
+        dtype-aware: ``kv_page_nbytes``/``kv_footprint_bytes`` report real
+        page bytes (int8 payload + scale rows on a quantized pool), not
+        token counts × compute itemsize."""
         bus.set("free_pages", self.alloc.free_pages)
         bus.set("used_pages", self.alloc.n_pages - self.alloc.free_pages)
         bus.set("reservation_debt_pages", self._reservation_debt())
         bus.set("used_bytes", self.used_bytes())
+        bus.set("kv_page_nbytes", self.page_nbytes())
+        bus.set("kv_footprint_bytes", self.footprint_bytes())
+        bus.set("kv_quantized", int(self.quantized))
 
     def bind_tracer(self, tracer) -> None:
         """Attach the engine's Tracer: COW forks emit ``cow_copy`` spans

@@ -1,0 +1,107 @@
+"""Quantized KV pages: int8 payload + per-page per-kv-head float32 scales.
+
+HEROv2's mixed-data-model lever (32-bit accelerator clusters against the
+64-bit host, §2.3) applied to the serving KV cache: pages are stored at
+int8 with one absmax scale per (page, kv-head) and dequantized *in the
+attention kernel* (int8 page block × scale → f32 accumulation), so HBM
+residency and tiered-swap DMA bytes shrink ~4x against f32 pages while the
+page-table machinery (vmm identity, COW forks, tiered swap, tp sharding)
+is untouched — scales are just extra pool leaves riding the same pytree.
+
+This module is the ONE place the quantization math lives. Both writers —
+the host fallback path (``PagedCachePool.write_prefill``) and the jitted
+scatters (``serve/paged_step.py``) — call these helpers, which is what
+makes their pool contents bit-identical (regression-tested in
+tests/test_paged_kvcache.py): same absmax reduction, same division, same
+round/clip, in f32 throughout.
+
+Layout & invariants:
+
+  * Pool leaves per layer position: ``{"k","v"}`` int8 [count, P, K, pt, hd]
+    plus ``{"k_scale","v_scale"}`` f32 [count, P, K]. Dequantized value is
+    ``q * scale``; ``scale = absmax / 127`` over the page's (pt, hd) rows.
+  * **Scales are page state**: they are zeroed when a page is (re-)allocated
+    (``PagedCachePool.reset_pages`` — a freed page's stale scale must never
+    poison the monotone-max update below), copied by COW forks, swapped with
+    the payload by the tiered layer, and shared by prefix sharing exactly
+    like the int8 rows they describe.
+  * **Monotone-max incremental writes**: pages fill incrementally (decode
+    writes one token per step; prefill chunks may end mid-page), so a write
+    of new rows updates ``scale' = max(scale, absmax(new)/127)`` and
+    *rescales* the page's existing int8 content by ``scale/scale'`` in the
+    same jitted step. When the scale is unchanged the ratio is exactly 1.0
+    and ``round(q · 1.0) == q`` — repeated no-op writes never drift.
+  * ``scale == 0`` means "page holds no information": content dequantizes
+    to 0 and the rescale ratio is defined as 0 (zeroing stale bits).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# int8 symmetric range; 127 (not 128) so the grid is symmetric and the
+# clip below can never overflow the dtype
+Q_MAX = 127.0
+
+INT8 = "int8"
+COMPUTE = "compute"
+KV_DTYPES = (COMPUTE, INT8)
+
+# pool-leaf names: payload rows vs their scale rows
+PAYLOAD = ("k", "v")
+SCALE_OF = {"k": "k_scale", "v": "v_scale"}
+
+
+def validate_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
+    return kv_dtype
+
+
+def abs_scale(rows: jnp.ndarray) -> jnp.ndarray:
+    """Per-(…, kv-head) absmax scale of page rows.
+
+    rows [..., K, pt, hd] (any leading batch axes) → scale [..., K], the
+    absmax over the token/feature axes divided by ``Q_MAX``. Computed in
+    f32 so the host path and the jitted scatters reduce identically."""
+    amax = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=(-2, -1))
+    return amax / Q_MAX
+
+
+def quantize(rows: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """rows [..., K, pt, hd] at scale [..., K] → int8 [..., K, pt, hd].
+    ``scale == 0`` (an all-zero or never-written page) quantizes to 0."""
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None, None]
+    q = rows.astype(jnp.float32) / safe
+    return jnp.clip(jnp.round(q), -Q_MAX, Q_MAX).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """int8 [..., K, pt, hd] × scale [..., K] → f32 rows."""
+    return q.astype(jnp.float32) * scale[..., None, None]
+
+
+def quantize_pages(rows: jnp.ndarray):
+    """Full-page quantize-on-write: rows [..., K, pt, hd] → (int8 rows,
+    f32 scale [..., K]). The shared helper for writers that own every row
+    of the target pages (``write_prefill``; a chunk scatter covering a
+    whole fresh page computes bit-identical output via the same
+    ``abs_scale``/``quantize`` pair)."""
+    scale = abs_scale(rows)
+    return quantize(rows, scale), scale
+
+
+def rescale_ratio(old_scale: jnp.ndarray,
+                  new_scale: jnp.ndarray) -> jnp.ndarray:
+    """Ratio to re-quantize existing int8 content from ``old_scale`` to
+    ``new_scale``: ``old/new`` (exactly 1.0 when unchanged, so re-writes
+    are bit-exact no-ops), 0 when the new scale is 0 (no information)."""
+    return jnp.where(new_scale > 0,
+                     old_scale / jnp.where(new_scale > 0, new_scale, 1.0),
+                     0.0)
+
+
+def requantize(q: jnp.ndarray, ratio: jnp.ndarray) -> jnp.ndarray:
+    """Apply a rescale ratio [..., K] to int8 content [..., K, pt, hd]."""
+    r = q.astype(jnp.float32) * ratio[..., None, None]
+    return jnp.clip(jnp.round(r), -Q_MAX, Q_MAX).astype(jnp.int8)

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from repro.models import blocks, transformer
 from repro.kernels.paged_decode_attention import paged_flash_decode
 from repro.kernels.paged_prefill_attention import paged_flash_prefill
+from repro.serve import kvquant
 
 
 def gather_pages(pool: jax.Array, page_ids: jax.Array) -> jax.Array:
@@ -85,6 +86,53 @@ def scatter_chunk(pool: jax.Array, rows: jax.Array, page_table: jax.Array,
     return pool.at[pids, :, offs].set(rows.astype(pool.dtype))
 
 
+def scatter_chunk_q(pool: jax.Array, scale: jax.Array, rows: jax.Array,
+                    page_table: jax.Array, start: jax.Array,
+                    page_tokens: int):
+    """Quantized counterpart of :func:`scatter_chunk`: land a prefill
+    chunk's f32 K/V rows ([C, K, hd]) in an int8 pool ([P, K, pt, hd]) with
+    per-page scales ([P, K]), updating the scales monotonically in the same
+    step (serve/kvquant.py): per touched page, ``scale' = max(scale,
+    absmax(new rows)/127)``, the page's existing int8 content is rescaled
+    by ``scale/scale'``, and the new rows quantize at ``scale'``. A chunk
+    covering a whole fresh (zero-scale) page therefore writes bytes
+    bit-identical to the host ``write_prefill`` path — both reduce with the
+    same shared helpers. Returns (pool', scale').
+
+    Untouched logical pages (and the clamped -1 padding entries) are
+    excluded from the page-level writeback via an out-of-bounds index with
+    ``mode="drop"`` — they are never read-modify-written, so no two scatter
+    indices ever collide."""
+    C = rows.shape[0]
+    pt = page_tokens
+    M = page_table.shape[0]
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    lp = pos // pt                                   # logical page per row
+    offs = pos % pt
+    pids = jnp.maximum(jnp.take(page_table, lp), 0)
+    rows_f = rows.astype(jnp.float32)                # [C, K, hd]
+    # per-row absmax per kv head, then a segment-max over logical pages
+    amax_c = jnp.max(jnp.abs(rows_f), axis=-1)       # [C, K]
+    onehot = lp[:, None] == jnp.arange(M, dtype=jnp.int32)[None, :]  # [C, M]
+    amax_p = jnp.max(jnp.where(onehot[:, :, None], amax_c[:, None, :], 0.0),
+                     axis=0)                         # [M, K]
+    touched = jnp.any(onehot, axis=0)                # [M]
+    pid_m = jnp.maximum(page_table, 0)               # [M]
+    s_old = scale[pid_m]                             # [M, K]
+    s_new = jnp.maximum(s_old, amax_p / kvquant.Q_MAX)
+    s_new = jnp.where(touched[:, None], s_new, s_old)
+    # rescale existing content of touched pages to the widened scale
+    repg = kvquant.requantize(pool[pid_m],
+                              kvquant.rescale_ratio(s_old, s_new))
+    pid_eff = jnp.where(touched, pid_m, pool.shape[0])   # OOB -> dropped
+    pool = pool.at[pid_eff].set(repg, mode="drop")
+    scale = scale.at[pid_eff].set(s_new, mode="drop")
+    # quantize the chunk rows at their page's new scale and scatter them
+    q_c = kvquant.quantize(rows_f[:, :, None, :],
+                           s_new[lp])[:, :, 0, :]    # [C, K, hd] int8
+    return pool.at[pids, :, offs].set(q_c), scale
+
+
 def _scatter_token(pool: jax.Array, tok: jax.Array, page_table: jax.Array,
                    lengths: jax.Array, active: jax.Array,
                    page_tokens: int) -> jax.Array:
@@ -101,6 +149,39 @@ def _scatter_token(pool: jax.Array, tok: jax.Array, page_table: jax.Array,
         val = jnp.where(active[b], val, cur)
         pool = jax.lax.dynamic_update_slice(pool, val, (pid, 0, off, 0))
     return pool
+
+
+def _scatter_token_q(pool: jax.Array, scale: jax.Array, tok: jax.Array,
+                     page_table: jax.Array, lengths: jax.Array,
+                     active: jax.Array, page_tokens: int):
+    """Quantized counterpart of :func:`_scatter_token`: write tok[b]
+    ([B, K, hd], f32) at logical position lengths[b] of each active slot's
+    int8 page, widening that page's per-head scale monotonically and
+    rescaling its existing content in the same step (serve/kvquant.py).
+    Inactive slots leave both the page and its scale row bit-untouched —
+    the whole page-block update is gated on ``active[b]``, and an active
+    write whose scale is unchanged rescales at ratio exactly 1.0 (a
+    bit-exact no-op on the already-written rows). Returns (pool', scale')."""
+    B = tok.shape[0]
+    K, hd = tok.shape[1], tok.shape[2]
+    pt = page_tokens
+    for b in range(B):
+        pid = jnp.maximum(page_table[b, lengths[b] // pt], 0)
+        off = lengths[b] % pt
+        tok_f = tok[b].astype(jnp.float32)                   # [K, hd]
+        s_old = jax.lax.dynamic_slice(scale, (pid, 0), (1, K))[0]
+        s_new = jnp.maximum(
+            s_old, jnp.max(jnp.abs(tok_f), axis=-1) / kvquant.Q_MAX)
+        pg = jax.lax.dynamic_slice(pool, (pid, 0, 0, 0), (1, K, pt, hd))
+        repg = kvquant.requantize(
+            pg, kvquant.rescale_ratio(s_old, s_new)[None])
+        qtok = kvquant.quantize(tok_f[:, None, :], s_new)    # [K, 1, hd]
+        upd = jax.lax.dynamic_update_slice(repg, qtok[None], (0, 0, off, 0))
+        upd = jnp.where(active[b], upd, pg)
+        s_fin = jnp.where(active[b], s_new, s_old)
+        pool = jax.lax.dynamic_update_slice(pool, upd, (pid, 0, 0, 0))
+        scale = jax.lax.dynamic_update_slice(scale, s_fin[None], (pid, 0))
+    return pool, scale
 
 
 def _tp_head_slice(q, k, v, pages, tp_axis: str):
@@ -144,22 +225,38 @@ def _paged_gqa_layer(p, x, pages, page_table, lengths, active,
         k = blocks.apply_rope(k, positions, acfg.rope_theta)
     if tp_axis is not None:
         q, k, v = _tp_head_slice(q, k, v, pages, tp_axis)
-    k_pool = _scatter_token(pages["k"], k[:, 0], page_table, lengths, active,
-                            page_tokens)
-    v_pool = _scatter_token(pages["v"], v[:, 0], page_table, lengths, active,
-                            page_tokens)
+    # trace-time branch: a quantized pool carries scale leaves, and the
+    # pytree structure keys the jit cache — no extra config plumbing needed
+    quant = "k_scale" in pages
+    if quant:
+        k_pool, k_scale = _scatter_token_q(
+            pages["k"], pages["k_scale"], k[:, 0], page_table, lengths,
+            active, page_tokens)
+        v_pool, v_scale = _scatter_token_q(
+            pages["v"], pages["v_scale"], v[:, 0], page_table, lengths,
+            active, page_tokens)
+    else:
+        k_pool = _scatter_token(pages["k"], k[:, 0], page_table, lengths,
+                                active, page_tokens)
+        v_pool = _scatter_token(pages["v"], v[:, 0], page_table, lengths,
+                                active, page_tokens)
+        k_scale = v_scale = None
     # the freshly written token must be visible: active slots attend over
     # lengths+1 positions
     kv_len = jnp.where(active, lengths + 1, 0).astype(jnp.int32)
     att = paged_flash_decode(q[:, 0].astype(jnp.float32),
                              k_pool, v_pool, page_table, kv_len,
+                             k_scale=k_scale, v_scale=v_scale,
                              interpret=interpret)         # [B, H_local, hd]
     if tp_axis is not None:
         # the single tp collective: concatenate per-head partials (each head
         # was computed whole on exactly one shard — no reduction, bit-exact)
         att = jax.lax.all_gather(att, tp_axis, axis=1, tiled=True)
     y = att.reshape(B, 1, H * hd).astype(x.dtype) @ p["wo"]
-    return y, {"k": k_pool, "v": v_pool}
+    out = {"k": k_pool, "v": v_pool}
+    if quant:
+        out["k_scale"], out["v_scale"] = k_scale, v_scale
+    return y, out
 
 
 def make_paged_decode_step(cfg: transformer.ModelConfig, page_tokens: int,
@@ -260,15 +357,31 @@ def _paged_gqa_prefill_layer(p, x, pages, page_table, start,
         k = blocks.apply_rope(k, positions, acfg.rope_theta)
     if tp_axis is not None:
         q, k, v = _tp_head_slice(q, k, v, pages, tp_axis)
-    k_pool = scatter_chunk(pages["k"], k[0], page_table, start, page_tokens)
-    v_pool = scatter_chunk(pages["v"], v[0], page_table, start, page_tokens)
+    quant = "k_scale" in pages
+    if quant:
+        k_pool, k_scale = scatter_chunk_q(
+            pages["k"], pages["k_scale"], k[0], page_table, start,
+            page_tokens)
+        v_pool, v_scale = scatter_chunk_q(
+            pages["v"], pages["v_scale"], v[0], page_table, start,
+            page_tokens)
+    else:
+        k_pool = scatter_chunk(pages["k"], k[0], page_table, start,
+                               page_tokens)
+        v_pool = scatter_chunk(pages["v"], v[0], page_table, start,
+                               page_tokens)
+        k_scale = v_scale = None
     att = paged_flash_prefill(q[0].astype(jnp.float32), k_pool, v_pool,
                               page_table, start,
+                              k_scale=k_scale, v_scale=v_scale,
                               interpret=interpret)         # [C, H_local, hd]
     if tp_axis is not None:
         att = jax.lax.all_gather(att, tp_axis, axis=1, tiled=True)
     y = att.reshape(1, C, H * hd).astype(x.dtype) @ p["wo"]
-    return y, {"k": k_pool, "v": v_pool}
+    out = {"k": k_pool, "v": v_pool}
+    if quant:
+        out["k_scale"], out["v_scale"] = k_scale, v_scale
+    return y, out
 
 
 def make_paged_prefill_chunk_step(cfg: transformer.ModelConfig,

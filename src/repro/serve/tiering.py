@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.core import dma, heromem, vmm
 from repro.models import transformer
-from repro.serve import paged_step, trace
+from repro.serve import kvquant, paged_step, trace
 from repro.serve import kvcache
 from repro.serve.kvcache import PagedCachePool
 
@@ -66,9 +66,14 @@ class ColdSeq:
     n_pages: int                # pages owned at swap-out (re-alloc'd on resume)
     n_valid: int                # pages actually swapped (cover `length` rows)
     reserved: int               # reservation at swap-out, restored on resume
-    nbytes: int                 # page_bytes × n_valid (L3 budget accounting)
+    nbytes: int                 # page_nbytes() × n_valid — REAL pool bytes
+    #                             (actual itemsize + scale rows), the L3
+    #                             budget + swap_*_bytes accounting basis
     mem_handle: int             # heromem L3 allocation handle
-    host: List[List[Dict[str, np.ndarray]]]  # [group][pos]{k,v} page rows
+    host: List[List[Dict[str, np.ndarray]]]  # [group][pos]{leaf} page rows
+    #                             (k/v payload + k_scale/v_scale on a
+    #                             quantized pool — scales travel WITH their
+    #                             pages, they are page state)
 
 
 @dataclasses.dataclass
@@ -99,17 +104,20 @@ class TieredCachePool(kvcache.CacheLayer):
                  max_batch: int = 0, max_seq: int = 0, n_pages: int = 0,
                  page_tokens: int = 16,
                  host_budget_bytes: Optional[int] = None, dtype=None,
+                 kv_dtype: str = kvquant.COMPUTE,
                  hero: Optional[heromem.HeroMemory] = None,
                  inner: Optional[PagedCachePool] = None):
         if inner is None:
             inner = PagedCachePool(cfg, max_batch=max_batch, max_seq=max_seq,
                                    n_pages=n_pages, page_tokens=page_tokens,
-                                   dtype=dtype)
+                                   dtype=dtype, kv_dtype=kv_dtype)
         super().__init__(inner)
         if host_budget_bytes is None:
             # default: an 8×-the-hot-pool cold tier (the o1heap pow2
-            # rounding makes the budget conservative, so size generously)
-            host_budget_bytes = 8 * inner.alloc.n_pages * inner.alloc.page_bytes
+            # rounding makes the budget conservative, so size generously);
+            # sized from REAL page bytes so a quantized pool's budget keeps
+            # the same capacity-in-pages semantics
+            host_budget_bytes = 8 * inner.alloc.n_pages * inner.page_nbytes()
         self.hero = hero or heromem.HeroMemory(l3_bytes=host_budget_bytes)
         self._cold: Dict[int, ColdSeq] = {}
         self.swap_out_count = 0
@@ -195,7 +203,10 @@ class TieredCachePool(kvcache.CacheLayer):
                                                  1)))
 
     def _slot_bytes(self, slot: int) -> int:
-        return self._valid_pages(slot) * self.hot.alloc.page_bytes
+        # real bytes moved: actual pool itemsize + scale rows, NOT the
+        # allocator's compute-dtype page_bytes estimate — a quantized pool
+        # would otherwise overstate the L3 budget and swap_*_bytes ~4x
+        return self._valid_pages(slot) * self.hot.page_nbytes()
 
     def can_swap_out(self, slot: int) -> bool:
         """Host budget check via the o1heap guaranteed-success probe: a True
@@ -213,22 +224,24 @@ class TieredCachePool(kvcache.CacheLayer):
             raise ValueError(f"tiered KV: swap_out of free slot {slot}")
         page_ids = self.hot.alloc._seq_pages[sid]
         n_valid = self._valid_pages(slot)
-        nbytes = n_valid * self.hot.alloc.page_bytes
+        nbytes = n_valid * self.hot.page_nbytes()
         mem = self.hero.malloc(3, nbytes)
         if mem is None:
             raise MemoryError("tiered KV: host-DRAM budget exhausted "
                               f"({nbytes} B for seq {sid})")
         idx = jnp.asarray(page_ids[:n_valid], jnp.int32)
         # load phase: dispatch every leaf's gather, start every dev→host DMA
-        # before waiting any — the transfers overlap (double-buffered)
+        # before waiting any — the transfers overlap (double-buffered).
+        # Every pool leaf travels: int8 payload AND its scale rows on a
+        # quantized pool (gather_pages slices page axis 1 for both ranks)
         handles: List[List[Dict[str, dma.TransferHandle]]] = []
         for per_pos in self.hot.pages:
             row = []
             for kv in per_pos:
                 row.append({name: dma.hero_memcpy_dev2host_async(
-                    paged_step.gather_pages(kv[name], idx),
+                    paged_step.gather_pages(arr, idx),
                     clock=self.tracer.clock)
-                    for name in ("k", "v")})
+                    for name, arr in kv.items()})
             handles.append(row)
         flat = [h for row in handles for ent in row for h in ent.values()]
         with self.tracer.span("swap_wait", dir="out", seq_id=sid,
@@ -270,7 +283,13 @@ class TieredCachePool(kvcache.CacheLayer):
         rec = self._cold[seq_id]
         slot = int(np.where(self.hot.seq_ids < 0)[0][0])
         self.hot._reserved[seq_id] = rec.reserved
-        self.hot.alloc.alloc_seq(seq_id, rec.n_pages * self.hot.page_tokens)
+        # reset page state (scale rows) on the re-allocation: the valid
+        # prefix is overwritten by the finish-phase scatter, but the
+        # unwritten tail pages are filled by later chunk writes whose
+        # monotone-max scale update must start from zero, not from a prior
+        # owner's stale scales (this path bypasses pool.admit)
+        self.hot.reset_pages(self.hot.alloc.alloc_seq(
+            seq_id, rec.n_pages * self.hot.page_tokens))
         self.hot.seq_ids[slot] = seq_id
         self.hot.lengths[slot] = 0           # valid only after finish
         handles = [[{name: dma.hero_memcpy_host2dev_async(
@@ -301,8 +320,8 @@ class TieredCachePool(kvcache.CacheLayer):
             for pi, kv in enumerate(per_pos):
                 new_per_pos.append({
                     name: paged_step.scatter_pages(
-                        kv[name], pending.handles[gi][pi][name].value, idx)
-                    for name in ("k", "v")})
+                        arr, pending.handles[gi][pi][name].value, idx)
+                    for name, arr in kv.items()})
             new_pages.append(tuple(new_per_pos))
         self.hot.pages = new_pages
         self.hot.lengths[pending.slot] = rec.length

@@ -36,6 +36,17 @@ STACKS = {
     "tiered_prefix": CacheConfig(tiered=True, prefix=True, prefix_pages=4,
                                  page_tokens=4, n_pages=10,
                                  host_budget_bytes=1 << 16),
+    # the same compositions over an int8-quantized page pool: every protocol
+    # and no-leak property must hold with scale leaves riding the pytree
+    "quant": CacheConfig(paged=True, page_tokens=4, n_pages=10,
+                         kv_dtype="int8"),
+    "quant_tiered": CacheConfig(tiered=True, page_tokens=4, n_pages=10,
+                                host_budget_bytes=1 << 16, kv_dtype="int8"),
+    "quant_tiered_prefix": CacheConfig(tiered=True, prefix=True,
+                                       prefix_pages=4, page_tokens=4,
+                                       n_pages=10,
+                                       host_budget_bytes=1 << 16,
+                                       kv_dtype="int8"),
 }
 
 
@@ -65,10 +76,19 @@ def test_protocol_conformance(name):
     assert pool.page_tokens == 4 and pool.max_batch == 3
     # prefix is uniformly readable: a PrefixCache on the prefix stack, None
     # elsewhere (the scheduler's one-attribute policy check)
-    if name == "tiered_prefix":
+    if name.endswith("tiered_prefix"):
         assert pool.prefix is not None
     else:
         assert pool.prefix is None
+    # quantized stacks carry int8 payload + f32 scale leaves; compute stacks
+    # carry exactly the pre-quantization leaf set
+    leaf = bottom.pages[0][0]
+    if name.startswith("quant"):
+        assert bottom.quantized and leaf["k"].dtype == np.int8
+        assert set(leaf) == {"k", "v", "k_scale", "v_scale"}
+        assert leaf["k_scale"].shape == leaf["k"].shape[:3]
+    else:
+        assert not bottom.quantized and set(leaf) == {"k", "v"}
 
 
 def test_stack_composition_order():
@@ -192,6 +212,47 @@ def test_prefix_refcount_closure_under_eviction():
     assert pool.evict_cached(10, require_free=True) == 0
     pool.release(b)
     _check_closed(pool, "tiered_prefix")
+
+
+def test_quantized_cow_fork_copies_scales():
+    """Scales are page state: a COW fork must duplicate the shared page's
+    scale rows along with its int8 payload, and the sharer's subsequent
+    write must leave the cached original (payload AND scale) untouched."""
+    import jax.numpy as jnp
+
+    pool = _build("quant_tiered_prefix", n_slots=3, max_seq=16)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, _CFG.vocab, 6).astype(np.int32)  # ends mid-page
+    a = pool.admit_prefill(0, len(prompt))
+    pool.lengths[a] = len(prompt)
+    # stamp recognizable state into the donor's pages
+    pids = list(pool.alloc._seq_pages[0])
+    ids = jnp.asarray(pids, jnp.int32)
+    pool.pages = [
+        tuple({name: (arr.at[:, ids].set(7) if name == "k"
+                      else arr.at[:, ids].set(0.5)
+                      if name == "k_scale" else arr)
+               for name, arr in kv.items()} for kv in per_pos)
+        for per_pos in pool.pages]
+    pool.insert(0, prompt, first_token=3)
+    m = pool.match(prompt)
+    b = pool.admit_prefill(1, len(prompt), shared_pages=m.pages,
+                           match_len=m.length)
+    shared_last = m.pages[-1]             # partial page -> COW on write
+    assert pool.alloc.refcount(shared_last) >= 2
+    assert pool.cow_unshare(int(np.where(pool.seq_ids == 1)[0][0]),
+                            m.length - 1)
+    forked = pool.alloc._seq_pages[1][len(m.pages) - 1]
+    assert forked != shared_last
+    leaf = _bottom(pool).pages[0][0]
+    # the fork carried both payload and scale bits
+    assert (np.asarray(leaf["k"][:, forked]) ==
+            np.asarray(leaf["k"][:, shared_last])).all()
+    assert (np.asarray(leaf["k_scale"][:, forked]) == 0.5).all()
+    assert (np.asarray(leaf["k_scale"][:, shared_last]) == 0.5).all()
+    pool.release(a)
+    pool.release(b)
+    _check_closed(pool, "quant_tiered_prefix")
 
 
 # -- Engine back-compat shims -------------------------------------------------

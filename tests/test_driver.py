@@ -197,6 +197,16 @@ def test_validate_bench_schema_roundtrip(tmp_path):
                   "single": engine_stub("fleet"),
                   "round_robin": engine_stub("fleet"),
                   "prefix": engine_stub("fleet")},
+        "kv_quant": {"arch": "qwen2-0.5b", "page_tokens": 8, "hot_pages": 4,
+                     "n_slots": 2, "requests": 12,
+                     "hbm_budget_bytes": 1 << 20,
+                     "page_nbytes_f32": 4096, "page_nbytes_int8": 1088,
+                     "resident_seqs_f32": 4, "resident_seqs_int8": 15,
+                     "residency_gain": 3.75, "swap_bytes_f32": 98304,
+                     "swap_bytes_int8": 26112, "swap_byte_reduction": 3.76,
+                     "token_match_rate": 0.97, "max_abs_logit_err": 0.01,
+                     "f32": engine_stub("kv_quant"),
+                     "int8": engine_stub("kv_quant")},
     }
     p = tmp_path / "BENCH_serve.json"
     p.write_text(json.dumps(good))
@@ -220,4 +230,4 @@ def test_validate_bench_schema_roundtrip(tmp_path):
     assert validate(repo_bench) == []
     assert set(SCHEMAS) == {"tiering", "chunked_prefill", "prefix_cache",
                             "tensor_parallel", "slo", "trace", "overlap",
-                            "fleet"}
+                            "fleet", "kv_quant"}

@@ -383,3 +383,75 @@ def test_paged_prefill_chunk_boundary_mid_page():
         exp = ppa.paged_prefill_attention_ref(q, kp, vp, table, start)
         np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                    rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# quantized paged kernels: int8 pages + per-(page, kv-head) scales
+# --------------------------------------------------------------------------
+def _quantize_setup(kp, vp):
+    from repro.serve import kvquant
+    kq, ks = kvquant.quantize_pages(kp)
+    vq, vs = kvquant.quantize_pages(vp)
+    return kq, ks, vq, vs
+
+
+def test_paged_flash_decode_quantized_matches_ref():
+    """The in-VMEM dequant path must agree with the dense oracle operating
+    on the SAME dequantized pages — only flash-vs-softmax numerics differ."""
+    from repro.kernels import paged_decode_attention as pda
+    rng = np.random.default_rng(21)
+    B, H, K, hd, pt = 3, 6, 3, 64, 8
+    q = jnp.asarray(rng.standard_normal((B, H, hd)).astype(np.float32))
+    lengths = rng.integers(1, 100, B).astype(np.int32)
+    kp, vp, table = _paged_setup(rng, B, K, hd, pt, n_pages=64,
+                                 lengths=lengths)
+    kq, ks, vq, vs = _quantize_setup(kp, vp)
+    out = pda.paged_flash_decode(q, kq, vq, table, jnp.asarray(lengths),
+                                 k_scale=ks, v_scale=vs)
+    exp = pda.paged_decode_attention_ref(q, kq, vq, table,
+                                         jnp.asarray(lengths),
+                                         k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-3,
+                               atol=2e-3)
+    # and the quantized result tracks the full-precision one within the
+    # int8 error budget (absmax/127 per element on K and V)
+    full = pda.paged_flash_decode(q, kp, vp, table, jnp.asarray(lengths))
+    assert float(jnp.max(jnp.abs(out - full))) < 0.15
+
+
+def test_paged_flash_prefill_quantized_matches_ref():
+    from repro.kernels import paged_prefill_attention as ppa
+    rng = np.random.default_rng(22)
+    K, H, hd, pt, C, start = 2, 4, 32, 8, 5, 11
+    kp, vp, table = _prefill_setup(rng, K, hd, pt, n_pages=24, S=start + C,
+                                   max_pages=6)
+    kq, ks, vq, vs = _quantize_setup(kp, vp)
+    q = jnp.asarray(rng.standard_normal((C, H, hd)).astype(np.float32))
+    out = ppa.paged_flash_prefill(q, kq, vq, table,
+                                  jnp.asarray(start, jnp.int32),
+                                  k_scale=ks, v_scale=vs)
+    exp = ppa.paged_prefill_attention_ref(q, kq, vq, table, start,
+                                          k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-3,
+                               atol=2e-3)
+    full = ppa.paged_flash_prefill(q, kp, vp, table,
+                                   jnp.asarray(start, jnp.int32))
+    assert float(jnp.max(jnp.abs(out - full))) < 0.15
+
+
+def test_quantized_kernels_require_scale_pairs():
+    from repro.kernels import paged_decode_attention as pda
+    from repro.kernels import paged_prefill_attention as ppa
+    rng = np.random.default_rng(23)
+    B, H, K, hd, pt = 1, 2, 1, 16, 4
+    q = jnp.asarray(rng.standard_normal((B, H, hd)).astype(np.float32))
+    lengths = np.array([4], np.int32)
+    kp, vp, table = _paged_setup(rng, B, K, hd, pt, n_pages=4,
+                                 lengths=lengths)
+    ks = jnp.ones((4, K), jnp.float32)
+    with pytest.raises(ValueError):
+        pda.paged_flash_decode(q, kp, vp, table, jnp.asarray(lengths),
+                               k_scale=ks)
+    with pytest.raises(ValueError):
+        ppa.paged_flash_prefill(q[0], kp, vp, table[0], jnp.asarray(0),
+                                v_scale=ks)

@@ -496,3 +496,197 @@ def test_tiered_swap_midprefill_trims_to_valid_prefix():
     pool.release(new_slot)
     assert pool.hero.levels[3].in_use() == 0
     assert pool.alloc.free_pages == pool.alloc.n_pages
+
+
+# --------------------------------------------------------------------------
+# quantized KV pages (serve/kvquant.py): int8 pools with per-page scales
+# --------------------------------------------------------------------------
+def _qpool(n_pages=8, page_tokens=4, max_batch=2, max_seq=32):
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    return kvcache.PagedCachePool(cfg, max_batch=max_batch, max_seq=max_seq,
+                                  n_pages=n_pages, page_tokens=page_tokens,
+                                  kv_dtype="int8")
+
+
+def _rand_caches(cfg, S_p, seed):
+    from repro.models import transformer
+    caches = transformer.init_caches(cfg, 1, S_p)
+    rng = np.random.default_rng(seed)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape), a.dtype), caches)
+
+
+def _leaf_names(pool):
+    return ("k", "v", "k_scale", "v_scale") if pool.quantized else ("k", "v")
+
+
+def test_quantized_page_nbytes_shrinks_footprint():
+    """The whole point: int8 payload + f32 scale rows cost a fraction of the
+    compute-dtype page, and every byte gauge reports the real size."""
+    q, f = _qpool(), _pool(n_pages=8, page_tokens=4)
+    assert q.page_nbytes() < f.page_nbytes()
+    # int8 halves the bf16 payload; the scale rows are hd·pt/1 smaller
+    assert q.page_nbytes() < f.page_nbytes() * 0.6
+    assert q.footprint_bytes() == q.alloc.n_pages * q.page_nbytes()
+    q.admit(seq_id=0, prompt_len=6, max_new=0)              # 2 pages
+    assert q.used_bytes() == 2 * q.page_nbytes()
+    # compute pools keep the historical basis: real bytes == allocator bytes
+    assert f.page_nbytes() == f.alloc.page_bytes
+
+
+def test_quantized_host_and_jit_writes_bit_identical():
+    """Satellite regression: the host fallback write (write_prefill, the old
+    silent ``.astype`` site) and the jitted chunk scatter must produce
+    bit-identical int8 pool bytes AND scale rows — both reduce through the
+    shared kvquant helpers."""
+    from repro.serve import kvquant, paged_step
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    pt = 4
+    L = 8                                                   # 2 full pages
+    A, B = _qpool(page_tokens=pt), _qpool(page_tokens=pt)
+    sa = A.admit(seq_id=0, prompt_len=L, max_new=0)
+    sb = B.admit(seq_id=0, prompt_len=L, max_new=0)
+    caches = _rand_caches(cfg, A.padded_len(L), seed=11)
+    A.write_prefill(sa, caches, L)                          # host path
+    tbl = jnp.asarray(B.page_table_row(sb), jnp.int32)
+    scatter = jax.jit(paged_step.scatter_chunk_q,
+                      static_argnames="page_tokens")        # jitted path
+    new_pages = []
+    for gi, per_pos in enumerate(B.pages):
+        per = []
+        for pi, kv in enumerate(per_pos):
+            upd = dict(kv)
+            for name in ("k", "v"):
+                pool_leaf = kv[name]
+                scale_leaf = kv[kvquant.SCALE_OF[name]]
+                dense = caches[gi][pi][name]                # [count,1,K,S,hd]
+                for u in range(dense.shape[0]):
+                    rows = jnp.transpose(dense[u, 0, :, :L], (1, 0, 2))
+                    p, s = scatter(pool_leaf[u], scale_leaf[u], rows, tbl,
+                                   jnp.int32(0), page_tokens=pt)
+                    pool_leaf = pool_leaf.at[u].set(p)
+                    scale_leaf = scale_leaf.at[u].set(s)
+                upd[name] = pool_leaf
+                upd[kvquant.SCALE_OF[name]] = scale_leaf
+            per.append(upd)
+        new_pages.append(tuple(per))
+    B.pages = new_pages
+    for gi in range(len(cfg.groups)):
+        for pi in range(len(cfg.groups[gi][0])):
+            for name in _leaf_names(A):
+                np.testing.assert_array_equal(
+                    np.asarray(A.pages[gi][pi][name]),
+                    np.asarray(B.pages[gi][pi][name]),
+                    err_msg=f"leaf {name} diverged between host and jit")
+
+
+def test_quantized_incremental_rewrite_is_bitexact_noop():
+    """Monotone-max invariant: re-scattering rows that do not widen a page's
+    scale must leave the already-written int8 content bit-identical (ratio
+    exactly 1.0), so repeated chunk writes never drift."""
+    from repro.serve import paged_step
+    rng = np.random.default_rng(2)
+    P, K, pt, hd = 4, 2, 4, 8
+    pool = jnp.zeros((P, K, pt, hd), jnp.int8)
+    scale = jnp.zeros((P, K), jnp.float32)
+    tbl = jnp.asarray([2, 0, -1], jnp.int32)
+    rows = jnp.asarray(rng.standard_normal((2 * pt, K, hd)), jnp.float32)
+    p1, s1 = paged_step.scatter_chunk_q(pool, scale, rows, tbl,
+                                        jnp.int32(0), pt)
+    # second write of the SAME rows: scales unchanged, content unchanged
+    p2, s2 = paged_step.scatter_chunk_q(p1, s1, rows, tbl, jnp.int32(0), pt)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    # untouched pages (ids 1, 3) were never read-modify-written
+    assert (np.asarray(p2[1]) == 0).all() and (np.asarray(p2[3]) == 0).all()
+    assert (np.asarray(s2[1]) == 0).all() and (np.asarray(s2[3]) == 0).all()
+
+
+def test_quantized_page_recycling_resets_scales():
+    """A freed page keeps its last scale; reallocation must zero it or the
+    monotone-max update would lock the new owner to the old owner's range."""
+    pool = _qpool(page_tokens=4)
+    slot = pool.admit(seq_id=0, prompt_len=8, max_new=0)
+    caches = _rand_caches(pool.cfg, pool.padded_len(8), seed=3)
+    # huge amplitude: the stale scale would dwarf any successor's values
+    caches = jax.tree_util.tree_map(lambda a: a * 1000.0, caches)
+    pool.write_prefill(slot, caches, 8)
+    used = list(pool.alloc._seq_pages[0])
+    leaf = pool.pages[0][0]
+    assert (np.asarray(leaf["k_scale"][:, used]) > 0).all()
+    pool.release(slot)
+    slot2 = pool.admit(seq_id=1, prompt_len=8, max_new=0)
+    reused = list(pool.alloc._seq_pages[1])
+    assert set(reused) & set(used), "allocator should recycle freed pages"
+    leaf = pool.pages[0][0]
+    for name in ("k_scale", "v_scale"):
+        assert (np.asarray(leaf[name][:, reused]) == 0).all(), \
+            "stale scales must be zeroed on (re-)allocation"
+    pool.release(slot2)
+
+
+def test_quantized_tiered_swap_roundtrip_bitexact():
+    """Swap-out → swap-in of a quantized sequence must restore int8 payload
+    AND scale rows bit-exactly, and the byte counters must reflect the real
+    (quantized) page size — ~4x less traffic than an f32 pool would move."""
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    pool = TieredCachePool(cfg, max_batch=3, max_seq=16, n_pages=8,
+                           page_tokens=4, host_budget_bytes=1 << 16,
+                           kv_dtype="int8")
+    L = 10                                                  # 3 pages
+    slot = pool.admit(seq_id=0, prompt_len=L, max_new=0)
+    caches = _rand_caches(cfg, pool.padded_len(L), seed=5)
+    pool.write_prefill(slot, caches, L)
+    names = _leaf_names(pool.hot)
+    own = pool.alloc._seq_pages[0]
+    before = [[{n: np.asarray(kv[n][:, own]) for n in names}
+               for kv in per_pos] for per_pos in pool.pages]
+    pool.swap_out(slot)
+    assert pool.swap_out_bytes == 3 * pool.hot.page_nbytes()
+    # the quantized page is a fraction of the compute-dtype page the old
+    # accounting would have charged
+    assert pool.swap_out_bytes < 3 * pool.alloc.page_bytes
+    new_slot = pool.swap_in(0)
+    own = pool.alloc._seq_pages[0]
+    after = [[{n: np.asarray(kv[n][:, own]) for n in names}
+              for kv in per_pos] for per_pos in pool.pages]
+    for b_row, a_row in zip(before, after):
+        for b_ent, a_ent in zip(b_row, a_row):
+            for n in names:
+                np.testing.assert_array_equal(b_ent[n], a_ent[n])
+    pool.release(new_slot)
+    assert pool.hero.levels[3].in_use() == 0
+    assert pool.alloc.free_pages == pool.alloc.n_pages
+
+
+def test_quantized_tiered_random_ops_never_leak():
+    """The tier-accounting property harness over an int8 pool: nbytes
+    accounting (now page_nbytes-based) must close at drain exactly as the
+    compute pool's does."""
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    rng = np.random.default_rng(13)
+    for _ in range(4):
+        pool = TieredCachePool(cfg, max_batch=3, max_seq=16, n_pages=8,
+                               page_tokens=4, host_budget_bytes=8192,
+                               kv_dtype="int8")
+        ops = [tuple(int(x) for x in rng.integers(0, 32, 3))
+               for _ in range(12)]
+        _apply_tier_ops(pool, ops)
+
+
+def test_kv_dtype_validation_and_compute_identity():
+    """kv_dtype must be validated at construction, and kv_dtype='compute'
+    must build byte-identical state to a pool that never heard of it."""
+    cfg = configs.get_smoke_config("qwen2-0.5b")
+    with pytest.raises(ValueError):
+        kvcache.PagedCachePool(cfg, max_batch=1, max_seq=16, n_pages=4,
+                               kv_dtype="fp4")
+    plain = _pool(n_pages=4, page_tokens=4, max_batch=1, max_seq=16)
+    via = kvcache.PagedCachePool(cfg, max_batch=1, max_seq=16, n_pages=4,
+                                 page_tokens=4, kv_dtype="compute")
+    assert not via.quantized
+    assert jax.tree_util.tree_structure(plain.pages) == \
+        jax.tree_util.tree_structure(via.pages)
+    for a, b in zip(jax.tree_util.tree_leaves(plain.pages),
+                    jax.tree_util.tree_leaves(via.pages)):
+        assert a.dtype == b.dtype and a.shape == b.shape

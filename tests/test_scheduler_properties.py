@@ -368,6 +368,41 @@ def test_chunked_scheduler_single_token_budget_slices():
     _run_case(sched, token_budget=3, n_slots=2, n_pages=8)
 
 
+# -- quantized KV pages: determinism + no-leak over full engine stacks -------
+@pytest.mark.parametrize("tiered,prefix", [(False, False), (True, False),
+                                           (True, True)],
+                         ids=["quant", "quant_tiered", "quant_tiered_prefix"])
+def test_quantized_stack_deterministic_and_leak_free(tiered, prefix):
+    """int8 KV pages under the chunked scheduler (flat, tiered, and
+    tiered+prefix): seeded twin runs must produce bit-identical greedy
+    streams (the monotone-max scale updates and requantization are
+    deterministic), every request must complete, and the drain must close
+    every scheduler/allocator invariant — reservations, refcounts, audit."""
+    n_pages = 12
+    raw = [(0, 9, 3), (1, 17, 2), (2, 5, 4), (4, 12, 2), (6, 7, 3)]
+    schedule = _schedule_from(raw, 31, n_pages, 8, 64)
+    cache = CacheConfig(
+        paged=True, tiered=tiered, prefix=prefix,
+        prefix_pages=4 if prefix else None,
+        page_tokens=8, n_pages=n_pages,
+        host_budget_bytes=(1 << 16) if tiered else None,
+        kv_dtype="int8")
+
+    def run():
+        eng = Engine(_CFG, _params(), config=EngineConfig(
+            n_slots=2, max_seq=64, chunked=True, token_budget=16,
+            cache=cache))
+        out = {r.seq_id: list(r.tokens_out) for r in _drive(eng, schedule)}
+        return eng, out
+
+    e1, o1 = run()
+    _, o2 = run()
+    assert set(o1) == set(range(len(schedule))), \
+        "every request must complete on the quantized stack"
+    assert o1 == o2, "quantized streams must be run-to-run deterministic"
+    _check_scheduler_invariants(e1, schedule)
+
+
 # -- tensor parallelism: tp=N streams must be bit-identical to tp=1 ----------
 _N_DEV = len(jax.devices())
 

@@ -48,6 +48,7 @@ REQUIRED_MODULES = (
     "src/repro/serve/trace.py",
     "src/repro/serve/replica.py",
     "src/repro/serve/router.py",
+    "src/repro/serve/kvquant.py",
 )
 
 
